@@ -1,0 +1,148 @@
+"""Framework-level benchmarks (wall time on the local backend).
+
+* train-step wall time per ReCXL variant on a reduced config over the
+  local 8-device mesh -- the framework twin of Fig. 10 (CPU timings are
+  not TPU projections; the roofline table covers the production mesh).
+* Logging-Unit op latencies and log-compressor throughput.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro
+from repro.config import (
+    MeshConfig,
+    ReplicationConfig,
+    RunConfig,
+    ShapeConfig,
+    TrainConfig,
+)
+from repro.core import logging_unit as lu
+from repro.distributed.context import make_context, mesh_context
+from repro.distributed.sharding import named_shardings, param_specs
+from repro.kernels.log_compress import compress, decompress
+from repro.models import build_model
+from repro.models.model_zoo import make_batch
+from repro.training.steps import init_train_state, make_train_step
+from repro.core.replication import ReplicationEngine
+
+
+def _local_mesh():
+    n = jax.device_count()
+    mp = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _time(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def bench_variant_step_time() -> List[Dict]:
+    """Framework Fig. 10 analogue: jitted train-step wall time per
+    variant, reduced qwen3, local mesh."""
+    mesh = _local_mesh()
+    ctx = make_context(mesh)
+    cfg = repro.get_reduced_config("qwen3-0.6b")
+    shape = ShapeConfig("bench", seq_len=64, global_batch=8, kind="train")
+    rows = []
+    base_us = None
+    n_data = mesh.shape["data"]
+    variants = ("none", "baseline", "parallel", "proactive")
+    if n_data < 2:
+        # replication needs peers; benches run on the default device
+        # count by design (the dry-run owns the 512-device override)
+        return [{"name": f"framework/train_step/{v}", "us_per_call": 0.0,
+                 "derived": ("skipped: needs >=2 data ranks; rerun with "
+                             "XLA_FLAGS=--xla_force_host_platform_"
+                             "device_count=8")} for v in variants[1:]]
+    for variant in variants:
+        rep = ReplicationConfig(
+            variant=variant, n_replicas=min(2, n_data - 1), n_buckets=4,
+            log_capacity=2, log_dtype="bfloat16")
+        run = RunConfig(model=cfg, shape=shape,
+                        mesh=MeshConfig(tuple(mesh.devices.shape),
+                                        ("data", "model")),
+                        replication=rep, train=TrainConfig())
+        model = build_model(cfg)
+        with mesh_context(ctx):
+            key = jax.random.PRNGKey(0)
+            p_struct = jax.eval_shape(model.init, key)
+            specs = param_specs(p_struct, cfg, ctx)
+            engine = (ReplicationEngine(rep, ctx, specs, p_struct)
+                      if rep.is_replicating else None)
+            state = init_train_state(run, model, key, engine)
+            state = state._replace(params=jax.tree.map(
+                jax.device_put, state.params,
+                named_shardings(state.params, cfg, ctx)))
+            step = jax.jit(make_train_step(run, model, engine))
+            batch = make_batch(cfg, shape)
+            batch["labels"] = batch["tokens"]
+            dt, (state2, _) = _time(lambda s, b: step(s, b), state, batch)
+        us = dt * 1e6
+        if variant == "none":
+            base_us = us
+        rows.append({"name": f"framework/train_step/{variant}",
+                     "us_per_call": round(us, 1),
+                     "derived": round(us / base_us, 3)})
+    return rows
+
+
+def bench_logging_unit_ops() -> List[Dict]:
+    """Latency of the jitted Logging-Unit operations."""
+    state = lu.init_state(256, 1024, 16, 8)
+    repl = jax.jit(lu.receive_repl)
+    val = jax.jit(lu.receive_val)
+    drain = jax.jit(lambda s: lu.drain(s, 8))
+    v = jnp.ones((8,), jnp.float32)
+    dt_r, state = _time(lambda s: repl(s, 1, 42, v), state, iters=20)
+    state = val(state, 1, 42, 0)
+    dt_v, _ = _time(lambda s: val(s, 1, 43, 1), state, iters=20)
+    dt_d, _ = _time(drain, state, iters=20)
+    return [
+        {"name": "framework/log_unit/receive_repl",
+         "us_per_call": round(dt_r * 1e6, 1), "derived": ""},
+        {"name": "framework/log_unit/receive_val",
+         "us_per_call": round(dt_v * 1e6, 1), "derived": ""},
+        {"name": "framework/log_unit/drain8",
+         "us_per_call": round(dt_d * 1e6, 1), "derived": ""},
+    ]
+
+
+def bench_log_compressor() -> List[Dict]:
+    """Throughput + achieved factor of the dump compressor (paper: gzip-9
+    5.8x; ours is fixed-rate -- DESIGN.md S7)."""
+    rng = np.random.default_rng(0)
+    n = 1 << 20
+    vals = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    base = vals + jnp.asarray(rng.standard_normal(n) * 0.01, jnp.float32)
+    rows = []
+    for bits in (8, 4):
+        dt, (codes, scales) = _time(
+            lambda v, b: compress(v, b, bits=bits), vals, base)
+        in_bytes = n * 4
+        out_bytes = codes.size * 1 + scales.size * 4
+        rows.append({
+            "name": f"framework/log_compress/int{bits}",
+            "us_per_call": round(dt * 1e6, 1),
+            "derived": (f"factor={in_bytes/out_bytes:.2f};"
+                        f"GBps={in_bytes/dt/1e9:.2f};paper_gzip=5.8"),
+        })
+    return rows
+
+
+ALL_FRAMEWORK_BENCHES = [bench_variant_step_time, bench_logging_unit_ops,
+                         bench_log_compressor]

@@ -1,0 +1,96 @@
+"""Perf hillclimb driver (assignment SS Perf).
+
+Runs tagged dry-run variants of the three chosen cells and prints the
+roofline terms so each hypothesis -> change -> measure cycle is one
+invocation. Tagged artifacts land next to the baselines in
+benchmarks/artifacts/ and EXPERIMENTS.md SSPerf records the log.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell train --iter sp
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+# (cell-name) -> (arch, shape, iteration-name -> overrides)
+ITERATIONS = {
+    "train": ("deepseek-67b", "train_4k", {
+        "baseline": {},
+        "sp": {"act_policy": "seq_model"},
+        "mp4": {"mesh_shape": (64, 4)},
+        "fsdp": {"mesh_shape": (256, 1)},
+        "fsdp_flash": {"mesh_shape": (256, 1), "flash_accounting": True},
+        "fsdp_flash_sel": {"mesh_shape": (256, 1), "flash_accounting": True,
+                           "train_overrides": {"remat": "selective"}},
+        "fsdp_flash_nobucket": {"mesh_shape": (256, 1),
+                                "flash_accounting": True,
+                                "rep_overrides": {"n_buckets": 1,
+                                                  "coalescing": True}},
+        "final": {"mesh_shape": (256, 1), "flash_accounting": True,
+                  "blockwise_threshold": 2048,
+                  "train_overrides": {"remat": "selective"}},
+    }),
+    "decode": ("grok-1-314b", "decode_32k", {
+        "baseline": {},
+        "mp64": {"mesh_shape": (4, 64)},
+        "mp256": {"mesh_shape": (1, 256)},
+        "mp64_ep": {"mesh_shape": (32, 8)},
+    }),
+    "prefill": ("deepseek-67b", "prefill_32k", {
+        "baseline": {},
+        "flash": {"flash_accounting": True},
+        "flash_mp8": {"flash_accounting": True, "mesh_shape": (32, 8)},
+        "flash_mp4": {"flash_accounting": True, "mesh_shape": (64, 4)},
+        "flash_fsdp": {"flash_accounting": True, "mesh_shape": (256, 1)},
+        "final": {"flash_accounting": True, "mesh_shape": (32, 8)},
+    }),
+}
+
+
+def terms(r):
+    n = r["n_devices"]
+    t_c = r["cost"]["flops_global"] / n / PEAK_FLOPS
+    t_m = r["cost"]["bytes_global"] / n / HBM_BW
+    t_x = r["collectives"].get("total_bytes_bf16adj",
+                               r["collectives"]["total_bytes"]) / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda p: p[1])
+    return t_c, t_m, t_x, dom[0]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(ITERATIONS))
+    ap.add_argument("--iter", required=True)
+    args = ap.parse_args()
+    arch, shape, iters = ITERATIONS[args.cell]
+    if args.iter == "all":
+        names = list(iters)
+    else:
+        names = [args.iter]
+    for name in names:
+        ov = dict(iters[name])
+        tag = "" if name == "baseline" else name
+        r = run_cell(arch, shape, multi_pod=False, tag=tag, **ov)
+        if r["status"] != "ok":
+            print(f"[{name}] ERROR: {r.get('error')}")
+            continue
+        t_c, t_m, t_x, dom = terms(r)
+        print(f"[{name:18s}] compute={t_c:8.3f}s memory={t_m:8.3f}s "
+              f"collective={t_x:8.3f}s dominant={dom:10s} "
+              f"(compile {r['compile_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from the dry-run
+artifacts (roofline table + dry-run summary).
+
+    PYTHONPATH=src python -m benchmarks.make_tables
+"""
+
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import full_table, markdown_table  # noqa: E402
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def dryrun_summary() -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "dryrun_*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag"):
+            continue
+        if r["status"] == "ok":
+            mem = (r["memory"]["temp_size_bytes"] or 0) / 1e9
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{r['compile_s']}s | {mem:.2f} GB | "
+                f"{r['cost']['flops_global'] / r['n_devices']:.2e} | "
+                f"{r['collectives'].get('total_bytes_bf16adj', 0):.2e} |")
+        elif r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skip-by-design | -- | -- | -- | -- |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR | -- | -- | -- | -- |")
+    hdr = ("### Dry-run summary (all cells, both meshes)\n\n"
+           "| arch | shape | mesh | status | compile | temp/dev | "
+           "FLOPs/dev | coll B/dev (bf16adj) |\n"
+           "|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def main() -> None:
+    with open(EXP) as f:
+        doc = f.read()
+    table = markdown_table(mesh="16x16")
+    # replace marker..next-heading with marker + fresh table
+    doc = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n## )",
+        "<!-- ROOFLINE_TABLE -->\n\n" + table + "\n",
+        doc, flags=re.S)
+    # dry-run summary: everything after its marker is generated
+    doc = doc.split("<!-- DRYRUN_SUMMARY -->")[0] \
+        + "<!-- DRYRUN_SUMMARY -->\n\n" + dryrun_summary() + "\n"
+    with open(EXP, "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Roofline analysis over the dry-run artifacts (assignment SS Roofline).
+
+For each (arch x shape x mesh) JSON record produced by
+``repro.launch.dryrun``, derive the three per-step roofline terms
+(seconds):
+
+    compute    = FLOPs_per_device / PEAK_FLOPS          (197 TF bf16)
+    memory     = HBM_bytes_per_device / HBM_BW          (819 GB/s)
+    collective = link_bytes_per_device / ICI_BW         (~50 GB/s/link)
+
+plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE), the useful-compute
+ratio, the dominant term, and the roofline fraction
+(dominant-term-bound / achievable-step-time under perfect overlap).
+
+FLOPs/bytes come from the trip-count-corrected jaxpr walk and collective
+bytes from the while-aware HLO parse (launch/costing.py) -- XLA's raw
+cost_analysis undercounts scan bodies and is recorded for reference only.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def load_records(mesh: Optional[str] = None,
+                 tag: str = "") -> List[Dict[str, Any]]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "dryrun_*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        out.append(r)
+    return out
+
+
+def roofline_terms(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    """The three terms + diagnostics for one dry-run record."""
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_devices"]
+    flops_dev = rec["cost"]["flops_global"] / n
+    bytes_dev = rec["cost"]["bytes_global"] / n
+    # bf16-adjusted when available (CPU backend promotes bf16 collectives
+    # to f32; the TPU target runs them native -- launch/costing.py)
+    coll_dev = rec["collectives"].get("total_bytes_bf16adj",
+                                      rec["collectives"]["total_bytes"])
+    repl_dev = rec["collectives"]["replication_bytes"]
+
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    tokens = rec["tokens"]
+    n_active = rec["active_params"]
+    mult = 3 if rec["shape"] == "train_4k" else 1   # fwd+bwd
+    model_flops = 2 * mult * n_active * tokens      # 6ND train / 2ND serve
+    useful = model_flops / max(rec["cost"]["flops_global"], 1.0)
+
+    # perfect-overlap achievable step time vs. dominant-term bound
+    t_step = max(terms.values())
+    frac = terms[dominant] / t_step if t_step else 0.0
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "variant": rec.get("variant"), "tag": rec.get("tag", ""),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "t_replication_s": repl_dev / ICI_BW,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "step_bound_s": t_step,
+        # MFU-at-bound: useful model FLOPs over the chips' peak during the
+        # bound step time (the score if the dominant term is fully busy)
+        "mfu_at_bound": model_flops / (n * PEAK_FLOPS * t_step)
+        if t_step else 0.0,
+        "hbm_gb_per_device": (rec["memory"]["temp_size_bytes"] or 0) / 1e9,
+    }
+
+
+def full_table(mesh: Optional[str] = None, tag: str = "") -> List[Dict[str, Any]]:
+    rows = []
+    for rec in load_records(mesh, tag):
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "dominant": "SKIPPED",
+                         "reason": rec["reason"][:60]})
+            continue
+        t = roofline_terms(rec)
+        if t:
+            rows.append(t)
+    return rows
+
+
+def bench_roofline() -> List[Dict[str, Any]]:
+    """CSV rows for run.py: one per single-pod cell (the roofline table
+    is single-pod per the assignment; multi-pod proves the pod axis)."""
+    rows = []
+    for t in full_table(mesh="16x16"):
+        if t.get("dominant") == "SKIPPED":
+            rows.append({"name": f"roofline/{t['arch']}/{t['shape']}",
+                         "us_per_call": 0.0, "derived": "skipped-by-design"})
+            continue
+        rows.append({
+            "name": f"roofline/{t['arch']}/{t['shape']}",
+            "us_per_call": t["step_bound_s"] * 1e6,
+            "derived": (f"dom={t['dominant']};"
+                        f"comp={t['t_compute_s']:.4f}s;"
+                        f"mem={t['t_memory_s']:.4f}s;"
+                        f"coll={t['t_collective_s']:.4f}s;"
+                        f"useful={t['useful_flops_ratio']:.3f};"
+                        f"mfu_bound={t['mfu_at_bound']:.3f}"),
+        })
+    return rows
+
+
+def markdown_table(mesh: str = "16x16", tag: str = "") -> str:
+    rows = full_table(mesh, tag)
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | 6ND/HLO | MFU@bound |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for t in rows:
+        if t.get("dominant") == "SKIPPED":
+            lines.append(f"| {t['arch']} | {t['shape']} | -- | -- | -- | "
+                         f"skip ({t['reason'][:40]}...) | -- | -- |")
+            continue
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {t['t_compute_s']:.4f} | "
+            f"{t['t_memory_s']:.4f} | {t['t_collective_s']:.4f} | "
+            f"**{t['dominant']}** | {t['useful_flops_ratio']:.3f} | "
+            f"{t['mfu_at_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

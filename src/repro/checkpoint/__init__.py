@@ -1,0 +1,3 @@
+"""Checkpoint tier -- the Memory-Node (MN) analogue."""
+
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,165 @@
+"""The Memory-Node (MN) tier: durable checkpoints + periodic log dumps.
+
+Paper mapping (DESIGN.md S2): the MNs are the fault-safe tier the Logging
+Units dump compressed logs into every 2.5 ms; here the MN tier is a
+directory of npz shards written by a background thread (async, off the
+step's critical path), plus the dumped log entries used by recovery when
+the in-HBM replica logs do not cover a bucket.
+
+Layout (one manifest per committed checkpoint, written atomically last --
+a torn dump is detected by a missing/incomplete manifest):
+
+    <dir>/step_000123/
+        manifest.json            # step, leaf names/shapes, directory blob
+        state.npz                # flat state leaves
+        logdump_b<k>.npz         # per-bucket compressed log dump (optional)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree: Any) -> List[Tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        # np.savez cannot serialize ml_dtypes (bfloat16 & friends): store
+        # them bit-exactly as a uint16/uint8 view; the manifest keeps the
+        # true dtype and restore() views back.
+        if arr.dtype.kind == "V" or arr.dtype.name in (
+                "bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2
+                           else np.uint8)
+        out.append((name, arr))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._last_saved_step = -1
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    # Save (async by default -- the MN dump is off the critical path)
+    # ------------------------------------------------------------------
+
+    def save(self, step: int, state: Any, *, extra: Optional[Dict[str, Any]] = None,
+             log_dump: Optional[Dict[int, np.ndarray]] = None,
+             blocking: bool = False) -> None:
+        # snapshot to host BEFORE going async (donated buffers may be
+        # overwritten by the next step otherwise)
+        leaves = _flatten_with_names(state)
+        extra = dict(extra or {})
+
+        def write():
+            path = os.path.join(self.dir, f"step_{step:09d}")
+            tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+            try:
+                np.savez(os.path.join(tmp, "state.npz"),
+                         **{n: a for n, a in leaves})
+                if log_dump:
+                    for b, arr in log_dump.items():
+                        np.savez(os.path.join(tmp, f"logdump_b{b}.npz"),
+                                 values=arr)
+                manifest = {
+                    "step": step,
+                    "leaves": [{"name": n, "shape": list(a.shape),
+                                "dtype": str(a.dtype)} for n, a in leaves],
+                    "extra": extra,
+                    "wall_time": time.time(),
+                }
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(path):
+                    shutil.rmtree(path, ignore_errors=True)
+                os.rename(tmp, path)
+            finally:
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp, ignore_errors=True)
+            with self._lock:
+                self._last_saved_step = max(self._last_saved_step, step)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    # Restore
+    # ------------------------------------------------------------------
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template: Any, step: Optional[int] = None
+                ) -> Tuple[Any, Dict[str, Any]]:
+        """Restore into the structure of ``template`` (shapes must match)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoints found")
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "state.npz"))
+        names = [n for n, _ in _flatten_with_names(template)]
+        leaves = [data[n] for n in names]
+        flat_t, treedef = jax.tree.flatten(template)
+
+        def cast(l: np.ndarray, t) -> np.ndarray:
+            tdt = np.dtype(t.dtype)
+            if l.dtype != tdt and l.dtype.kind == "u" and \
+                    l.dtype.itemsize == tdt.itemsize:
+                l = l.view(tdt)          # bit-exact ml_dtypes round trip
+            return np.asarray(l, dtype=tdt).reshape(t.shape)
+
+        restored = jax.tree.unflatten(
+            treedef, [cast(l, t) for l, t in zip(leaves, flat_t)])
+        return restored, manifest.get("extra", {})
+
+    def load_log_dump(self, step: int, bucket: int) -> Optional[np.ndarray]:
+        p = os.path.join(self.dir, f"step_{step:09d}", f"logdump_b{bucket}.npz")
+        if not os.path.exists(p):
+            return None
+        return np.load(p)["values"]
+
+    # ------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)

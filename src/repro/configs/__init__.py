@@ -1,0 +1,33 @@
+"""Assigned-architecture configs (self-registering).
+
+Each module defines the exact published config plus a reduced same-family
+config used by CPU smoke tests. Importing this package registers all of
+them with :mod:`repro.config`.
+"""
+
+from repro.configs import (  # noqa: F401
+    internvl2_26b,
+    qwen3_0_6b,
+    deepseek_67b,
+    stablelm_12b,
+    starcoder2_15b,
+    mamba2_2_7b,
+    grok1_314b,
+    moonshot_v1_16b_a3b,
+    whisper_medium,
+    hymba_1_5b,
+    recxl_paper,
+)
+
+ASSIGNED_ARCHS = (
+    "internvl2-26b",
+    "qwen3-0.6b",
+    "deepseek-67b",
+    "stablelm-12b",
+    "starcoder2-15b",
+    "mamba2-2.7b",
+    "grok-1-314b",
+    "moonshot-v1-16b-a3b",
+    "whisper-medium",
+    "hymba-1.5b",
+)

@@ -1,0 +1,107 @@
+"""The paper's evaluated system (Table II) -- parameters for the
+trace-driven protocol simulator that reproduces the paper's own
+evaluation (Figures 2, 10-18).
+
+This is NOT a neural architecture; it is the CXL-DSM cluster config. The
+simulator consumes it directly.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    """Paper Table II."""
+
+    n_cns: int = 16
+    n_mns: int = 16
+    cores_per_cn: int = 4
+    cpu_freq_ghz: float = 2.4
+    logging_unit_freq_mhz: float = 500.0
+    load_queue: int = 128
+    store_buffer: int = 72           # SB entries (the paper's key resource)
+    l1_lat_cycles: int = 5
+    l2_lat_cycles: int = 13
+    l3_lat_cycles: int = 36
+    cache_line_bytes: int = 64
+    dram_lat_ns: float = 45.0
+    pmem_lat_ns: float = 500.0       # WT persist target latency
+    cxl_link_bw_gbps: float = 160.0  # GB/s [Micron '24]
+    cxl_rtt_ns: float = 200.0        # network round trip [Pond]
+    sram_log_bytes: int = 4096
+    sram_log_lat_ns: float = 4.0
+    dram_log_bytes: int = 18 * 2**20
+    dump_period_ms: float = 2.5
+    n_replicas: int = 3
+    gzip_factor: float = 5.8         # measured by the paper
+
+    @property
+    def cycle_ns(self) -> float:
+        return 1.0 / self.cpu_freq_ghz
+
+
+@dataclass(frozen=True)
+class WorkloadProfile:
+    """Per-application trace statistics used to synthesize store/compute
+    traces for the protocol simulator.
+
+    The paper runs PARSEC/SPLASH-2/YCSB through Pin+SST; we parameterize
+    each application class by its store intensity and locality so the
+    simulator reproduces the published relative behaviour (DESIGN.md S2).
+
+    * remote_store_rate  -- remote (CXL) stores per 1000 instructions.
+    * coalesce_rate      -- fraction of remote stores coalescable with the
+                            previous SB entry (same line, no intervening
+                            other-line store).
+    * burstiness         -- fraction of stores inside store bursts (flush
+                            phases); governs how much SB queueing there is
+                            to hide replication behind.
+    * burst_len          -- mean burst run length in stores; runs longer
+                            than the 72-entry SB are what back-pressure
+                            the core under ReCXL-proactive.
+    * remote_read_rate   -- remote loads per 1000 instructions (bandwidth
+                            term; loads are unaffected by ReCXL).
+    * working_lines      -- distinct remote cache lines touched (log/dir
+                            footprint; drives Figs 13 & 15).
+    """
+
+    name: str
+    remote_store_rate: float
+    coalesce_rate: float
+    burstiness: float
+    burst_len: float
+    remote_read_rate: float
+    working_lines: int
+
+
+# Calibrated so the simulator reproduces the paper's Fig. 2/10 orderings
+# and magnitudes (see benchmarks/bench_protocols.py and
+# tests/test_simulator.py for the acceptance bands). raytrace /
+# fluidanimate get short bursts => high REPL-at-SB-head fraction
+# (Fig. 11); the oceans / ycsb get long flush bursts (proactive's cost).
+WORKLOADS: Dict[str, WorkloadProfile] = {
+    "bodytrack":     WorkloadProfile("bodytrack",     1.1, 0.45, 0.50,  40.0,  3.5, 18_000),
+    "fluidanimate":  WorkloadProfile("fluidanimate",  2.1, 0.50, 0.15,  10.0,  5.5, 26_000),
+    "streamcluster": WorkloadProfile("streamcluster", 0.33, 0.60, 0.30,  20.0,  6.0, 9_000),
+    "canneal":       WorkloadProfile("canneal",       3.0, 0.20, 0.55, 120.0, 10.0, 40_000),
+    "raytrace":      WorkloadProfile("raytrace",      0.9, 0.55, 0.10,   6.0,  4.0, 12_000),
+    "barnes":        WorkloadProfile("barnes",        3.3, 0.40, 0.55, 150.0,  7.0, 30_000),
+    "ocean_ncp":     WorkloadProfile("ocean_ncp",     8.1, 0.35, 0.78, 420.0, 10.0, 55_000),
+    "ocean_cp":      WorkloadProfile("ocean_cp",      7.3, 0.35, 0.78, 420.0,  9.5, 50_000),
+    "ycsb":          WorkloadProfile("ycsb",          4.8, 0.30, 0.72, 260.0, 14.0, 100_000),
+}
+
+PAPER_CLUSTER = ClusterConfig()
+
+# Headline numbers from the paper used as validation targets.
+PAPER_CLAIMS: Dict[str, float] = {
+    "wt_slowdown_geomean": 7.6,
+    "baseline_slowdown_geomean": 2.88,
+    "parallel_gain_over_baseline": 0.03,
+    "proactive_slowdown_geomean": 1.30,
+    "gzip_factor": 5.8,
+    "nr4_vs_nr3_overhead": 0.02,
+    "scaling_4_to_16_wb": 3.1,
+    "scaling_4_to_16_recxl": 3.0,
+}

@@ -1,0 +1,18 @@
+"""ReCXL core: the paper's contribution.
+
+* :mod:`repro.core.protocol`      -- message types (Fig. 4-5, Table I).
+* :mod:`repro.core.replica_groups`-- hash-based replica selection.
+* :mod:`repro.core.logging_unit`  -- fine-grained Logging Unit (SRAM
+  staging + DRAM log, logical timestamps, in-order commit).
+* :mod:`repro.core.replication`   -- the training-framework replication
+  engine: 3 variants (baseline / parallel / proactive) as collective
+  dependency structures inside the jitted step.
+* :mod:`repro.core.directory`     -- shard directory (ownership state).
+* :mod:`repro.core.recovery`      -- CM-driven recovery (Algorithms 1-2).
+* :mod:`repro.core.failures`      -- failure detection + injection.
+* :mod:`repro.core.simulator`     -- trace-driven protocol simulator that
+  reproduces the paper's own evaluation (Figs. 2, 10-18).
+"""
+
+from repro.core.replica_groups import replica_targets, replica_sources  # noqa: F401
+from repro.core.replication import ReplicationEngine  # noqa: F401

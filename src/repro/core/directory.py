@@ -1,0 +1,143 @@
+"""Shard directory -- the framework's analogue of the CXL coherence
+directory that recovery repairs (paper SS V.C).
+
+The CXL directory tracks, per cache line, which CNs cache it and who owns
+the dirty copy. Our directory tracks, per (node, bucket) state shard:
+
+* ``owner``      -- the data-rank that owns (writes) the shard,
+* ``replicas``   -- the N_r ranks whose Logging Units hold its updates,
+* ``dump_step``  -- the last step whose version is safe in the MN tier,
+* ``commit_step``-- the last step whose replication was validated,
+* ``state``      -- OWNED / SHARED / UNOWNED (post-recovery).
+
+It is deliberately a host-side structure (numpy): the paper's directory
+lives in MN memory and is repaired by *software* handlers; keeping it off
+the device state also means its consistency survives device failures by
+construction. Benchmarks read it for the Fig. 15 analogue (owned shards
+of a crashed node).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import replica_groups
+
+
+class ShardState(enum.Enum):
+    OWNED = "owned"          # owner holds the newest (dirty) version
+    SHARED = "shared"        # replicated, clean vs. MN tier
+    UNOWNED = "unowned"      # post-recovery: memory holds newest version
+
+
+@dataclasses.dataclass
+class DirEntry:
+    owner: int
+    replicas: Tuple[int, ...]
+    state: ShardState = ShardState.OWNED
+    dump_step: int = -1          # newest version safe in MN tier
+    commit_step: int = -1        # newest validated replicated version
+
+
+class ShardDirectory:
+    """Directory over all (node, bucket) shards."""
+
+    def __init__(self, n_nodes: int, n_buckets: int, n_replicas: int):
+        self.n_nodes = n_nodes
+        self.n_buckets = n_buckets
+        self.n_replicas = n_replicas
+        self.entries: Dict[Tuple[int, int], DirEntry] = {}
+        for node in range(n_nodes):
+            for b in range(n_buckets):
+                reps = replica_groups.replica_targets(
+                    node, b, n_replicas, n_nodes)
+                self.entries[(node, b)] = DirEntry(owner=node, replicas=reps)
+
+    # ------------------------------------------------------------------
+    def entry(self, node: int, bucket: int) -> DirEntry:
+        return self.entries[(node, bucket)]
+
+    def record_commit(self, step: int) -> None:
+        for e in self.entries.values():
+            e.commit_step = step
+            e.state = ShardState.OWNED
+
+    def record_dump(self, step: int) -> None:
+        for e in self.entries.values():
+            e.dump_step = step
+
+    # ------------------------------------------------------------------
+    # Recovery queries (Algorithm 1 inputs)
+    # ------------------------------------------------------------------
+
+    def owned_by(self, node: int) -> List[Tuple[int, int]]:
+        """Shards whose dirty version lived on ``node``."""
+        return [k for k, e in self.entries.items()
+                if e.owner == node and e.state == ShardState.OWNED]
+
+    def replicated_on(self, node: int) -> List[Tuple[int, int]]:
+        """Shards whose Logging-Unit entries live on ``node``
+        (the SHARED analogue: what must be dropped when ``node`` dies)."""
+        return [k for k, e in self.entries.items() if node in e.replicas]
+
+    def replicas_of(self, node: int, bucket: int) -> Tuple[int, ...]:
+        return self.entries[(node, bucket)].replicas
+
+    # ------------------------------------------------------------------
+    # Recovery mutations (Algorithm 1 effects)
+    # ------------------------------------------------------------------
+
+    def remove_failed_replica(self, failed: int) -> int:
+        """Drop ``failed`` from every replica set (sharer-bit clearing)."""
+        n = 0
+        for e in self.entries.values():
+            if failed in e.replicas:
+                e.replicas = tuple(r for r in e.replicas if r != failed)
+                n += 1
+        return n
+
+    def reassign(self, node: int, bucket: int, new_owner: int,
+                 n_nodes: Optional[int] = None) -> None:
+        e = self.entries[(node, bucket)]
+        e.owner = new_owner
+        e.state = ShardState.UNOWNED
+        # recompute a full replica set for the new owner
+        e.replicas = replica_groups.replica_targets(
+            new_owner, bucket, self.n_replicas, n_nodes or self.n_nodes)
+
+    # ------------------------------------------------------------------
+    def stats(self, failed: int) -> Dict[str, int]:
+        """Fig. 15 analogue: shard-entry census for a crashed node."""
+        owned = len(self.owned_by(failed))
+        shared = len(self.replicated_on(failed))
+        return {"owned": owned, "shared": shared,
+                "total": len(self.entries)}
+
+    def to_json(self) -> str:
+        return json.dumps({
+            f"{k[0]}:{k[1]}": {
+                "owner": e.owner, "replicas": list(e.replicas),
+                "state": e.state.value, "dump_step": e.dump_step,
+                "commit_step": e.commit_step,
+            } for k, e in self.entries.items()
+        })
+
+    @classmethod
+    def from_json(cls, blob: str, n_nodes: int, n_buckets: int,
+                  n_replicas: int) -> "ShardDirectory":
+        d = cls(n_nodes, n_buckets, n_replicas)
+        data = json.loads(blob)
+        for key, v in data.items():
+            node, b = map(int, key.split(":"))
+            e = d.entries[(node, b)]
+            e.owner = v["owner"]
+            e.replicas = tuple(v["replicas"])
+            e.state = ShardState(v["state"])
+            e.dump_step = v["dump_step"]
+            e.commit_step = v["commit_step"]
+        return d

@@ -1,0 +1,214 @@
+"""The ReCXL Logging Unit (paper SS IV.B-C), as a jit-compatible state
+machine.
+
+Each node owns one unit:
+
+* an **SRAM Log Buffer** (small, fixed-capacity): entries are *allocated*
+  on REPL reception and *validated* on VAL reception (possibly out of
+  order -- the CXL fabric reorders messages);
+* a **DRAM log** (large, append-only): validated entries drain from SRAM
+  to DRAM strictly in per-source logical-timestamp order, so the DRAM log
+  order equals program order (SS IV.C) even under fabric reordering. The
+  timestamp is stripped on the way (paper: "As entries are pushed into the
+  DRAM log, the timestamp is stripped-out"; we keep it in a side array
+  purely for test assertions);
+* per-source ``next_ts`` counters enforcing the in-order drain.
+
+All operations are pure functions on a :class:`LogUnitState` pytree, so
+they jit, vmap (one unit per node), and property-test cleanly. Values are
+fixed-width vectors (``value_width`` words) -- word granularity when
+``value_width == 1``, row granularity for the KV-store example.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+
+
+class LogUnitState(NamedTuple):
+    # --- SRAM Log Buffer ---
+    sram_src: jax.Array        # (S,) int32 source node, -1 = free
+    sram_addr: jax.Array       # (S,) int32 word/row address
+    sram_val: jax.Array        # (S, W) float32 logged values
+    sram_ts: jax.Array         # (S,) int32 logical TS (-1 until VAL)
+    sram_valid: jax.Array      # (S,) bool
+    sram_seq: jax.Array        # (S,) int32 allocation order (VAL matching)
+    alloc_seq: jax.Array       # () int32 global allocation counter
+    # --- DRAM log (append-only ring) ---
+    dram_src: jax.Array        # (D,) int32
+    dram_addr: jax.Array       # (D,) int32
+    dram_val: jax.Array        # (D, W) float32
+    dram_ts: jax.Array         # (D,) int32 (kept for assertions only)
+    dram_ptr: jax.Array        # () int32 append cursor
+    # --- ordering ---
+    next_ts: jax.Array         # (n_sources,) int32 next TS to drain per src
+    dropped: jax.Array         # () int32 count of REPLs dropped (SRAM full)
+
+
+def init_state(sram_entries: int, dram_entries: int, n_sources: int,
+               value_width: int = 1) -> LogUnitState:
+    return LogUnitState(
+        sram_src=jnp.full((sram_entries,), EMPTY),
+        sram_addr=jnp.full((sram_entries,), EMPTY),
+        sram_val=jnp.zeros((sram_entries, value_width), jnp.float32),
+        sram_ts=jnp.full((sram_entries,), EMPTY),
+        sram_valid=jnp.zeros((sram_entries,), bool),
+        sram_seq=jnp.zeros((sram_entries,), jnp.int32),
+        alloc_seq=jnp.zeros((), jnp.int32),
+        dram_src=jnp.full((dram_entries,), EMPTY),
+        dram_addr=jnp.full((dram_entries,), EMPTY),
+        dram_val=jnp.zeros((dram_entries, value_width), jnp.float32),
+        dram_ts=jnp.full((dram_entries,), EMPTY),
+        dram_ptr=jnp.zeros((), jnp.int32),
+        next_ts=jnp.zeros((n_sources,), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# REPL reception: allocate an SRAM entry
+# ---------------------------------------------------------------------------
+
+def receive_repl(state: LogUnitState, src: jax.Array, addr: jax.Array,
+                 value: jax.Array) -> LogUnitState:
+    """Allocate one SRAM entry for (src, addr, value).
+
+    Each REPL gets its *own* entry (two same-address stores can be in
+    flight under ReCXL-proactive; store coalescing happens in the SB
+    before REPLs are sent, never inside the Logging Unit -- the unit only
+    *splits* multi-word REPLs into word entries). If SRAM is full the REPL
+    is counted as dropped (hardware would NACK + retry; tests assert this
+    never fires at paper sizes)."""
+    free = state.sram_src == EMPTY
+    has_free = jnp.any(free)
+    slot = jnp.argmax(free)
+
+    def write(s: LogUnitState) -> LogUnitState:
+        return s._replace(
+            sram_src=s.sram_src.at[slot].set(jnp.int32(src)),
+            sram_addr=s.sram_addr.at[slot].set(jnp.int32(addr)),
+            sram_val=s.sram_val.at[slot].set(value),
+            sram_ts=s.sram_ts.at[slot].set(EMPTY),
+            sram_valid=s.sram_valid.at[slot].set(False),
+            sram_seq=s.sram_seq.at[slot].set(s.alloc_seq),
+            alloc_seq=s.alloc_seq + 1,
+        )
+
+    return jax.lax.cond(
+        has_free, write, lambda s: s._replace(dropped=s.dropped + 1), state)
+
+
+# ---------------------------------------------------------------------------
+# VAL reception: validate + stamp
+# ---------------------------------------------------------------------------
+
+def receive_val(state: LogUnitState, src: jax.Array, addr: jax.Array,
+                ts: jax.Array) -> LogUnitState:
+    """Mark the *oldest unvalidated* (src, addr) entry valid and record its
+    logical timestamp.
+
+    VALs from different sources / for different addresses can arrive in
+    any order (the fabric reorders; draining enforces TS order). Matching
+    assumes same-(src, addr) REPLs and VALs are point-to-point ordered --
+    the well-definedness assumption the paper's (req_id, addr) matching
+    rests on. A VAL always finds its entry: it is only sent after the
+    REPL_ACK, so the REPL was already processed here (causality)."""
+    match = ((state.sram_src == src) & (state.sram_addr == addr)
+             & ~state.sram_valid)
+    has = jnp.any(match)
+    seq = jnp.where(match, state.sram_seq, jnp.iinfo(jnp.int32).max)
+    slot = jnp.argmin(seq)
+    return state._replace(
+        sram_ts=jnp.where(has, state.sram_ts.at[slot].set(jnp.int32(ts)),
+                          state.sram_ts),
+        sram_valid=jnp.where(has, state.sram_valid.at[slot].set(True),
+                             state.sram_valid),
+    )
+
+
+# ---------------------------------------------------------------------------
+# SRAM -> DRAM drain (in per-source TS order)
+# ---------------------------------------------------------------------------
+
+def _drain_one(state: LogUnitState) -> Tuple[LogUnitState, jax.Array]:
+    """Move at most one eligible entry (valid and ts == next_ts[src])."""
+    src_safe = jnp.maximum(state.sram_src, 0)
+    eligible = (state.sram_valid
+                & (state.sram_src != EMPTY)
+                & (state.sram_ts == state.next_ts[src_safe]))
+    has = jnp.any(eligible)
+    slot = jnp.argmax(eligible)
+
+    def move(s: LogUnitState) -> Tuple[LogUnitState, jax.Array]:
+        d = s.dram_ptr % s.dram_src.shape[0]
+        src = s.sram_src[slot]
+        s = s._replace(
+            dram_src=s.dram_src.at[d].set(src),
+            dram_addr=s.dram_addr.at[d].set(s.sram_addr[slot]),
+            dram_val=s.dram_val.at[d].set(s.sram_val[slot]),
+            dram_ts=s.dram_ts.at[d].set(s.sram_ts[slot]),
+            dram_ptr=s.dram_ptr + 1,
+            next_ts=s.next_ts.at[src].add(1),
+            sram_src=s.sram_src.at[slot].set(EMPTY),
+            sram_ts=s.sram_ts.at[slot].set(EMPTY),
+            sram_valid=s.sram_valid.at[slot].set(False),
+        )
+        return s, jnp.bool_(True)
+
+    return jax.lax.cond(has, move, lambda s: (s, jnp.bool_(False)), state)
+
+
+def drain(state: LogUnitState, max_moves: int) -> LogUnitState:
+    """Drain up to ``max_moves`` entries (background SRAM->DRAM mover)."""
+
+    def body(s, _):
+        s, _moved = _drain_one(s)
+        return s, None
+
+    state, _ = jax.lax.scan(body, state, None, length=max_moves)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Queries (recovery + tests)
+# ---------------------------------------------------------------------------
+
+def latest_version(state: LogUnitState, src: jax.Array, addr: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Algorithm 2 for one address: newest logged value for (src, addr),
+    searching DRAM (newest = highest ts) then unvalidated SRAM is ignored
+    (not yet committed). Returns (found, ts, value)."""
+    m = (state.dram_src == src) & (state.dram_addr == addr)
+    found = jnp.any(m)
+    ts = jnp.where(m, state.dram_ts, -1)
+    best = jnp.argmax(ts)
+    # also consider *validated* SRAM entries not yet drained
+    ms = (state.sram_src == src) & (state.sram_addr == addr) & state.sram_valid
+    found_s = jnp.any(ms)
+    ts_s = jnp.where(ms, state.sram_ts, -1)
+    best_s = jnp.argmax(ts_s)
+    use_sram = found_s & (ts_s[best_s] > jnp.where(found, ts[best], -1))
+    out_ts = jnp.where(use_sram, ts_s[best_s], ts[best])
+    out_val = jnp.where(use_sram, state.sram_val[best_s], state.dram_val[best])
+    return found | found_s, out_ts, out_val
+
+
+def occupancy(state: LogUnitState) -> Tuple[jax.Array, jax.Array]:
+    """(sram_used, dram_used) -- Fig. 13 instrumentation."""
+    return (jnp.sum(state.sram_src != EMPTY),
+            jnp.minimum(state.dram_ptr, state.dram_src.shape[0]))
+
+
+def clear_dram(state: LogUnitState) -> LogUnitState:
+    """Post-dump log clear (paper SS IV.E)."""
+    return state._replace(
+        dram_src=jnp.full_like(state.dram_src, EMPTY),
+        dram_addr=jnp.full_like(state.dram_addr, EMPTY),
+        dram_ts=jnp.full_like(state.dram_ts, EMPTY),
+        dram_ptr=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,305 @@
+"""ReCXL recovery (paper SS V.B-D, Algorithms 1-2, Table I).
+
+Software-driven, coordinated by a Configuration Manager on a live node.
+Correctness over speed, exactly as the paper prescribes ("recovery speed
+is not the main concern").
+
+Sequence (mirrors Fig. 9):
+
+1. ``Interrupt`` -> all live nodes pause, complete outstanding work,
+   ``InterruptResp``.
+2. ``InitRecov`` -> directory repair (Algorithm 1): drop the failed node
+   from every replica set; for every shard the failed node *owned*,
+   ``FetchLatestVers`` asks the replica Logging Units for their newest
+   validated version (Algorithm 2 walks each log newest-to-earliest);
+   the newest version across replicas -- or, failing that, the MN-tier
+   dump -- is applied to memory and the entry marked UNOWNED.
+3. ``RecovEnd`` -> resume (the trainer re-admits a spare node or shrinks
+   the mesh; see distributed/elastic.py).
+
+This module is deliberately host-side numpy/python: the paper's recovery
+is software handlers reading hardware logs, and host-side recovery code
+survives device failures by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.directory import ShardDirectory, ShardState
+from repro.core.protocol import (
+    FetchLatestVers,
+    FetchLatestVersResp,
+    MsgType,
+    RecoveryStats,
+)
+from repro.core.replication import ReplicationEngine
+
+
+@dataclasses.dataclass
+class RecoveredShard:
+    """One recovered (node, bucket) shard, per model-axis coordinate."""
+    bucket: int
+    ts: int
+    source: str                       # "replica:<rank>" | "mn_dump"
+    values: np.ndarray                # (n_model, bucket_len)
+
+
+@dataclasses.dataclass
+class RecoveryResult:
+    failed: Tuple[int, ...]           # (pod?, data) coordinates
+    shards: Dict[int, RecoveredShard] # bucket -> shard
+    stats: RecoveryStats
+    message_log: List[Tuple[MsgType, Any]]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: replica log traversal
+# ---------------------------------------------------------------------------
+
+def algorithm2_versions(engine: ReplicationEngine, logs_np: Dict[str, np.ndarray],
+                        replica_coord: Tuple[int, ...], rank: int,
+                        bucket: int) -> List[Tuple[int, np.ndarray]]:
+    """All logged versions of (failed-owner, bucket) held by the Logging
+    Unit at ``replica_coord``, sorted latest-to-earliest.
+
+    Returns [(ts, values (n_model, bucket_len))]. Only *validated* entries
+    count (un-VALed entries were never committed by the source)."""
+    mesh = engine.ctx.mesh
+    axes = engine.mesh_axes
+    n_model = mesh.shape["model"] if "model" in axes else 1
+    out: List[Tuple[int, np.ndarray]] = []
+    cap = engine.rep.log_capacity
+    for slot in range(cap):
+        # index: lead coords (pod?, data, model) then [rank, slot, bucket]
+        vals, ok, ts = [], True, -1
+        for m in range(n_model):
+            coord = _lead_index(axes, replica_coord, m)
+            if not logs_np["valid"][coord + (rank, slot, bucket)]:
+                ok = False
+                break
+            ts = int(logs_np["ts"][coord + (rank, slot, bucket)])
+            vals.append(logs_np["values"][coord + (rank, slot, bucket)])
+        if ok and ts >= 0:
+            out.append((ts, np.stack(vals)))
+    out.sort(key=lambda p: -p[0])
+    return out
+
+
+def _lead_index(axes: Sequence[str], node_coord: Tuple[int, ...],
+                model_idx: int) -> Tuple[int, ...]:
+    """Build the leading index tuple (pod?, data, model) for log arrays."""
+    out: List[int] = []
+    ni = 0
+    for ax in axes:
+        if ax == "model":
+            out.append(model_idx)
+        else:
+            out.append(node_coord[ni])
+            ni += 1
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: directory + memory repair
+# ---------------------------------------------------------------------------
+
+def recover_node(engine: ReplicationEngine,
+                 logs: Dict[str, jax.Array],
+                 directory: ShardDirectory,
+                 failed_coord: Tuple[int, ...],
+                 mn_dump: Optional[Dict[int, Tuple[int, np.ndarray]]] = None,
+                 ) -> RecoveryResult:
+    """Run Algorithms 1-2 for one failed node.
+
+    ``failed_coord``: (data,) or (pod, data) coordinate of the failed
+    node. ``mn_dump``: bucket -> (step, values) from the MN tier (the
+    dumped-log fallback). Returns the recovered shard contents; the
+    trainer applies them to a rebuilt state (elastic.py).
+    """
+    msg_log: List[Tuple[MsgType, Any]] = []
+    logs_np = {k: np.asarray(v) for k, v in logs.items()}
+    failed_data = failed_coord[-1]
+    n_nodes = engine.n_nodes
+
+    # -- Algorithm 1, part 1: clear the failed node as a "sharer"
+    # (drop it from every replica set in the directory).
+    cleared = directory.remove_failed_replica(failed_data)
+
+    # -- Algorithm 1, part 2: for every shard the failed node owned,
+    # fetch the latest logged version from its replicas.
+    owned = directory.owned_by(failed_data)
+    msg_log.append((MsgType.INIT_RECOV, {"failed": failed_coord}))
+
+    shards: Dict[int, RecoveredShard] = {}
+    n_from_replicas = n_from_dump = n_unrec = 0
+
+    for (node, bucket) in owned:
+        reps = directory.replicas_of(node, bucket)
+        fetch = FetchLatestVers(addrs=(bucket,))
+        msg_log.append((MsgType.FETCH_LATEST_VERS,
+                        {"to": reps, "msg": fetch}))
+        candidates: List[Tuple[int, np.ndarray, str]] = []
+        # engine offsets define which rank r maps to which replica node
+        offs = engine._offsets(bucket)
+        for r, off in enumerate(offs):
+            t = (failed_data + off) % n_nodes
+            if t == failed_data or t not in reps:
+                continue              # never ask the failed node (SS V.A)
+            t_coord = failed_coord[:-1] + (t,)
+            versions = algorithm2_versions(engine, logs_np, t_coord, r, bucket)
+            msg_log.append((MsgType.FETCH_LATEST_VERS_RESP,
+                            {"from": t, "n_versions": len(versions)}))
+            if versions:
+                ts, vals = versions[0]
+                candidates.append((ts, vals, f"replica:{r}@node{t}"))
+        if candidates:
+            # paper: replicas normally agree; on mid-replication failure
+            # the latest across any replica wins.
+            candidates.sort(key=lambda c: -c[0])
+            ts, vals, src = candidates[0]
+            shards[bucket] = RecoveredShard(bucket, ts, src, vals)
+            n_from_replicas += 1
+        elif mn_dump is not None and bucket in mn_dump:
+            step, vals = mn_dump[bucket]
+            shards[bucket] = RecoveredShard(bucket, step, "mn_dump",
+                                            np.asarray(vals))
+            n_from_dump += 1
+        else:
+            n_unrec += 1
+        directory.entries[(node, bucket)].state = ShardState.UNOWNED
+
+    msg_log.append((MsgType.INIT_RECOV_RESP, {"buckets": len(shards)}))
+    msg_log.append((MsgType.RECOV_END, {}))
+
+    stats = RecoveryStats(
+        failed_node=failed_data,
+        shared_entries_cleared=cleared,
+        owned_entries=len(owned),
+        recovered_from_replicas=n_from_replicas,
+        recovered_from_mn_dump=n_from_dump,
+        unrecoverable=n_unrec,
+    )
+    return RecoveryResult(failed=failed_coord, shards=shards, stats=stats,
+                          message_log=msg_log)
+
+
+# ---------------------------------------------------------------------------
+# Parity (erasure-coded) recovery -- beyond-paper mode
+# ---------------------------------------------------------------------------
+
+def recover_node_parity(engine: ReplicationEngine,
+                        logs: Dict[str, jax.Array],
+                        state: Any, specs: Any,
+                        failed_coord: Tuple[int, ...],
+                        ) -> RecoveryResult:
+    """Erasure-coded recovery: lost = parity - sum(survivors' payloads).
+
+    ``state``/``specs``: the live global state (survivors still hold
+    their shards) and its PartitionSpecs. Exact when log_dtype is f32.
+    Tolerates one failure per parity group (vs. N_r-1 anywhere for copy
+    mode) at G x N_r less log memory.
+    """
+    from repro.distributed.elastic import _block_slices
+
+    assert engine.rep.mode == "parity"
+    G = engine.rep.parity_group
+    logs_np = {k: np.asarray(v) for k, v in logs.items()}
+    failed = failed_coord[-1]
+    group = failed // G
+    members = [m for m in range(group * G, (group + 1) * G) if m != failed]
+    mesh = engine.ctx.mesh
+    axes = engine.mesh_axes
+    n_model = mesh.shape["model"] if "model" in axes else 1
+    node_axes = list(engine.ctx.batch_axes)
+
+    flat_state, _ = jax.tree.flatten(state)
+    flat_specs = jax.tree.leaves(
+        specs, is_leaf=lambda s: hasattr(s, "_normalized_spec")
+        or type(s).__name__ == "PartitionSpec")
+    host = [np.asarray(l) for l in flat_state]
+
+    def local_leaves(node: int, m: int) -> List[np.ndarray]:
+        coords = {"model": m} if "model" in axes else {}
+        coord_tuple = failed_coord[:-1] + (node,)
+        for a, c in zip(node_axes, coord_tuple[-len(node_axes):]):
+            coords[a] = c
+        out = []
+        for h, spec in zip(host, flat_specs):
+            sl = _block_slices(h.shape, spec, mesh, coords)
+            out.append(h[sl])
+        return out
+
+    shards: Dict[int, RecoveredShard] = {}
+    msg_log: List[Tuple[MsgType, Any]] = [
+        (MsgType.INIT_RECOV, {"failed": failed_coord, "mode": "parity"})]
+    nb = engine.layout.n_buckets
+    cap = engine.rep.log_capacity
+    n_unrec = 0
+    for b in range(nb):
+        holder = engine.parity_holder(group, b)
+        best_ts, best = -1, None
+        for slot in range(cap):
+            vals, ok, ts = [], True, -1
+            for m in range(n_model):
+                coord = _lead_index(axes, failed_coord[:-1] + (holder,), m)
+                if not logs_np["valid"][coord + (0, slot, b)]:
+                    ok = False
+                    break
+                ts = int(logs_np["ts"][coord + (0, slot, b)])
+                vals.append(logs_np["values"][coord + (0, slot, b)])
+            if ok and ts > best_ts:
+                best_ts, best = ts, np.stack(vals)
+        if best is None:
+            n_unrec += 1
+            continue
+        # subtract the survivors' contributions
+        lost = best.astype(np.float64)
+        for node in members:
+            for m in range(n_model):
+                leaves = [jnp.asarray(x) for x in local_leaves(node, m)]
+                contrib = np.asarray(engine.pack_bucket(leaves, b),
+                                     np.float64)
+                lost[m] -= contrib
+        shards[b] = RecoveredShard(b, best_ts, f"parity@node{holder}",
+                                   lost.astype(np.float32))
+        msg_log.append((MsgType.FETCH_LATEST_VERS_RESP,
+                        {"from": holder, "bucket": b, "ts": best_ts}))
+    msg_log.append((MsgType.RECOV_END, {}))
+    stats = RecoveryStats(
+        failed_node=failed, shared_entries_cleared=0,
+        owned_entries=nb, recovered_from_replicas=len(shards),
+        recovered_from_mn_dump=0, unrecoverable=n_unrec)
+    return RecoveryResult(failed=failed_coord, shards=shards, stats=stats,
+                          message_log=msg_log)
+
+
+# ---------------------------------------------------------------------------
+# Reassembling the failed node's state shard
+# ---------------------------------------------------------------------------
+
+def reassemble_shard(engine: ReplicationEngine, result: RecoveryResult
+                     ) -> List[np.ndarray]:
+    """Stitch recovered buckets back into the per-model-coordinate leaf
+    list of the failed node's local state shard.
+
+    Returns a list over model coordinates; each element is the leaf list
+    (matching ``engine.layout.local_shapes``)."""
+    nb, bl = engine.layout.n_buckets, engine.layout.bucket_len
+    if len(result.shards) != nb:
+        missing = sorted(set(range(nb)) - set(result.shards))
+        raise ValueError(f"buckets unrecovered: {missing}")
+    n_model = result.shards[0].values.shape[0]
+    per_model = []
+    for m in range(n_model):
+        flat = np.concatenate([
+            np.asarray(result.shards[b].values[m], np.float32).reshape(-1)
+            for b in range(nb)])
+        per_model.append([np.asarray(x) for x in
+                          engine.unpack(jax.numpy.asarray(flat.reshape(nb, bl)))])
+    return per_model

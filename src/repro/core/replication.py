@@ -1,0 +1,425 @@
+"""The ReCXL replication engine for distributed training/serving.
+
+Maps the paper's write-replication onto the TPU mesh (DESIGN.md S2):
+
+* the "store" is a node's per-step state-shard update, split into
+  ``n_buckets`` coalescing buckets (the SB-entry analogue);
+* REPL = ``lax.ppermute`` of each bucket along the ``data`` axis to the
+  N_r hash-selected replica nodes, which deposit it into their HBM log
+  ring (allocation == REPL reception);
+* VAL = a second, tiny ppermute carrying the logical timestamp (the step
+  number); reception sets the entry's valid bit;
+* the three protocol variants are *dependency structures* over these
+  collectives -- XLA's latency-hiding scheduler realizes the overlap:
+
+  - ``baseline``:  every REPL is barrier-tied to the completed state
+    commit AND to the previous bucket's REPL (fully serialized chain,
+    Fig. 6a);
+  - ``parallel``:  REPLs consume the update value directly (no tie to the
+    commit) but successive buckets stay chained (SB-head serialization,
+    Fig. 6b);
+  - ``proactive``: all (replica, bucket) REPLs are independent -- they
+    issue as soon as each bucket's update exists and their latencies
+    overlap (Fig. 6c / Fig. 8).
+
+* ``coalescing=True`` gives all buckets of a replica rank one shared
+  offset so the engine can fuse them into a single large ppermute per
+  rank (fewer, bigger messages); ``False`` keeps per-bucket hash offsets
+  (more, smaller, more overlappable messages) -- the Fig. 12 trade-off.
+
+The log ring lives in the train state (donated each step). Entries hold
+the *latest validated version* of each (source, bucket) shard -- exactly
+what the paper's recovery extracts from its word-granularity log
+(Algorithm 1 applies the newest logged version per address).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ReplicationConfig
+from repro.core import replica_groups
+from repro.distributed.context import MeshContext
+
+LogState = Dict[str, jax.Array]
+
+
+def _tie(x, *deps):
+    """Make ``x`` depend on ``deps`` without changing its value."""
+    return jax.lax.optimization_barrier((x,) + tuple(deps))[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineLayout:
+    """Static facts about the replicated payload.
+
+    Leaves are assigned to buckets by greedy size-balanced bin packing.
+    Crucially each bucket packs a *subset of leaves* (not a slice of the
+    fully-concatenated update): under ReCXL-proactive a bucket's REPL
+    then depends only on its own leaves' optimizer math, so XLA can
+    overlap bucket i's ppermute with bucket j's compute -- the SB-overlap
+    of Fig. 8. A flat split would chain every bucket behind the full
+    update and destroy the variant distinction.
+    """
+    local_sizes: Tuple[int, ...]        # flattened size of each local leaf
+    treedef: Any
+    local_shapes: Tuple[Tuple[int, ...], ...]
+    bucket_of_leaf: Tuple[int, ...]     # leaf index -> bucket id
+    leaves_in_bucket: Tuple[Tuple[int, ...], ...]
+    bucket_len: int                     # max padded bucket payload length
+    n_buckets: int
+
+    @property
+    def total(self) -> int:
+        return sum(self.local_sizes)
+
+
+class ReplicationEngine:
+    """One engine per RunConfig; stateless apart from static layout."""
+
+    def __init__(self, rep: ReplicationConfig, ctx: MeshContext,
+                 param_specs: Any, global_params: Any):
+        self.rep = rep
+        self.ctx = ctx
+        mesh = ctx.mesh
+        self.mesh_axes = tuple(mesh.axis_names)
+        # replication runs along the data axis (pod-local) unless
+        # cross_pod_replicas combines (pod, data) into one ring.
+        if rep.cross_pod_replicas and "pod" in self.mesh_axes:
+            self.repl_axes: Tuple[str, ...] = ("pod", "data")
+        else:
+            self.repl_axes = ("data",)
+        self.n_nodes = int(np.prod([mesh.shape[a] for a in self.repl_axes]))
+        if rep.is_replicating and rep.n_replicas >= self.n_nodes:
+            raise ValueError("n_replicas must be < replication ring size")
+        self.param_specs = param_specs
+        self.layout = self._layout(global_params, param_specs)
+        self.log_dtype = jnp.dtype(rep.log_dtype)
+
+    # ------------------------------------------------------------------
+    def _layout(self, global_params: Any, specs: Any) -> EngineLayout:
+        mesh = self.ctx.mesh
+        leaves, treedef = jax.tree.flatten(global_params)
+        spec_leaves = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+        local_shapes: List[Tuple[int, ...]] = []
+        for leaf, spec in zip(leaves, spec_leaves):
+            shape = list(leaf.shape)
+            for d, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                div = int(np.prod([mesh.shape[a] for a in axes]))
+                if shape[d] % div:
+                    # GSPMD pads uneven dims; the engine replicates the
+                    # padded block to keep shard_map blocks uniform.
+                    shape[d] = shape[d] + (div - shape[d] % div)
+                shape[d] //= div
+            local_shapes.append(tuple(shape))
+        sizes = tuple(int(np.prod(s)) for s in local_shapes)
+        nb = min(self.rep.n_buckets, max(len(sizes), 1))
+        # greedy size-balanced bin packing, deterministic
+        order = sorted(range(len(sizes)), key=lambda i: -sizes[i])
+        loads = [0] * nb
+        bucket_of = [0] * len(sizes)
+        for i in order:
+            b = int(np.argmin(loads))
+            bucket_of[i] = b
+            loads[b] += sizes[i]
+        in_bucket = tuple(tuple(i for i in range(len(sizes))
+                                if bucket_of[i] == b) for b in range(nb))
+        bucket_len = max(max(loads), 1)
+        return EngineLayout(local_sizes=sizes, treedef=treedef,
+                            local_shapes=tuple(local_shapes),
+                            bucket_of_leaf=tuple(bucket_of),
+                            leaves_in_bucket=in_bucket,
+                            bucket_len=bucket_len, n_buckets=nb)
+
+    # ------------------------------------------------------------------
+    # Log state
+    # ------------------------------------------------------------------
+
+    @property
+    def _nr(self) -> int:
+        """Log-ring replica dim: parity mode stores one shard per group."""
+        return 1 if self.rep.mode == "parity" else self.rep.n_replicas
+
+    def log_struct(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Global ShapeDtypeStructs for the log ring."""
+        mesh = self.ctx.mesh
+        lead = tuple(mesh.shape[a] for a in self.mesh_axes)
+        nr, cap = self._nr, self.rep.log_capacity
+        nb, bl = self.layout.n_buckets, self.layout.bucket_len
+        return {
+            "values": jax.ShapeDtypeStruct(lead + (nr, cap, nb, bl),
+                                           self.log_dtype),
+            "ts": jax.ShapeDtypeStruct(lead + (nr, cap, nb), jnp.int32),
+            "valid": jax.ShapeDtypeStruct(lead + (nr, cap, nb), jnp.bool_),
+        }
+
+    def log_specs(self) -> Dict[str, P]:
+        n_lead = len(self.mesh_axes)
+        def spec(extra: int) -> P:
+            return P(*self.mesh_axes, *([None] * extra))
+        return {"values": spec(4), "ts": spec(3), "valid": spec(3)}
+
+    def log_shardings(self) -> Dict[str, NamedSharding]:
+        return {k: NamedSharding(self.ctx.mesh, s)
+                for k, s in self.log_specs().items()}
+
+    def init_logs(self) -> LogState:
+        structs = self.log_struct()
+        shardings = self.log_shardings()
+        def mk(k):
+            s = structs[k]
+            fill = jnp.zeros if k != "ts" else (lambda sh, dt: jnp.full(sh, -1, dt))
+            try:
+                return jax.device_put(fill(s.shape, s.dtype), shardings[k])
+            except Exception:
+                return fill(s.shape, s.dtype)
+        return {k: mk(k) for k in structs}
+
+    # ------------------------------------------------------------------
+    # Payload packing
+    # ------------------------------------------------------------------
+
+    def pack_bucket(self, local_leaves: Sequence[jax.Array],
+                    bucket: int) -> jax.Array:
+        """Concat bucket ``bucket``'s leaves, padded to bucket_len."""
+        lay = self.layout
+        idxs = lay.leaves_in_bucket[bucket]
+        if not idxs:
+            return jnp.zeros((lay.bucket_len,), self.log_dtype)
+        flat = [local_leaves[i].reshape(-1).astype(self.log_dtype)
+                for i in idxs]
+        vec = jnp.concatenate(flat) if len(flat) > 1 else flat[0]
+        pad = lay.bucket_len - vec.shape[0]
+        return jnp.pad(vec, (0, pad)) if pad else vec
+
+    def unpack_bucket(self, vec: jax.Array, bucket: int) -> Dict[int, jax.Array]:
+        """Bucket payload -> {leaf_index: local leaf array}."""
+        lay = self.layout
+        out: Dict[int, jax.Array] = {}
+        off = 0
+        for i in lay.leaves_in_bucket[bucket]:
+            size, shape = lay.local_sizes[i], lay.local_shapes[i]
+            out[i] = vec.reshape(-1)[off:off + size].reshape(shape)
+            off += size
+        return out
+
+    def unpack(self, buckets: jax.Array) -> List[jax.Array]:
+        """(n_buckets, bucket_len) -> local leaf list (host or device)."""
+        out: List[Any] = [None] * len(self.layout.local_sizes)
+        for b in range(self.layout.n_buckets):
+            for i, leaf in self.unpack_bucket(buckets[b], b).items():
+                out[i] = leaf
+        return out
+
+    def unflatten(self, leaves: Sequence[jax.Array]) -> Any:
+        return jax.tree.unflatten(self.layout.treedef, list(leaves))
+
+    # ------------------------------------------------------------------
+    # Offsets / perms
+    # ------------------------------------------------------------------
+
+    def parity_groups(self) -> List[List[int]]:
+        g = self.rep.parity_group
+        if self.n_nodes % g:
+            raise ValueError(
+                f"parity_group {g} must divide ring size {self.n_nodes}")
+        return [list(range(i, i + g)) for i in range(0, self.n_nodes, g)]
+
+    def parity_holder(self, group: int, bucket: int) -> int:
+        """Node storing group ``group``'s parity for ``bucket`` -- always
+        OUTSIDE the group, and collision-free by construction: every
+        group rotates by the same bucket-hashed shift, so distinct groups
+        always land in distinct target groups (the per-bucket ppermute
+        needs unique destinations). Pure function of (group, bucket),
+        recomputable by recovery."""
+        g = self.rep.parity_group
+        n_groups = self.n_nodes // g
+        if n_groups < 2:
+            raise ValueError("parity mode needs >= 2 groups")
+        h = replica_groups._hash_int(bucket, self.n_nodes)
+        shift = 1 + h % (n_groups - 1)           # same for all groups
+        tgt_group = (group + shift) % n_groups
+        return tgt_group * g + (h // 7) % g
+
+    def _offsets(self, bucket: int) -> Tuple[int, ...]:
+        b = 0 if self.rep.coalescing else bucket
+        return replica_groups.replica_offsets(b, self.rep.n_replicas,
+                                              self.n_nodes)
+
+    def _perm(self, off: int) -> List[Tuple[int, int]]:
+        n = self.n_nodes
+        return [(s, (s + off) % n) for s in range(n)]
+
+    @property
+    def _axis(self):
+        return self.repl_axes if len(self.repl_axes) > 1 else self.repl_axes[0]
+
+    # ------------------------------------------------------------------
+    # In-step replication (call under the mesh, on GSPMD-global arrays)
+    # ------------------------------------------------------------------
+
+    def replicate(self, updates: Any, logs: LogState, step: jax.Array,
+                  commit_value: Any) -> Tuple[LogState, Any]:
+        """Run the REPL/VAL transactions for this step.
+
+        ``updates``: pytree (global arrays) to replicate -- the new state
+        shard. ``commit_value``: the pytree whose availability defines the
+        paper's "coherence transaction completed" point (the updated
+        params, post-collectives). Returns (new_logs, committed_value)
+        where ``committed_value`` == commit_value, barrier-tied so the
+        store only "commits" after the variant's requirements hold.
+        """
+        if not self.rep.is_replicating:
+            return logs, commit_value
+
+        mesh = self.ctx.mesh
+        n_lead = len(self.mesh_axes)
+        in_specs = (self.param_specs, self.log_specs(), P(), self.param_specs)
+        out_specs = (self.log_specs(), P())
+
+        variant = self.rep.variant
+        nr, cap = self._nr, self.rep.log_capacity
+        nb = self.layout.n_buckets
+        parity = self.rep.mode == "parity"
+        if parity:
+            groups = self.parity_groups()
+            holders = {b: [self.parity_holder(g, b)
+                           for g in range(len(groups))]
+                       for b in range(nb)}
+
+        def region(upd_local, logs_local, step_, commit_local):
+            # strip the leading mesh dims of the log blocks
+            lv = logs_local["values"].reshape(logs_local["values"].shape[n_lead:])
+            lt = logs_local["ts"].reshape(logs_local["ts"].shape[n_lead:])
+            lg = logs_local["valid"].reshape(logs_local["valid"].shape[n_lead:])
+            slot = (step_ % cap).astype(jnp.int32)
+
+            upd_leaves = jax.tree.leaves(upd_local)
+            commit_leaves = jax.tree.leaves(commit_local)
+            payloads = [self.pack_bucket(upd_leaves, b) for b in range(nb)]
+            if variant == "baseline":
+                # REPL waits for the full commit value (coherence done)
+                payloads = [_tie(p, *commit_leaves) for p in payloads]
+
+            chain_dep: Optional[jax.Array] = None
+            val_tokens: List[jax.Array] = []
+            recvs: List[Tuple[int, int, jax.Array]] = []
+
+            if parity:
+                # beyond-paper erasure coding: one parity shard per group,
+                # stored outside the group. psum over the group builds the
+                # parity on every member; member 0 forwards it to the
+                # hash-selected holder.
+                my_idx = jax.lax.axis_index(self._axis)
+                for b in range(nb):
+                    src = payloads[b].astype(jnp.float32)
+                    if variant in ("baseline", "parallel") and \
+                            chain_dep is not None:
+                        src = _tie(src, chain_dep)
+                    par = jax.lax.psum(src, self._axis,
+                                       axis_index_groups=groups)
+                    perm = [(g[0], holders[b][gi])
+                            for gi, g in enumerate(groups)]
+                    recv = jax.lax.ppermute(par, self._axis, perm)
+                    if variant in ("baseline", "parallel"):
+                        chain_dep = recv
+                    # only holders received real data; zeros elsewhere
+                    is_holder = jnp.zeros((), jnp.bool_)
+                    for hlist in (holders[b],):
+                        for h in hlist:
+                            is_holder = is_holder | (my_idx == h)
+                    lv = lv.at[0, slot, b].set(recv.astype(lv.dtype))
+                    lt = lt.at[0, slot, b].set(
+                        jnp.where(is_holder, step_, lt[0, slot, b]))
+                    lg = lg.at[0, slot, b].set(is_holder)
+                    val_tokens.append(jnp.sum(recv).astype(jnp.int32)[None])
+                lead = logs_local["values"].shape[:n_lead]
+                new_logs = {
+                    "values": lv.reshape(lead + lv.shape),
+                    "ts": lt.reshape(lead + lt.shape),
+                    "valid": lg.reshape(lead + lg.shape),
+                }
+                token = jnp.sum(jnp.concatenate(val_tokens))
+                return new_logs, token
+
+            if self.rep.coalescing:
+                # one big ppermute per replica rank (all buckets share off)
+                payload = jnp.stack(payloads)
+                for r in range(nr):
+                    off = self._offsets(0)[r]
+                    src = payload
+                    if variant in ("baseline", "parallel") and chain_dep is not None:
+                        src = _tie(src, chain_dep)
+                    recv = jax.lax.ppermute(src, self._axis, self._perm(off))
+                    if variant in ("baseline", "parallel"):
+                        chain_dep = recv
+                    recvs.append((r, -1, recv))
+            else:
+                for b in range(nb):
+                    offs = self._offsets(b)
+                    for r in range(nr):
+                        src = payloads[b]
+                        if variant in ("baseline", "parallel") and chain_dep is not None:
+                            src = _tie(src, chain_dep)
+                        recv = jax.lax.ppermute(src, self._axis,
+                                                self._perm(offs[r]))
+                        if variant in ("baseline", "parallel"):
+                            chain_dep = recv
+                        recvs.append((r, b, recv))
+
+            # deposit REPL payloads into the ring (allocation)
+            for r, b, recv in recvs:
+                if b < 0:      # coalesced: whole (nb, bl) block at once
+                    lv = lv.at[r, slot].set(recv)
+                else:
+                    lv = lv.at[r, slot, b].set(recv)
+
+            # VAL: tiny ts ppermute per replica rank, after that rank's
+            # REPLs delivered (barrier tie); reception sets valid + ts.
+            ts_vec = jnp.full((nb,), step_, jnp.int32)
+            for r in range(nr):
+                deps = [recv for (rr, _, recv) in recvs if rr == r]
+                val_src = _tie(ts_vec, *deps)
+                off = self._offsets(0)[r] if self.rep.coalescing else None
+                if self.rep.coalescing:
+                    val_recv = jax.lax.ppermute(val_src, self._axis,
+                                                self._perm(off))
+                    lt = lt.at[r, slot].set(val_recv)
+                    lg = lg.at[r, slot].set(True)
+                    val_tokens.append(val_recv)
+                else:
+                    for b in range(nb):
+                        offb = self._offsets(b)[r]
+                        val_recv = jax.lax.ppermute(
+                            val_src[b:b + 1], self._axis, self._perm(offb))
+                        lt = lt.at[r, slot, b].set(val_recv[0])
+                        lg = lg.at[r, slot, b].set(True)
+                        val_tokens.append(val_recv)
+
+            lead = logs_local["values"].shape[:n_lead]
+            new_logs = {
+                "values": lv.reshape(lead + lv.shape),
+                "ts": lt.reshape(lead + lt.shape),
+                "valid": lg.reshape(lead + lg.shape),
+            }
+            token = jnp.sum(jnp.concatenate(
+                [jnp.ravel(t).astype(jnp.int32) for t in val_tokens]))
+            return new_logs, token
+
+        new_logs, token = jax.shard_map(
+            region, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False)(updates, logs, step, commit_value)
+
+        # the store commits only once replication finished (all variants)
+        committed = jax.tree.map(lambda x: _tie(x, token), commit_value)
+        return new_logs, committed

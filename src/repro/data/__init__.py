@@ -1,0 +1,3 @@
+"""Data pipeline."""
+
+from repro.data.pipeline import SyntheticTokenPipeline, make_pipeline  # noqa: F401

@@ -1,0 +1,9 @@
+"""Distribution layer: mesh context, sharding rules, collective helpers,
+elastic resharding."""
+
+from repro.distributed.context import (  # noqa: F401
+    MeshContext,
+    get_mesh_context,
+    mesh_context,
+    set_mesh_context,
+)

@@ -1,0 +1,68 @@
+"""Ambient mesh context.
+
+Model code that needs *manual* SPMD regions (``shard_map`` for MoE
+dispatch and for the ReCXL replication engine) discovers the active mesh
+through this context instead of threading it through every call. When no
+context is set (CPU unit tests), modules fall back to their pure-local
+single-shard path -- same math, no collectives.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Iterator, Optional, Tuple
+
+import jax
+
+
+@dataclass(frozen=True)
+class MeshContext:
+    mesh: jax.sharding.Mesh
+    batch_axes: Tuple[str, ...]      # axes the batch is sharded over
+    model_axis: Optional[str]        # tensor/expert-parallel axis
+    fsdp_axes: Tuple[str, ...]       # axes parameters are fully sharded over
+
+    @property
+    def data_size(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def model_size(self) -> int:
+        if self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+
+_CURRENT: Optional[MeshContext] = None
+
+
+def set_mesh_context(ctx: Optional[MeshContext]) -> None:
+    global _CURRENT
+    _CURRENT = ctx
+
+
+def get_mesh_context() -> Optional[MeshContext]:
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def mesh_context(ctx: MeshContext) -> Iterator[MeshContext]:
+    prev = get_mesh_context()
+    set_mesh_context(ctx)
+    try:
+        yield ctx
+    finally:
+        set_mesh_context(prev)
+
+
+def make_context(mesh: jax.sharding.Mesh) -> MeshContext:
+    """Derive the canonical context from a mesh's axis names."""
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in names if a in ("pod", "data"))
+    model_axis = "model" if "model" in names else None
+    return MeshContext(mesh=mesh, batch_axes=batch_axes,
+                       model_axis=model_axis, fsdp_axes=batch_axes)

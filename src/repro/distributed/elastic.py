@@ -1,0 +1,105 @@
+"""Elastic scaling: rebuilding cluster state after a node failure.
+
+Two post-recovery strategies (both used at scale in production trainers):
+
+* **spare replacement** (default): a hot-spare host takes over the failed
+  data-rank; mesh shape is unchanged; the recovered shard (from the
+  replica Logging Units, see core/recovery.py) is installed at the failed
+  rank's coordinates. This is MegaScale-style and keeps the compiled
+  executable valid -- recovery cost is state installation only.
+* **degraded mesh**: shrink the data axis by one and reshard everything
+  (recompile). Supported for completeness; used when no spare exists.
+
+In this single-process container both reduce to array surgery on the
+GSPMD-global state, which is exactly what the real multi-host version
+does through per-host device_puts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.recovery import RecoveryResult, reassemble_shard
+from repro.core.replication import ReplicationEngine
+from repro.distributed.context import MeshContext
+
+
+def _block_slices(global_shape: Tuple[int, ...], spec: P,
+                  mesh: jax.sharding.Mesh,
+                  coords: Dict[str, int]) -> Tuple[slice, ...]:
+    """The index slices of the block owned by mesh coordinates ``coords``
+    for an array sharded with ``spec`` (only the axes present in coords
+    are pinned; others must be fully covered by the slice)."""
+    idx: List[slice] = []
+    for d, ax in enumerate(tuple(spec) + (None,) * (len(global_shape) - len(spec))):
+        dim = global_shape[d]
+        if ax is None:
+            idx.append(slice(None))
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        sizes = [mesh.shape[a] for a in axes]
+        n = int(np.prod(sizes))
+        block = dim // n
+        # linearized coordinate over the sharding axes (major-to-minor)
+        lin = 0
+        for a, s in zip(axes, sizes):
+            lin = lin * s + coords.get(a, 0)
+        if all(a in coords for a in axes):
+            idx.append(slice(lin * block, (lin + 1) * block))
+        else:
+            raise ValueError(
+                f"spec axis {axes} not fully pinned by coords {coords}")
+    return tuple(idx)
+
+
+def install_recovered_shard(state: Any, specs: Any, engine: ReplicationEngine,
+                            result: RecoveryResult,
+                            target_coord: Tuple[int, ...]) -> Any:
+    """Write the recovered node shard into ``state`` at ``target_coord``
+    (spare replacement: target == failed coordinates; degraded mesh:
+    target is the adopting rank).
+
+    Host-side array surgery: gather leaf -> patch block -> device_put back
+    with the original sharding. Exact (bit-identical) when the log dtype
+    matches the state dtype.
+    """
+    ctx = engine.ctx
+    mesh = ctx.mesh
+    per_model = reassemble_shard(engine, result)
+    n_model = len(per_model)
+
+    flat_state, treedef = jax.tree.flatten(state)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(flat_state) == len(flat_specs)
+
+    # a "node" is identified by its batch-axes coordinates (pod?, data)
+    node_axes = list(ctx.batch_axes)
+    new_flat = []
+    for li, (leaf, spec) in enumerate(zip(flat_state, flat_specs)):
+        host = np.array(leaf)          # writable host copy
+        for m in range(n_model):
+            coords = {"model": m} if "model" in mesh.axis_names else {}
+            for a, c in zip(node_axes, target_coord[-len(node_axes):]):
+                coords[a] = c
+            sl = _block_slices(leaf.shape, spec, mesh, coords)
+            patch = per_model[m][li].astype(host.dtype)
+            host[sl] = patch.reshape(host[sl].shape)
+        sharding = NamedSharding(mesh, spec)
+        new_flat.append(jax.device_put(host, sharding))
+    return jax.tree.unflatten(treedef, new_flat)
+
+
+def shrink_data_axis(mesh_shape: Tuple[int, ...], axes: Tuple[str, ...]
+                     ) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Degraded-mesh shape after losing one data rank."""
+    out = list(mesh_shape)
+    di = axes.index("data")
+    if out[di] <= 1:
+        raise ValueError("cannot shrink a single-rank data axis")
+    out[di] -= 1
+    return tuple(out), axes

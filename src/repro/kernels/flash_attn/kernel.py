@@ -1,0 +1,129 @@
+"""Pallas TPU flash attention (forward), GQA-aware.
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks) -- the last axis is the
+reduction axis; on TPU the grid is walked sequentially over it, so the
+online-softmax running state (m, l, acc) lives in VMEM scratch that
+persists across kv steps and is flushed to the output block on the last
+step. VMEM working set per step: q (BQ, D) + k/v (BK, D) + acc (BQ, D)
+fp32 + scores (BQ, BK) -- with BQ=BK=512, D=128 that is ~2.6 MB, well
+under the ~16 MB v5e VMEM budget, and the (BQ, D) x (D, BK) MXU matmuls
+are 128-aligned.
+
+GQA is handled in the index maps: q head h reads kv head h // group.
+Causality prunes upper-triangle blocks via ``pl.when`` (the block is
+skipped entirely, not masked), so compiled work matches the exact causal
+cost like the pure-jnp blockwise twin in models/attention.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, block_q: int, block_k: int,
+                 n_kv_blocks: int, sq: int, skv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    offset = skv - sq          # right-aligned causal (decode-style)
+    q_lo = iq * block_q + offset
+    k_lo = ik * block_k
+    # process the block unless it is entirely above the causal diagonal
+    live = (not causal) or (k_lo <= q_lo + block_q - 1)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, :, 0, :]                       # (BQ, D)
+        k = k_ref[0, :, 0, :]                       # (BK, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (BQ, BK)
+        if causal:
+            qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        # kv tail padding
+        kpos2 = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos2 < skv, s, NEG_INF)
+
+        m_prev = m_scr[...]                          # (BQ, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                       # (BQ, BK)
+        corr = jnp.exp(m_prev - m_new)               # (BQ, 1)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (BQ, D)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, block_q: int = 512,
+                           block_k: int = 512,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, K, D). Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    assert h % kh == 0
+    group = h // kh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = -(-sq // block_q)
+    nk = -(-skv // block_k)
+    pad_q = nq * block_q - sq
+    pad_k = nk * block_k - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    grid = (b, h, nq, nk)
+    scale = 1.0 / np.sqrt(d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, scale=scale, causal=causal, block_q=block_q,
+            block_k=block_k, n_kv_blocks=nk, sq=sq, skv=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, ki, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nq * block_q, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),   # fp32 accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

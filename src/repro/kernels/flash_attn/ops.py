@@ -1,0 +1,40 @@
+"""Jit'd public wrapper for flash attention.
+
+On TPU, the compiled Pallas kernel; elsewhere the pure-jnp blockwise
+twin from models/attention.py (same algorithm, same exact-causal FLOPs)
+so the model code is backend-portable. ``force`` pins a path for tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attn import kernel
+from repro.models.attention import _blockwise_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "force"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 512,
+                    block_k: int = 512,
+                    force: Optional[str] = None) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, K, D) -> (B, Sq, H, D)."""
+    path = force or ("pallas" if _on_tpu() else "jnp")
+    if path == "pallas":
+        return kernel.flash_attention_pallas(
+            q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+            interpret=not _on_tpu())
+    if path == "pallas_interpret":
+        return kernel.flash_attention_pallas(
+            q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+            interpret=True)
+    return _blockwise_attention(q, k, v, causal, q_block=block_q,
+                                kv_block=block_k)

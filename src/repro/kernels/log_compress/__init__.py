@@ -1,0 +1,5 @@
+from repro.kernels.log_compress.ops import (  # noqa: F401
+    compress,
+    compression_factor,
+    decompress,
+)

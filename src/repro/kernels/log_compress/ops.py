@@ -1,0 +1,66 @@
+"""Jit'd public wrappers for the log compressor.
+
+On TPU the Pallas kernel runs compiled; elsewhere (this CPU container,
+unit tests) it runs in interpret mode or falls back to the jnp reference
+-- same numerics either way (tests assert bit-equality of codes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.log_compress import kernel, ref
+
+BLOCK = 256
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to_blocks(flat: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    n = flat.shape[0]
+    pad = (-n) % (block * kernel.TILE_ROWS)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), n
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_pallas"))
+def compress(values: jax.Array, base: jax.Array, bits: int = 8,
+             use_pallas: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Compress a flat f32/bf16 update against its base snapshot.
+
+    Returns (codes int8 (n_blocks, BLOCK), scales f32 (n_blocks, 1)).
+    """
+    v2d, _ = _pad_to_blocks(values.reshape(-1).astype(jnp.float32), BLOCK)
+    b2d, _ = _pad_to_blocks(base.reshape(-1).astype(jnp.float32), BLOCK)
+    if use_pallas:
+        return kernel.compress_pallas(v2d, b2d, bits=bits,
+                                      interpret=not _on_tpu())
+    return ref.compress_ref(v2d, b2d, block=BLOCK, bits=bits)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "use_pallas"))
+def decompress(codes: jax.Array, scales: jax.Array, base: jax.Array,
+               n: int, use_pallas: bool = True) -> jax.Array:
+    """Inverse transform; returns flat f32 of length ``n``."""
+    b2d, _ = _pad_to_blocks(base.reshape(-1).astype(jnp.float32), BLOCK)
+    if use_pallas:
+        out = kernel.decompress_pallas(codes, scales, b2d,
+                                       interpret=not _on_tpu())
+    else:
+        out = ref.decompress_ref(codes, scales, b2d)
+    return out.reshape(-1)[:n]
+
+
+def compression_factor(bits: int = 8, block: int = BLOCK) -> float:
+    """Fixed-rate factor vs. the f32 log payload (excludes base storage,
+    which recovery already holds as the previous dump)."""
+    payload_bits = 32 * block
+    compressed_bits = bits * block + 32
+    return payload_bits / compressed_bits

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Grid: (batch, heads, n_chunks) with the chunk axis sequential: the
+(P, N) recurrent state lives in VMEM scratch across chunk steps. Each
+step does three MXU matmuls (the matmul-form SSD of Dao & Gu):
+
+    G       = C_c @ B_c^T                     (Q, Q)  intra-chunk scores
+    y_intra = (G . decay . dt) @ x_c          (Q, P)
+    S_c     = (x_c . w)^T @ B_c               (P, N)  chunk summary
+    y_inter = (C_c . exp(seg)) @ state^T      (Q, P)
+
+VMEM per step at Q=256, P=64, N=128: x/B/C blocks + (Q,Q) scores + state
+~ 0.6 MB fp32 -- small; the MXU dims (Q, N, P) are 128/64-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                state_scr, *, chunk: int, n_chunks: int, length: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)            # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)          # (Q,)
+    A = a_ref[0, 0]                                # scalar
+    Bm = b_ref[0].astype(jnp.float32)              # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)              # (Q, N)
+
+    # zero the dt of padded tail positions (no state contribution)
+    pos = ci * chunk + jax.lax.iota(jnp.int32, chunk)
+    dt = jnp.where(pos < length, dt, 0.0)
+
+    dA = dt * A                                    # (Q,) <= 0
+    seg = jnp.cumsum(dA)                           # (Q,)
+    seg_last = seg[-1]
+
+    # intra-chunk
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    diff = seg[:, None] - seg[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, G.shape, 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, G.shape, 1)
+    decay = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    att = G * decay * dt[None, :]
+    y_intra = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk from carried state
+    state = state_scr[...]                         # (P, N)
+    Cexp = Cm * jnp.exp(seg)[:, None]
+    y_inter = jax.lax.dot_general(Cexp, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # chunk summary + state update
+    w = dt * jnp.exp(seg_last - seg)               # (Q,)
+    xw = x * w[:, None]                            # (Q, P)
+    S_c = jax.lax.dot_general(xw, Bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_scr[...] = jnp.exp(seg_last) * state + S_c
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        state_ref[0, 0] = state_scr[...].astype(state_ref.dtype)
+
+
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                    C: jax.Array, chunk: int = 256,
+                    interpret: bool = True):
+    """x: (b, l, h, p); dt: (b, l, h); A: (h,); B, C: (b, l, n).
+    Returns (y (b, l, h, p), final state (b, h, p, n))."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, l)
+    nc = -(-l // chunk)
+    pad = nc * chunk - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    # head-major layouts for clean (1, 1, Q, *) blocks
+    xh = jnp.moveaxis(x, 2, 1)                     # (b, h, L, p)
+    dth = jnp.moveaxis(dt, 2, 1)                   # (b, h, L)
+    a2d = A.reshape(h, 1).astype(jnp.float32)      # (h, 1)
+
+    grid = (b, h, nc)
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc, length=l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (hi, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc * chunk, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, a2d, B, C)
+    y = jnp.moveaxis(y, 1, 2)[:, :l]               # (b, l, h, p)
+    return y, state

@@ -1,0 +1,35 @@
+"""Jit'd public wrapper for the SSD scan.
+
+TPU -> compiled Pallas kernel; CPU -> the chunked pure-jnp path from
+models/ssm.py (same algorithm); tests sweep both against the sequential
+recurrence oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.ssd_scan import kernel
+from repro.models.ssm import ssd_chunked
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "force"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, chunk: int = 256,
+             force: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    """x: (b, l, h, p); dt: (b, l, h); A: (h,); B, C: (b, l, n)."""
+    path = force or ("pallas" if _on_tpu() else "jnp")
+    if path == "pallas":
+        return kernel.ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                                      interpret=not _on_tpu())
+    if path == "pallas_interpret":
+        return kernel.ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                                      interpret=True)
+    return ssd_chunked(x, dt, A, B, C, chunk)

@@ -1,0 +1,44 @@
+"""Oracle for the SSD scan: the naive O(L) sequential recurrence.
+
+    state_t = exp(dt_t * A) * state_{t-1} + dt_t * x_t (outer) B_t
+    y_t     = state_t @ C_t
+
+Deliberately independent of the chunked algorithm in models/ssm.py so it
+validates both the Pallas kernel and the model's chunked path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, init_state: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (b, l, h, p); dt: (b, l, h) post-softplus; A: (h,) negative;
+    B, C: (b, l, n). Returns (y (b, l, h, p), state (b, h, p, n))."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    B32 = B.astype(jnp.float32)
+    C32 = C.astype(jnp.float32)
+
+    def step(state, t):
+        xt, dtt, Bt, Ct = t
+        dA = jnp.exp(dtt * A[None, :])                       # (b, h)
+        upd = (dtt[..., None] * xt)[..., None] * Bt[:, None, None, :]
+        state = dA[..., None, None] * state + upd            # (b, h, p, n)
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+    xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(dt32, 1, 0),
+          jnp.moveaxis(B32, 1, 0), jnp.moveaxis(C32, 1, 0))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)               # (b, l, h, p)
+    return y, state.astype(x.dtype)

@@ -1,0 +1,368 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) cell and both production meshes
+(16x16 single-pod, 2x16x16 multi-pod), lower + compile the appropriate
+step function from ShapeDtypeStructs (no allocation), then record:
+
+* ``compiled.memory_analysis()``  -- per-device bytes (does it fit HBM);
+* ``compiled.cost_analysis()``    -- FLOPs / bytes for the roofline;
+* collective bytes parsed from the optimized HLO (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute), split
+  into model-collectives vs ReCXL replication traffic (collective-permute
+  from the engine);
+
+and dump one JSON record per cell into ``benchmarks/artifacts/``.
+
+NOTE the XLA_FLAGS line above MUST run before any other import (jax locks
+the device count on first init). Only this entry point forces 512 host
+devices -- tests and benches see the real device count.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (
+    ReplicationConfig,
+    RunConfig,
+    SHAPES,
+    TrainConfig,
+    get_model_config,
+    shape_applicable,
+)
+from repro.configs import ASSIGNED_ARCHS
+from repro.core.replication import ReplicationEngine
+from repro.distributed.context import make_context, mesh_context
+from repro.distributed.sharding import (
+    batch_specs,
+    cache_specs,
+    named_shardings,
+    param_specs,
+)
+from repro.launch.costing import collective_bytes, jaxpr_cost
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.model_zoo import batch_struct
+from repro.training.steps import init_train_state, make_serve_fns, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts")
+
+# TPU v5e-like constants (roofline)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+def train_config_for(arch: str) -> TrainConfig:
+    """AdamW by default; Adafactor for models whose AdamW state cannot fit
+    16 GB/chip HBM at 256 chips (>=60B params; DESIGN.md S8)."""
+    cfg = get_model_config(arch)
+    if cfg.param_count() > 60e9:
+        return TrainConfig(optimizer="adafactor")
+    return TrainConfig(optimizer="adamw")
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def _eval_struct(tree: Any) -> Any:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = "proactive",
+               rep_overrides: Optional[Dict[str, Any]] = None,
+               train_overrides: Optional[Dict[str, Any]] = None,
+               act_policy: str = "batch",
+               mesh_shape: Optional[Tuple[int, ...]] = None,
+               blockwise_threshold: Optional[int] = None,
+               ) -> Tuple[Any, Any, Dict[str, Any]]:
+    """Build + lower one cell. Returns (lowered, mesh_ctx, meta).
+
+    ``act_policy``: activation sharding policy ('batch' | 'seq_model' --
+    sequence parallelism, SSPerf). ``mesh_shape``: reshape the same chips
+    into different logical axes (e.g. (4, 64) for serving cells)."""
+    model_cfg = get_model_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(model_cfg, shape)
+    if not ok:
+        raise ValueError(f"cell skipped by design: {why}")
+
+    rep_kw: Dict[str, Any] = dict(variant=variant, log_capacity=2)
+    if rep_overrides:
+        rep_kw.update(rep_overrides)
+    rep = ReplicationConfig(**rep_kw)
+    tc = train_config_for(arch)
+    if train_overrides:
+        tc = dataclasses.replace(tc, **train_overrides)
+    run = RunConfig(model=model_cfg, shape=shape, replication=rep, train=tc)
+
+    if mesh_shape is not None:
+        axes = ("pod", "data", "model")[-len(mesh_shape):]
+        mesh = jax.make_mesh(
+            mesh_shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_shape))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_context(mesh)
+    from repro.distributed.sharding import set_activation_policy
+    set_activation_policy(act_policy)
+    if blockwise_threshold is not None:
+        from repro.models import attention as _attn
+        _attn.set_blockwise_threshold(blockwise_threshold)
+    model = build_model(model_cfg)
+    meta: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                            "mesh_shape": list(mesh.devices.shape),
+                            "variant": variant}
+
+    with mesh_context(ctx):
+        key = jax.random.PRNGKey(0)
+        params_struct = jax.eval_shape(model.init, key)
+        p_specs = param_specs(params_struct, model_cfg, ctx)
+        p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+
+        if shape.kind == "train":
+            engine = (ReplicationEngine(rep, ctx, p_specs, params_struct)
+                      if rep.is_replicating else None)
+            state_struct = jax.eval_shape(
+                lambda k: init_train_state(run, model, k, engine), key)
+            opt_shard = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                param_specs(state_struct.opt_state, model_cfg, ctx))
+            log_shard = engine.log_shardings() if engine else {}
+            state_shard = state_struct._replace(
+                params=p_shard, opt_state=opt_shard, logs=log_shard,
+                step=NamedSharding(mesh, P()),
+                wt_buffer=None)
+            b_struct = batch_struct(model_cfg, shape)
+            b_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                   batch_specs(b_struct, ctx))
+            step_fn = make_train_step(run, model, engine)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_shard, b_shard),
+                donate_argnums=(0,),
+            ).lower(state_struct, b_struct)
+            meta["step"] = "train_step"
+            meta["_cost_fn"] = (step_fn, (state_struct, b_struct))
+
+        elif shape.kind == "prefill":
+            prefill_fn, _ = make_serve_fns(run, model)
+            b_struct = batch_struct(model_cfg, shape)
+            b_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                   batch_specs(b_struct, ctx))
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(p_shard, b_shard),
+            ).lower(params_struct, b_struct)
+            meta["step"] = "prefill_step"
+            meta["_cost_fn"] = (prefill_fn, (params_struct, b_struct))
+
+        else:  # decode
+            _, decode_fn = make_serve_fns(run, model)
+            from repro.training.steps import ServeState
+            if model_cfg.is_encdec:
+                pre_batch = batch_struct(model_cfg, dataclasses.replace(
+                    shape, kind="prefill"))
+                _, cache_struct = jax.eval_shape(
+                    lambda p, b: model.prefill(p, b, max_len=shape.seq_len),
+                    params_struct, pre_batch)
+            else:
+                cache_struct = jax.eval_shape(
+                    lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            tok_struct = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            serve_struct = ServeState(cache=cache_struct, tokens=tok_struct)
+            c_specs = cache_specs(cache_struct, model_cfg, ctx)
+            serve_shard = ServeState(
+                cache=jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs),
+                tokens=NamedSharding(
+                    mesh, batch_specs(tok_struct, ctx)))
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(p_shard, serve_shard),
+                donate_argnums=(1,),
+            ).lower(params_struct, serve_struct)
+            meta["step"] = "serve_step"
+            meta["_cost_fn"] = (decode_fn, (params_struct, serve_struct))
+
+    return lowered, ctx, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "proactive",
+             save: bool = True,
+             rep_overrides: Optional[Dict[str, Any]] = None,
+             train_overrides: Optional[Dict[str, Any]] = None,
+             act_policy: str = "batch",
+             mesh_shape: Optional[Tuple[int, ...]] = None,
+             flash_accounting: bool = False,
+             blockwise_threshold: Optional[int] = None,
+             tag: str = "") -> Dict[str, Any]:
+    """Lower + compile + analyze one cell; returns (and saves) the record.
+
+    ``flash_accounting``: account the blockwise-attention pair scans as
+    VMEM-resident (the Pallas flash kernel on real TPUs) -- FLOPs counted,
+    intermediate HBM bytes not (launch/costing.py)."""
+    t0 = time.time()
+    model_cfg = get_model_config(arch)
+    shape = SHAPES[shape_name]
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant, "tag": tag,
+    }
+    ok, why = shape_applicable(model_cfg, shape)
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = why
+        if save:
+            _save(record)
+        return record
+
+    try:
+        lowered, ctx, meta = lower_cell(
+            arch, shape_name, multi_pod, variant,
+            rep_overrides=rep_overrides, train_overrides=train_overrides,
+            act_policy=act_policy, mesh_shape=mesh_shape,
+            blockwise_threshold=blockwise_threshold)
+        cost_fn, cost_args = meta.pop("_cost_fn")
+        record.update(meta)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        n_dev = ctx.mesh.size
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo, n_dev)
+        vmem_lengths = frozenset()
+        if flash_accounting:
+            from repro.models.attention import n_pair_scan_lengths
+            vmem_lengths = n_pair_scan_lengths(model_cfg, shape)
+        from repro.distributed.sharding import set_activation_policy
+        set_activation_policy(act_policy)
+        try:
+            with mesh_context(ctx):
+                jcost = jaxpr_cost(cost_fn, cost_args, n_dev,
+                                   vmem_scan_lengths=vmem_lengths)
+        finally:
+            set_activation_policy("batch")
+            if blockwise_threshold is not None:
+                from repro.models import attention as _attn
+                _attn.set_blockwise_threshold(4096)
+        record["act_policy"] = act_policy
+        record["flash_accounting"] = flash_accounting
+
+        record.update({
+            "status": "ok",
+            "n_devices": n_dev,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            },
+            "cost": {
+                # raw XLA numbers (while bodies counted once -- kept for
+                # reference only)
+                "hlo_flops_per_device": cost.get("flops"),
+                "hlo_bytes_per_device": cost.get("bytes accessed"),
+                # trip-corrected logical cost (global), see launch/costing.py
+                "flops_global": jcost["flops"],
+                "bytes_global": jcost["bytes"],
+                "transcendentals_global": jcost["transcendentals"],
+            },
+            "collectives": coll,
+            "model_params": model_cfg.param_count(),
+            "active_params": model_cfg.active_param_count(),
+            "tokens": shape.tokens if shape.kind != "decode"
+            else shape.global_batch,
+        })
+    except Exception as e:  # noqa: BLE001 -- a failed cell IS the finding
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    record["wall_s"] = round(time.time() - t0, 1)
+    if save:
+        _save(record)
+    return record
+
+
+def _save(record: Dict[str, Any]) -> None:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    tag = f"_{record['tag']}" if record.get("tag") else ""
+    name = (f"dryrun_{record['arch']}_{record['shape']}_"
+            f"{record['mesh'].replace('x', '-')}{tag}.json")
+    with open(os.path.join(ARTIFACT_DIR, name), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape cell name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="proactive")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp, args.variant,
+                             save=not args.no_save)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    flops = (r["cost"]["flops_global"] or 0) / r["n_devices"]
+                    extra = (f"flops/dev={flops:.3e} "
+                             f"coll={r['collectives']['total_bytes']:.3e}B "
+                             f"compile={r['compile_s']}s")
+                elif status == "error":
+                    extra = r["error"][:120]
+                else:
+                    extra = r["reason"][:80]
+                print(f"[{status:7s}] {arch:22s} {shape:12s} "
+                      f"{r['mesh']:8s} {extra}", flush=True)
+                results.append(r)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped-by-design, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches JAX device
+state (jax locks the device count at first backend init -- see
+launch/dryrun.py, which must set XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.config import MeshConfig, MULTI_POD, SINGLE_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """The assignment's production meshes: 16x16 (256 chips, one pod) or
+    2x16x16 (512 chips, two pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(cfg: MeshConfig) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        cfg.shape, cfg.axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.axes))
+
+
+def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Best-effort mesh over whatever devices exist (examples / tests)."""
+    n = jax.device_count()
+    if n % model_parallel:
+        raise ValueError(f"{n} devices not divisible by mp={model_parallel}")
+    return jax.make_mesh(
+        (n // model_parallel, model_parallel), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))

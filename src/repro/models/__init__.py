@@ -1,0 +1,9 @@
+"""Composable model definitions for all assigned architectures.
+
+Pure-functional JAX: parameters are nested dicts of ``jnp`` arrays, every
+module is an (init, apply) function pair, and layer stacks use
+``lax.scan`` over parameters stacked on a leading layer axis (keeps HLO
+small and compile times flat in depth).
+"""
+
+from repro.models.model_zoo import build_model, Model  # noqa: F401

@@ -1,0 +1,332 @@
+"""GQA attention: training (full / blockwise-causal), prefill, and decode.
+
+Three execution paths share one set of weights:
+
+* ``full``      -- materialized-scores attention for short sequences.
+* ``blockwise`` -- exact-causal blocked online-softmax attention. The
+  lower-triangular (q_block, kv_block) pairs are enumerated *statically*
+  and walked with one ``lax.scan``, so the compiled FLOPs equal the true
+  causal cost (no masked upper-triangle waste) and no (S, S) score tensor
+  is ever materialized. This is the pure-JAX structural twin of the
+  Pallas ``flash_attn`` kernel (used on real TPUs; see repro/kernels).
+* ``decode``    -- one-token attention against a KV cache.
+
+All paths accumulate softmax statistics in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.layers import (
+    Params,
+    apply_rope,
+    dense_init,
+    dtype_of,
+    head_rmsnorm,
+)
+
+NEG_INF = -1e30
+
+# Sequence length above which the blockwise path is used (module-level so
+# perf iterations can force the flash/blockwise path at shorter contexts;
+# see benchmarks/hillclimb.py).
+BLOCKWISE_THRESHOLD = 4096
+Q_BLOCK = 512
+KV_BLOCK = 512
+
+
+def set_blockwise_threshold(n: int) -> None:
+    global BLOCKWISE_THRESHOLD
+    BLOCKWISE_THRESHOLD = n
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def attention_init(key: jax.Array, cfg: ModelConfig,
+                   cross: bool = False) -> Params:
+    dt = dtype_of(cfg)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, dt),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, dt,
+                         scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _project_qkv(params: Params, xq: jax.Array, xkv: jax.Array,
+                 cfg: ModelConfig, q_positions: Optional[jax.Array],
+                 kv_positions: Optional[jax.Array],
+                 use_rope: bool) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project to (B, S, H, hd) / (B, Skv, K, hd) and apply qk-norm + RoPE."""
+    hd = cfg.resolved_head_dim
+    b, sq, _ = xq.shape
+    skv = xkv.shape[1]
+    q = (xq @ params["wq"]).reshape(b, sq, cfg.n_heads, hd)
+    k = (xkv @ params["wk"]).reshape(b, skv, cfg.n_kv_heads, hd)
+    v = (xkv @ params["wv"]).reshape(b, skv, cfg.n_kv_heads, hd)
+    if "q_norm" in params:
+        q = head_rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = head_rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, K, hd) -> (B, S, H, hd) by repeating each KV head."""
+    n_kv = k.shape[2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Full (materialized scores) attention
+# ---------------------------------------------------------------------------
+
+def _full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool) -> jax.Array:
+    b, sq, h, hd = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        skv = k.shape[1]
+        qi = jnp.arange(sq)[:, None] + (skv - sq)
+        ki = jnp.arange(skv)[None, :]
+        scores = jnp.where(ki <= qi, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise exact-causal attention (static lower-triangle pair walk)
+# ---------------------------------------------------------------------------
+
+def _blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         causal: bool, q_block: int = Q_BLOCK,
+                         kv_block: int = KV_BLOCK) -> jax.Array:
+    """Exact blocked online-softmax attention without materializing (S, S).
+
+    Enumerates the needed (q_block, kv_block) pairs statically (the lower
+    triangle when causal, the full grid otherwise) and walks them with one
+    ``lax.scan`` carrying per-q-block accumulators (acc, m, l). Compiled
+    FLOP count equals the exact attention cost.
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    nq = -(-sq // q_block)
+    nk = -(-skv // kv_block)
+    pad_q = nq * q_block - sq
+    pad_k = nk * kv_block - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qb = q.reshape(b, nq, q_block, h, hd)
+    kb = k.reshape(b, nk, kv_block, h, hd)
+    vb = v.reshape(b, nk, kv_block, h, hd)
+
+    # Static pair enumeration. With equal block sizes and right-aligned
+    # causal offset, q block i may attend kv block j iff the block's first
+    # query position >= the block's first key position boundary.
+    offset = skv - sq  # decode-style right alignment (0 for self-attn train)
+    pairs = []
+    for i in range(nq):
+        for j in range(nk):
+            if not causal:
+                pairs.append((i, j))
+                continue
+            q_lo = i * q_block + offset          # first absolute q position
+            k_lo = j * kv_block                  # first key position in block
+            if k_lo <= q_lo + q_block - 1:       # block intersects allowed region
+                pairs.append((i, j))
+    pair_arr = jnp.asarray(np.array(pairs, dtype=np.int32))  # (P, 2)
+
+    scale = 1.0 / np.sqrt(hd)
+    q_pos = jnp.arange(nq * q_block) + offset
+    k_pos = jnp.arange(nk * kv_block)
+
+    def body(carry, pair):
+        acc, m, l = carry           # acc: (b, nq, q_block, h, hd) fp32
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qb, i, axis=1, keepdims=False)
+        ki = jax.lax.dynamic_index_in_dim(kb, j, axis=1, keepdims=False)
+        vi = jax.lax.dynamic_index_in_dim(vb, j, axis=1, keepdims=False)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, ki).astype(jnp.float32) * scale
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * q_block, q_block)
+        kp = jax.lax.dynamic_slice_in_dim(k_pos, j * kv_block, kv_block)
+        mask = kp[None, :] <= qp[:, None] if causal else None
+        # also mask kv padding
+        kv_valid = kp < skv
+        valid = kv_valid[None, :] if mask is None else (mask & kv_valid[None, :])
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)                       # (b, h, q_block)
+        m_old = jax.lax.dynamic_index_in_dim(m, i, axis=1, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, i, axis=1, keepdims=False)
+        acc_old = jax.lax.dynamic_index_in_dim(acc, i, axis=1, keepdims=False)
+        m_new = jnp.maximum(m_old, jnp.transpose(m_blk, (0, 2, 1)))  # (b,q,h)
+        p = jnp.exp(s - jnp.transpose(m_new, (0, 2, 1))[:, :, :, None])
+        corr = jnp.exp(m_old - m_new)                     # (b, q, h)
+        l_new = l_old * corr + jnp.transpose(jnp.sum(p, axis=-1), (0, 2, 1))
+        pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vi.dtype), vi)
+        acc_new = acc_old * corr[..., None] + pv.astype(jnp.float32)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, acc_new, i, axis=1)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, axis=1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, axis=1)
+        return (acc, m, l), None
+
+    acc0 = jnp.zeros((b, nq, q_block, h, hd), jnp.float32)
+    m0 = jnp.full((b, nq, q_block, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nq, q_block, h), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), pair_arr)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(b, nq * q_block, h, hd)[:, :sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token vs. a KV cache)
+# ---------------------------------------------------------------------------
+
+def _decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                      cache_len: jax.Array) -> jax.Array:
+    """q: (B, 1, H, hd); caches: (B, S, K, hd); cache_len: () or (B,).
+
+    GQA is handled with a grouped einsum against the *unexpanded* cache:
+    materializing the repeated KV (jnp.repeat) would multiply the
+    decode-step HBM traffic by H/K (6x for grok) -- decode is
+    memory-bound, so this is the hot path's dominant cost."""
+    b, _, h, hd = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qg = q.reshape(b, 1, kh, g, hd)
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                        k_cache).astype(jnp.float32) * scale
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))   # (B or 1, S)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def n_pair_scan_lengths(cfg, shape) -> frozenset:
+    """Trip counts of the blockwise-attention pair scans a given
+    (arch, shape) cell lowers -- used by flash-kernel cost accounting
+    (launch/costing.py) to mark those scans VMEM-resident."""
+    out = set()
+    seqs = [shape.seq_len]
+    if cfg.is_encdec:
+        seqs.append(cfg.n_frames)
+    for s in seqs:
+        if s <= BLOCKWISE_THRESHOLD:
+            continue
+        nq = -(-s // Q_BLOCK)
+        nk = -(-s // KV_BLOCK)
+        # causal lower-triangle count (self-attn; offset 0)
+        causal_pairs = sum(min(i + 1, nk) for i in range(nq))
+        out.add(causal_pairs)
+        out.add(nq * nk)        # non-causal (encoder) variant
+    return frozenset(out)
+
+
+def self_attention(params: Params, x: jax.Array, cfg: ModelConfig,
+                   causal: bool = True,
+                   positions: Optional[jax.Array] = None,
+                   use_rope: bool = True,
+                   force_blockwise: Optional[bool] = None) -> jax.Array:
+    """Training/prefill self-attention over (B, S, d_model)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(params, x, x, cfg, positions, positions, use_rope)
+    use_blockwise = (s > BLOCKWISE_THRESHOLD if force_blockwise is None
+                     else force_blockwise)  # noqa: F823 (module global)
+    if use_blockwise:
+        o = _blockwise_attention(q, k, v, causal)
+    else:
+        o = _full_attention(q, k, v, causal)
+    return o.reshape(b, s, -1) @ params["wo"]
+
+
+def cross_attention(params: Params, x: jax.Array, ctx: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """Decoder->encoder cross-attention (no mask, no RoPE)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, ctx, cfg, None, None, use_rope=False)
+    o = _full_attention(q, k, v, causal=False)
+    return o.reshape(b, s, -1) @ params["wo"]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: Optional[int] = None) -> Dict[str, jax.Array]:
+    dt = dtype_of(cfg)
+    L = n_layers if n_layers is not None else cfg.n_layers
+    hd = cfg.resolved_head_dim
+    shape = (L, batch, max_len, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_self_attention(params: Params, x: jax.Array, cfg: ModelConfig,
+                          k_cache: jax.Array, v_cache: jax.Array,
+                          cache_len: jax.Array,
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B, 1, d). Returns (out, new_k_entry, new_v_entry).
+
+    The caller owns cache insertion (so the layer scan can batch the
+    dynamic_update_slice across layers).
+    """
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.reshape(cache_len, (1, 1)), (b, 1))
+    q, k_new, v_new = _project_qkv(params, x, x, cfg, pos, pos, use_rope=True)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), cache_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), cache_len, axis=1)
+    o = _decode_attention(q, k_cache, v_cache, cache_len + 1)
+    out = o.reshape(b, 1, -1) @ params["wo"]
+    return out, k_cache, v_cache
+
+
+def prefill_self_attention(params: Params, x: jax.Array, cfg: ModelConfig,
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill: causal attention returning output and the K/V to cache."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(params, x, x, cfg, positions, positions, True)
+    if s > BLOCKWISE_THRESHOLD:
+        o = _blockwise_attention(q, k, v, causal=True)
+    else:
+        o = _full_attention(q, k, v, causal=True)
+    out = o.reshape(b, s, -1) @ params["wo"]
+    return out, k, v

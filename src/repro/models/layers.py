@@ -1,0 +1,154 @@
+"""Shared layer primitives: norms, RoPE, MLPs, embeddings, initializers."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+
+def dtype_of(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, in_dim: int, out_dim: int,
+               dtype: jnp.dtype, scale: float = 1.0) -> jax.Array:
+    """Truncated-normal fan-in init (what the LM-family checkpoints use)."""
+    std = scale / np.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim),
+                                        jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, dim: int,
+               dtype: jnp.dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm / LayerNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype: jnp.dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def head_rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """qk-norm: RMS norm over the head dim of (..., n_heads, head_dim)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    exponent = np.arange(0, head_dim, 2, dtype=np.float32) / head_dim
+    return jnp.asarray(1.0 / (theta ** exponent))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE. x: (..., seq, n_heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]                      # (..., seq, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    dt = dtype_of(cfg)
+    d, ff = cfg.d_model, (d_ff or cfg.d_ff)
+    if cfg.mlp == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, d, ff, dt),
+            "w_up": dense_init(k2, d, ff, dt),
+            "w_down": dense_init(k3, ff, d, dt, scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": dense_init(k1, d, ff, dt),
+        "w_down": dense_init(k2, ff, d, dt, scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mlp_apply(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    return jax.nn.gelu(x @ params["w_up"]) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": embed_init(k1, cfg.vocab_size, cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dt)
+    return p
+
+
+def embed_tokens(params: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["tok"].T
+    return x @ params["out"]
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean CE. logits (..., V) fp32-accumulated; labels int (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

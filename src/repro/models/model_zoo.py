@@ -1,0 +1,99 @@
+"""Public model facade: one uniform interface over all families.
+
+``build_model(cfg)`` returns a :class:`Model` with ``init`` / ``loss_fn``
+/ ``forward`` / ``prefill`` / ``decode_step`` / ``init_cache`` plus
+``input_specs``/``make_batch`` helpers used by the dry-run launcher, the
+trainer, and the smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    forward: Callable[..., Tuple[jax.Array, jax.Array]]
+    loss_fn: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+    prefill: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+    decode_step: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+    init_cache: Callable[[int, int], Dict[str, jax.Array]]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    mod = encdec if cfg.is_encdec else transformer
+    if cfg.is_encdec:
+        def _init_cache(batch: int, max_len: int) -> Dict[str, jax.Array]:
+            raise NotImplementedError(
+                "enc-dec caches are created by prefill (cross-K/V need the "
+                "encoder output); use jax.eval_shape(prefill, ...) for specs")
+    else:
+        def _init_cache(batch: int, max_len: int) -> Dict[str, jax.Array]:
+            return transformer.init_cache(cfg, batch, max_len)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init_params(key, cfg),
+        forward=lambda p, b, **kw: mod.forward(p, b, cfg, **kw),
+        loss_fn=lambda p, b, **kw: mod.loss_fn(p, b, cfg, **kw),
+        prefill=lambda p, b, **kw: mod.prefill(p, b, cfg, **kw),
+        decode_step=lambda p, c, t: mod.decode_step(p, c, t, cfg),
+        init_cache=_init_cache,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input specs / synthetic batches
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the *batch* inputs of a given shape cell.
+
+    ``train``/``prefill`` kinds get the full-sequence inputs; ``decode``
+    gets the one-token inputs (the KV cache is part of the serve state,
+    not the batch -- see launch/dryrun.py).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+    }
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), f)
+    if cfg.is_encdec:
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model), f)
+    return specs
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig,
+               key: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
+    """Concrete synthetic batch matching :func:`batch_struct` (smoke tests,
+    examples, benchmarks)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    kt, kl, kp, kf = jax.random.split(key, 4)
+    out: Dict[str, jax.Array] = {}
+    for name, spec in batch_struct(cfg, shape).items():
+        if spec.dtype == jnp.int32:
+            k = kt if name == "tokens" else kl
+            out[name] = jax.random.randint(k, spec.shape, 0, cfg.vocab_size,
+                                           jnp.int32)
+        else:
+            k = kp if name == "patch_embeds" else kf
+            out[name] = (jax.random.normal(k, spec.shape, jnp.float32) * 0.02
+                         ).astype(spec.dtype)
+    return out

@@ -1,0 +1,239 @@
+"""Top-k MoE with sort-based (dropping) dispatch.
+
+Two parallel layouts, chosen from the expert count vs. the model-axis
+size (DESIGN.md S5):
+
+* **EP** (``n_experts % model_axis == 0``): experts sharded over the
+  ``model`` axis; tokens replicated across it; each model rank dispatches
+  its local tokens to its local experts and the partial outputs are
+  ``psum``-combined. (moonshot: 64 experts / 16 ranks = 4 each.)
+* **TP** (otherwise): every rank holds all experts with ``d_ff`` sliced
+  over ``model``; the down-projection partial sums are ``psum``-combined.
+  (grok: 8 experts on a 16-rank axis.)
+
+Both run inside ``shard_map``; expert weights are additionally FSDP-sharded
+over the data axes in HBM and all-gathered just-in-time for compute.
+Dispatch is sort-based (argsort by expert id + capacity drop), so compiled
+FLOPs track *active* expert FLOPs (x capacity factor) instead of the
+dense all-experts product -- the same reason the paper's Logging Unit
+logs only updated words instead of whole lines.
+
+Without a mesh context (CPU unit tests) the pure-local path runs: same
+math, no collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.distributed.context import get_mesh_context
+from repro.models.layers import Params, dense_init, dtype_of, mlp_apply, mlp_init
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = dtype_of(cfg)
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.expert_d_ff
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+
+    def stack(k: jax.Array, in_dim: int, out_dim: int, scale: float = 1.0) -> jax.Array:
+        keys = jax.random.split(k, E)
+        return jnp.stack([dense_init(ki, in_dim, out_dim, dt, scale) for ki in keys])
+
+    p = {
+        "router": dense_init(kr, d, E, jnp.float32),
+        "w_up": stack(ku, d, ff),
+        "w_down": stack(kd, ff, d, scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = stack(kg, d, ff)
+    if cfg.n_shared_experts:
+        # shared experts fused into one wide dense MLP
+        p["shared"] = mlp_init(ks, cfg, d_ff=ff * cfg.n_shared_experts)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Local dispatch + expert compute (runs per shard)
+# ---------------------------------------------------------------------------
+
+def _dispatch_and_compute(x_flat: jax.Array, params: Params, cfg: ModelConfig,
+                          e_start: int, e_count: int,
+                          w_gate: Optional[jax.Array], w_up: jax.Array,
+                          w_down: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based dispatch of (T, d) tokens to experts [e_start, e_start+e_count).
+
+    Returns (partial_out (T, d), aux_loss ()). ``w_*`` are the *local*
+    (possibly ff-sliced) expert stacks of shape (e_count, d|ff, ff|d).
+    """
+    T, d = x_flat.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (x_flat @ params["router"].astype(x_flat.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    gate, idx = jax.lax.top_k(probs, K)                         # (T, K)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # Load-balancing aux loss (Switch): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    capacity = max(1, int(cfg.capacity_factor * T * K / E))
+    flat_e = idx.reshape(-1)                                    # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    pos = jnp.arange(T * K, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    local = (sorted_e >= e_start) & (sorted_e < e_start + e_count)
+    valid = (pos < capacity) & local
+    slot = (sorted_e.astype(jnp.int32) - e_start) * capacity + pos
+    slot = jnp.where(valid, slot, e_count * capacity)           # dropped -> OOB
+    tok = (order // K).astype(jnp.int32)
+
+    buf = jnp.zeros((e_count * capacity, d), x_flat.dtype)
+    buf = buf.at[slot].set(x_flat[tok], mode="drop")
+    h = buf.reshape(e_count, capacity, d)
+    up = jnp.einsum("ecd,edf->ecf", h, w_up)
+    if w_gate is not None:
+        act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, w_gate)) * up
+    else:
+        act = jax.nn.gelu(up)
+    out_buf = jnp.einsum("ecf,efd->ecd", act, w_down)
+    out_buf = out_buf.reshape(e_count * capacity, d)
+
+    safe_slot = jnp.where(valid, slot, 0)
+    y = out_buf[safe_slot] * valid[:, None]
+    w_sorted = gate.reshape(-1)[order].astype(x_flat.dtype)
+    out = jnp.zeros((T, d), x_flat.dtype)
+    out = out.at[tok].add(y * w_sorted[:, None])
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Public apply
+# ---------------------------------------------------------------------------
+
+def moe_apply(params: Params, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss ())."""
+    b, s, d = x.shape
+    ctx = get_mesh_context()
+    E = cfg.n_experts
+    has_gate = cfg.mlp == "swiglu"
+
+    if ctx is None or ctx.model_axis is None:
+        out, aux = _dispatch_and_compute(
+            x.reshape(-1, d), params, cfg, 0, E,
+            params.get("w_gate"), params["w_up"], params["w_down"])
+        out = out.reshape(b, s, d)
+    else:
+        from repro.distributed.sharding import sanitize_spec
+
+        mesh = ctx.mesh
+        model_ax = ctx.model_axis
+        n_model = ctx.model_size
+        fsdp = ctx.fsdp_axes
+        ep_mode = E % n_model == 0 and E >= n_model
+        batch_spec = sanitize_spec(P(ctx.batch_axes, None, None),
+                                   x.shape, mesh)
+        if ep_mode:
+            w_spec = P(model_ax, None, fsdp)       # experts over model, ff FSDP
+            wd_spec = P(model_ax, fsdp, None)
+        else:
+            w_spec = P(None, None, (model_ax,) + fsdp)  # ff over model+FSDP
+            wd_spec = P(None, (model_ax,) + fsdp, None)
+        specs = {
+            "router": P(None, None),
+            "w_up": sanitize_spec(w_spec, params["w_up"].shape, mesh),
+            "w_down": sanitize_spec(wd_spec, params["w_down"].shape, mesh),
+        }
+        if has_gate:
+            specs["w_gate"] = specs["w_up"]
+        if "shared" in params:
+            sh_up = sanitize_spec(P(None, (model_ax,) + fsdp),
+                                  params["shared"]["w_up"].shape, mesh)
+            sh_dn = sanitize_spec(P((model_ax,) + fsdp, None),
+                                  params["shared"]["w_down"].shape, mesh)
+            specs["shared"] = {"w_up": sh_up, "w_down": sh_dn}
+            if has_gate:
+                specs["shared"]["w_gate"] = sh_up
+        in_specs = (batch_spec, specs)
+        out_specs = (batch_spec, P())
+
+        def _axes_in(spec: P, dim: int) -> tuple:
+            """Mesh axes sharding dim ``dim`` of a sanitized spec."""
+            entry = tuple(spec)[dim] if dim < len(tuple(spec)) else None
+            if entry is None:
+                return ()
+            return entry if isinstance(entry, tuple) else (entry,)
+
+        def _gather(w, spec, dim, keep=()):
+            """All-gather the storage-only axes of ``dim`` (all but keep)."""
+            axes = tuple(a for a in _axes_in(spec, dim) if a not in keep)
+            if axes:
+                w = jax.lax.all_gather(w, axes, axis=dim, tiled=True)
+            return w
+
+        # does the model axis actually split the compute? (sanitizer may
+        # have dropped it in reduced/test configs -> psum would
+        # double-count replicated work without the 1/n correction)
+        experts_split = model_ax in _axes_in(
+            specs["w_up"], 0 if ep_mode else 2)
+        shared_split = ("shared" in params and model_ax in _axes_in(
+            specs["shared"]["w_up"], 1))
+
+        def sharded(x_blk, p_blk):
+            # JIT-time FSDP: gather the storage-sharded dims for compute,
+            # keeping only the compute-parallel model axis sharded.
+            keep = (model_ax,)
+            wg = p_blk.get("w_gate")
+            wu = _gather(p_blk["w_up"], specs["w_up"], 2, keep)
+            wd = _gather(p_blk["w_down"], specs["w_down"], 1, keep)
+            if wg is not None:
+                wg = _gather(wg, specs["w_up"], 2, keep)
+            if ep_mode:
+                e_count = E // n_model
+                e_start = jax.lax.axis_index(model_ax) * e_count
+            else:
+                e_count, e_start = E, 0
+            xf = x_blk.reshape(-1, d)
+            out, aux = _dispatch_and_compute(
+                xf, p_blk, cfg, e_start, e_count, wg, wu, wd)
+            if not (ep_mode or experts_split):
+                out = out / n_model            # replicated compute
+            if "shared" in p_blk:
+                sh = p_blk["shared"]
+                sw_up = _gather(sh["w_up"], specs["shared"]["w_up"], 1, keep)
+                sw_dn = _gather(sh["w_down"], specs["shared"]["w_down"], 0, keep)
+                if has_gate:
+                    sw_g = _gather(sh["w_gate"], specs["shared"]["w_up"], 1, keep)
+                    g = jax.nn.silu(xf @ sw_g)
+                    shared_out = (g * (xf @ sw_up)) @ sw_dn
+                else:
+                    shared_out = jax.nn.gelu(xf @ sw_up) @ sw_dn
+                if not shared_split:
+                    shared_out = shared_out / n_model
+                out = out + shared_out
+            out = jax.lax.psum(out, model_ax)
+            aux = jax.lax.pmean(aux, model_ax)
+            return out.reshape(x_blk.shape), aux
+
+        # EP: e_start differs per model rank -> dispatch masks differ; the
+        # psum makes outputs replicated again. check_vma is disabled because
+        # x is intentionally replicated over the model axis on entry.
+        sm_params = {k: params[k] for k in specs}
+        out, aux = jax.shard_map(
+            sharded, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False)(x, sm_params)
+
+    if ctx is None and "shared" in params:
+        xf = x.reshape(-1, d)
+        out = out + mlp_apply(params["shared"], xf, cfg).reshape(b, s, d)
+    return out, aux

@@ -1,0 +1,256 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: within-chunk quadratic
+(matmul-form, MXU-friendly) + across-chunk linear recurrence via
+``lax.scan``. Decode is the O(1) recurrent state update. A Pallas kernel
+twin of the chunked core lives in ``repro/kernels/ssd_scan``.
+
+Projections are kept as *separate* matrices (z, x, B, C, dt) rather than
+one fused ``in_proj``: the fused layout puts component boundaries at
+positions that do not align with the tensor-parallel ``model`` axis, which
+would force activation resharding after every slice. With split
+projections, SSD heads shard cleanly over ``model`` (d_inner % model == 0)
+while the small B/C/dt projections stay replicated. Single B/C group
+(``ngroups=1``) as in the mamba2-2.7b config.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.layers import Params, dense_init, dtype_of
+
+SSMState = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def ssm_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = dtype_of(cfg)
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_n_heads
+    kz, kx, kb, kc, kdt, kconv, kout = jax.random.split(key, 7)
+    dt_init = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(kdt, (nh,), jnp.float32)
+                * (np.log(0.1) - np.log(0.001)) + np.log(0.001))))
+
+    def conv_w(k: jax.Array, ch: int) -> jax.Array:
+        return (jax.random.normal(k, (cfg.ssm_conv, ch), jnp.float32)
+                * (1.0 / np.sqrt(cfg.ssm_conv * ch))).astype(dt)
+
+    kcx, kcb, kcc = jax.random.split(kconv, 3)
+    return {
+        "w_z": dense_init(kz, d, di, dt),
+        "w_x": dense_init(kx, d, di, dt),
+        "w_B": dense_init(kb, d, n, dt),
+        "w_C": dense_init(kc, d, n, dt),
+        "w_dt": dense_init(kdt, d, nh, dt),
+        "conv_wx": conv_w(kcx, di),
+        "conv_bx": jnp.zeros((di,), dt),
+        "conv_wB": conv_w(kcb, n),
+        "conv_bB": jnp.zeros((n,), dt),
+        "conv_wC": conv_w(kcc, n),
+        "conv_bC": jnp.zeros((n,), dt),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_init,
+        "norm_scale": jnp.ones((di,), dt),
+        "out_proj": dense_init(kout, di, d, dt,
+                               scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Pieces
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NLC", "LIO", "NLC"),
+        feature_group_count=x.shape[-1])
+    return out + b.astype(x.dtype)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float) -> jax.Array:
+    """Mamba-2 gated RMSNorm: norm(y * silu(z)) * scale."""
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (b, l, h, p); dt: (b, l, h) (post-softplus); A: (h,) (negative);
+    B, C: (b, l, n). Returns (y (b, l, h, p), final_state (b, h, p, n)).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    L = l + pad
+    nc = L // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * A[None, None, None, :]                    # (b, nc, q, h) <= 0
+    seg = jnp.cumsum(dA, axis=2)                         # within-chunk cumsum
+    seg_last = seg[:, :, -1:, :]                         # (b, nc, 1, h)
+
+    # ---- intra-chunk (quadratic, matmul form) ----
+    G = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32),
+                   Bc.astype(jnp.float32))               # (b, nc, q, q)
+    # decay(i, j) = exp(seg_i - seg_j) for i >= j
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (b, nc, q, k, h)
+    ii = jnp.arange(chunk)
+    tri = ii[:, None] >= ii[None, :]
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    att = G[:, :, :, :, None] * decay * dtc[:, :, None, :, :]  # (b,nc,q,k,h)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att.astype(x.dtype), xc)
+
+    # ---- chunk summary states ----
+    decay_to_end = jnp.exp(seg_last - seg)               # (b, nc, q, h)
+    weighted_x = xc * (dtc * decay_to_end)[..., None].astype(x.dtype)
+    S = jnp.einsum("bcqn,bcqhp->bchpn", Bc, weighted_x)  # (b, nc, h, p, n)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(seg_last[:, :, 0, :])          # (b, nc, h)
+
+    def step(state, inp):
+        s_c, dec = inp                                   # (b,h,p,n), (b,h)
+        prior = state
+        state = dec[..., None, None] * state + s_c.astype(jnp.float32)
+        return state, prior
+
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+    S_t = jnp.moveaxis(S, 1, 0)                          # (nc, b, h, p, n)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)              # (nc, b, h)
+    final_state, priors = jax.lax.scan(step, state0, (S_t, dec_t))
+    prior_states = jnp.moveaxis(priors, 0, 1)            # (b, nc, h, p, n)
+
+    # ---- inter-chunk contribution ----
+    Cdec = (Cc[:, :, :, None, :].astype(jnp.float32)
+            * jnp.exp(seg)[..., None])                   # (b, nc, q, h, n)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp",
+                         Cdec.astype(x.dtype), prior_states.astype(x.dtype))
+    y = (y_intra + y_inter).reshape(b, L, h, p)[:, :l]
+    return y, final_state.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixer: full-sequence apply (train / prefill)
+# ---------------------------------------------------------------------------
+
+def ssm_apply(params: Params, u: jax.Array, cfg: ModelConfig,
+              init_state: Optional[jax.Array] = None,
+              return_cache: bool = False):
+    """u: (B, L, d_model) -> (out, final_state) or, with ``return_cache``,
+    (out, (conv_cache (B, K-1, di+2n), ssd_state (B, nh, p, n)))."""
+    bsz, l, _ = u.shape
+    di, n, nh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    z = u @ params["w_z"]
+    xr_raw = u @ params["w_x"]
+    Br_raw = u @ params["w_B"]
+    Cr_raw = u @ params["w_C"]
+    dt_raw = u @ params["w_dt"]
+    xr = jax.nn.silu(_causal_conv(xr_raw, params["conv_wx"], params["conv_bx"]))
+    Bm = jax.nn.silu(_causal_conv(Br_raw, params["conv_wB"], params["conv_bB"]))
+    Cm = jax.nn.silu(_causal_conv(Cr_raw, params["conv_wC"], params["conv_bC"]))
+    xs = xr.reshape(bsz, l, nh, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    y, state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk, init_state)
+    y = y + xs * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, l, di)
+    y = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if not return_cache:
+        return out, state
+    # conv cache = last K-1 *pre-conv* rows (what decode's window expects)
+    k = cfg.ssm_conv
+    raw = jnp.concatenate([xr_raw, Br_raw, Cr_raw], axis=-1)  # (B, L, di+2n)
+    if l >= k - 1:
+        tail = raw[:, l - (k - 1):, :]
+    else:
+        tail = jnp.pad(raw, ((0, 0), (k - 1 - l, 0), (0, 0)))
+    return out, (tail, state)
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) recurrent update
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int,
+                   n_layers: Optional[int] = None) -> SSMState:
+    dt = dtype_of(cfg)
+    L = n_layers if n_layers is not None else cfg.n_layers
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, di + 2 * n), dt),
+        "ssd": jnp.zeros((L, batch, cfg.ssm_n_heads, cfg.ssm_head_dim, n), dt),
+    }
+
+
+def ssm_decode_step(params: Params, u: jax.Array, cfg: ModelConfig,
+                    conv_state: jax.Array, ssd_state: jax.Array,
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. u: (B, 1, d). conv_state: (B, K-1, di+2n);
+    ssd_state: (B, nh, p, n). Returns (out, conv_state, ssd_state)."""
+    bsz = u.shape[0]
+    di, n, nh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    ut = u[:, 0, :]
+    z = ut @ params["w_z"]
+    xr = ut @ params["w_x"]
+    Br = ut @ params["w_B"]
+    Cr = ut @ params["w_C"]
+    dt_raw = ut @ params["w_dt"]
+
+    new_in = jnp.concatenate([xr, Br, Cr], axis=-1)       # (B, di+2n)
+    window = jnp.concatenate([conv_state, new_in[:, None, :]], axis=1)
+    conv_w = jnp.concatenate(
+        [params["conv_wx"], params["conv_wB"], params["conv_wC"]], axis=-1)
+    conv_b = jnp.concatenate(
+        [params["conv_bx"], params["conv_bB"], params["conv_bC"]], axis=-1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, conv_w.astype(u.dtype))
+    mixed = jax.nn.silu(conv_out + conv_b.astype(u.dtype))
+    new_conv_state = window[:, 1:, :]
+    xs = mixed[..., :di].reshape(bsz, nh, p)
+    Bm = mixed[..., di:di + n]
+    Cm = mixed[..., di + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, :])
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                   # (B, nh)
+    upd = (dt[..., None] * xs.astype(jnp.float32))[..., :, None] \
+        * Bm.astype(jnp.float32)[:, None, None, :]                  # (B,nh,p,n)
+    state = (dA[..., None, None] * ssd_state.astype(jnp.float32) + upd)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(bsz, di).astype(u.dtype)
+    y = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, new_conv_state.astype(conv_state.dtype), state.astype(ssd_state.dtype)

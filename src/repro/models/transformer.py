@@ -1,0 +1,268 @@
+"""Decoder-only transformer assembly for the dense / moe / ssm / hybrid /
+vlm families.
+
+Layer stacks use ``lax.scan`` over parameters stacked on a leading layer
+axis: one layer's HLO is compiled once regardless of depth (95-layer
+deepseek compiles as fast as 2-layer smoke configs), and remat wraps the
+scanned body.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import (
+    constrain_batch,
+    constrain_gathered,
+    constrain_logits,
+)
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    Params,
+    cross_entropy_loss,
+    dtype_of,
+    embed_tokens,
+    embedding_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    unembed,
+)
+from repro.models.moe import moe_apply, moe_init
+
+Cache = Dict[str, jax.Array]
+
+MOE_AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Layer init / apply (family dispatch)
+# ---------------------------------------------------------------------------
+
+def init_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    ka, km, ks, kn = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    p: Params = {}
+    if cfg.family == "ssm":
+        p["norm"] = rmsnorm_init(cfg.d_model, dt)
+        p["ssm"] = ssm_mod.ssm_init(ks, cfg)
+        return p
+    p["ln1"] = rmsnorm_init(cfg.d_model, dt)
+    p["ln2"] = rmsnorm_init(cfg.d_model, dt)
+    p["attn"] = attn.attention_init(ka, cfg)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm_mod.ssm_init(ks, cfg)
+        p["norm_attn"] = rmsnorm_init(cfg.d_model, dt)
+        p["norm_ssm"] = rmsnorm_init(cfg.d_model, dt)
+    if cfg.is_moe:
+        p["moe"] = moe_init(km, cfg)
+    else:
+        p["mlp"] = mlp_init(km, cfg)
+    return p
+
+
+def _ffn(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    if cfg.is_moe:
+        return moe_apply(p["moe"], x, cfg)
+    return mlp_apply(p["mlp"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def layer_apply(p: Params, x: jax.Array, cfg: ModelConfig,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence (train) layer. Returns (x, aux_loss).
+
+    (An explicit per-block gather point -- constrain_gathered after each
+    norm -- was tried for sequence parallelism and REFUTED: GSPMD bounced
+    between layouts, adding all-to-alls and re-growing the all-reduces;
+    see EXPERIMENTS.md SSPerf iteration T2.)"""
+    if cfg.family == "ssm":
+        h = rmsnorm(p["norm"], x, cfg.norm_eps)
+        h, _ = ssm_mod.ssm_apply(p["ssm"], h, cfg)
+        return x + h, jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.family == "hybrid":
+        a = attn.self_attention(p["attn"], h, cfg)
+        s, _ = ssm_mod.ssm_apply(p["ssm"], h, cfg)
+        mixed = 0.5 * (rmsnorm(p["norm_attn"], a, cfg.norm_eps)
+                       + rmsnorm(p["norm_ssm"], s, cfg.norm_eps))
+        x = x + mixed
+    else:
+        x = x + attn.self_attention(p["attn"], h, cfg)
+    f, aux = _ffn(p, rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x + f, aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": embedding_init(ke, cfg),
+        "layers": stacked,
+        "final_norm": rmsnorm_init(cfg.d_model, dtype_of(cfg)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward (train)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: Params, batch: Dict[str, jax.Array],
+                  cfg: ModelConfig) -> jax.Array:
+    x = embed_tokens(params["embed"], batch["tokens"])
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        n_p = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, n_p:, :]], axis=1)
+    return constrain_batch(x)
+
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            remat: str = "full") -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, V), aux_loss)."""
+    x = _embed_inputs(params, batch, cfg)
+
+    def body(x, layer_params):
+        y, aux = layer_apply(layer_params, x, cfg)
+        return constrain_batch(y), aux
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "selective":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    x, auxs = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)
+    return constrain_logits(logits), jnp.sum(auxs)
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            remat: str = "full") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(params, batch, cfg, remat=remat)
+    mask = batch.get("mask")
+    loss = cross_entropy_loss(logits, batch["labels"], mask)
+    total = loss + MOE_AUX_COEF * aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    cache: Cache = {"length": jnp.zeros((), jnp.int32)}
+    if cfg.family != "ssm":
+        kv = attn.init_kv_cache(cfg, batch, max_len)
+        cache["k"], cache["v"] = kv["k"], kv["v"]
+    if cfg.family in ("ssm", "hybrid"):
+        s = ssm_mod.init_ssm_cache(cfg, batch)
+        cache["conv"], cache["ssd"] = s["conv"], s["ssd"]
+    return cache
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            max_len: Optional[int] = None) -> Tuple[jax.Array, Cache]:
+    """Process the prompt; returns (logits (B, S, V), filled cache)."""
+    tokens = batch["tokens"]
+    bsz, seq = tokens.shape
+    max_len = max_len or seq
+    x = _embed_inputs(params, batch, cfg)
+
+    def body(x, layer_params):
+        ys: Dict[str, jax.Array] = {}
+        if cfg.family == "ssm":
+            h = rmsnorm(layer_params["norm"], x, cfg.norm_eps)
+            out, cache_bits = ssm_mod.ssm_apply(
+                layer_params["ssm"], h, cfg, return_cache=True)
+            ys["conv"], ys["ssd"] = cache_bits
+            x = x + out
+        else:
+            h = rmsnorm(layer_params["ln1"], x, cfg.norm_eps)
+            a, k, v = attn.prefill_self_attention(layer_params["attn"], h, cfg)
+            pad = max_len - seq
+            if pad > 0:
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            ys["k"], ys["v"] = k, v
+            if cfg.family == "hybrid":
+                s, cache_bits = ssm_mod.ssm_apply(
+                    layer_params["ssm"], h, cfg, return_cache=True)
+                ys["conv"], ys["ssd"] = cache_bits
+                mixed = 0.5 * (rmsnorm(layer_params["norm_attn"], a, cfg.norm_eps)
+                               + rmsnorm(layer_params["norm_ssm"], s, cfg.norm_eps))
+                x = x + mixed
+            else:
+                x = x + a
+            f, _ = _ffn(layer_params, rmsnorm(layer_params["ln2"], x, cfg.norm_eps), cfg)
+            x = x + f
+        return constrain_batch(x), ys
+
+    x, ys = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)
+    cache: Cache = {"length": jnp.asarray(seq, jnp.int32)}
+    cache.update(ys)
+    return constrain_logits(logits), cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+def decode_step(params: Params, cache: Cache, tokens: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, Cache]:
+    """tokens: (B,) int32. Returns (logits (B, V), updated cache)."""
+    x = embed_tokens(params["embed"], tokens[:, None])
+    x = constrain_batch(x)
+    length = cache["length"]
+
+    xs: Dict[str, jax.Array] = {}
+    for k in ("k", "v", "conv", "ssd"):
+        if k in cache:
+            xs[k] = cache[k]
+
+    def body(x, per_layer):
+        layer_params, slices = per_layer
+        ys: Dict[str, jax.Array] = {}
+        if cfg.family == "ssm":
+            h = rmsnorm(layer_params["norm"], x, cfg.norm_eps)
+            out, conv_s, ssd_s = ssm_mod.ssm_decode_step(
+                layer_params["ssm"], h, cfg, slices["conv"], slices["ssd"])
+            ys["conv"], ys["ssd"] = conv_s, ssd_s
+            x = x + out
+            return x, ys
+        h = rmsnorm(layer_params["ln1"], x, cfg.norm_eps)
+        a, new_k, new_v = attn.decode_self_attention(
+            layer_params["attn"], h, cfg, slices["k"], slices["v"], length)
+        ys["k"], ys["v"] = new_k, new_v
+        if cfg.family == "hybrid":
+            s, conv_s, ssd_s = ssm_mod.ssm_decode_step(
+                layer_params["ssm"], h, cfg, slices["conv"], slices["ssd"])
+            ys["conv"], ys["ssd"] = conv_s, ssd_s
+            mixed = 0.5 * (rmsnorm(layer_params["norm_attn"], a, cfg.norm_eps)
+                           + rmsnorm(layer_params["norm_ssm"], s, cfg.norm_eps))
+            x = x + mixed
+        else:
+            x = x + a
+        f, _ = _ffn(layer_params, rmsnorm(layer_params["ln2"], x, cfg.norm_eps), cfg)
+        return x + f, ys
+
+    x, ys = jax.lax.scan(body, x, (params["layers"], xs))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, 0, :], cfg)
+    new_cache: Cache = {"length": length + 1}
+    new_cache.update(ys)
+    return logits, new_cache

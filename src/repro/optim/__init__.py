@@ -1,0 +1,11 @@
+"""Optimizers + LR schedules (sharded-state friendly)."""
+
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    make_optimizer,
+)
+from repro.optim.schedules import make_schedule  # noqa: F401

@@ -1,0 +1,201 @@
+"""Optimizers as pure (init, update) pairs over parameter pytrees.
+
+* AdamW  -- fp32 moments (+ optional fp32 master copy), the default.
+* Adafactor -- factored second moment, for the >=67B configs whose AdamW
+  state would not fit 16 GB/chip HBM at 256 chips (DESIGN.md S8).
+* SGD-momentum -- for completeness / ablations.
+
+Optimizer state tensors inherit the parameter sharding (FSDP x TP), so
+ZeRO-style partitioning falls out of the sharding rules for free.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+OptState = Dict[str, Any]
+
+
+def _tree_zeros_like(tree: Any, dtype: Optional[jnp.dtype] = None) -> Any:
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-6))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params: Any, cfg: TrainConfig) -> OptState:
+    master = jnp.dtype(cfg.master_dtype)
+    state: OptState = {
+        "m": _tree_zeros_like(params, master),
+        "v": _tree_zeros_like(params, master),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_dtype != cfg.param_dtype:
+        state["master"] = jax.tree.map(lambda x: x.astype(master), params)
+    return state
+
+
+def adamw_update(grads: Any, state: OptState, params: Any, lr: jax.Array,
+                 cfg: TrainConfig) -> Tuple[Any, OptState]:
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    ref = state.get("master", params)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mh = m / c1
+        vh = v / c2
+        step = mh / (jnp.sqrt(vh) + eps) + wd * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * step)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_p = jax.tree.leaves(ref)
+    new_m, new_v, new_ref = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        m2, v2, p2 = upd(g, m, v, p)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_ref.append(p2)
+    param_dtype = jax.tree.leaves(params)[0].dtype
+    new_params = jax.tree.unflatten(
+        treedef, [p.astype(param_dtype) for p in new_ref])
+    new_state: OptState = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "count": count,
+    }
+    if "master" in state:
+        new_state["master"] = jax.tree.unflatten(
+            treedef, [p.astype(jnp.dtype(cfg.master_dtype)) for p in new_ref])
+    return new_params, new_state
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment by default)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params: Any, cfg: TrainConfig) -> OptState:
+    def factored(x):
+        if x.ndim >= 2:
+            return {
+                "vr": jnp.zeros(x.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(x.shape, jnp.float32)}
+
+    return {
+        "vs": jax.tree.map(factored, params,
+                           is_leaf=lambda x: isinstance(x, jax.Array)),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads: Any, state: OptState, params: Any, lr: jax.Array,
+                     cfg: TrainConfig) -> Tuple[Any, OptState]:
+    eps = 1e-30
+    d = 1.0 - cfg.beta2          # decay toward running stat
+    count = state["count"] + 1
+    beta2t = 1.0 - (count.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, v, p):
+        g32 = jnp.square(g.astype(jnp.float32)) + eps
+        if g.ndim >= 2:
+            vr = beta2t * v["vr"] + (1 - beta2t) * jnp.mean(g32, axis=-1)
+            vc = beta2t * v["vc"] + (1 - beta2t) * jnp.mean(g32, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., :, None] * vc[..., None, :]
+                / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None],
+                              eps))
+            newv = {"vr": vr, "vc": vc}
+        else:
+            newv = {"v": beta2t * v["v"] + (1 - beta2t) * g32}
+            denom = jnp.sqrt(newv["v"])
+        step = g.astype(jnp.float32) / jnp.maximum(denom, 1e-12)
+        # update clipping (Adafactor's RMS-1 rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-12)
+        step = step / jnp.maximum(1.0, rms)
+        p32 = p.astype(jnp.float32)
+        return newv, (p32 - lr * (step + cfg.weight_decay * p32)).astype(p.dtype)
+
+    flat_g = jax.tree.leaves(grads)
+    flat_p, treedef = jax.tree.flatten(params)
+    is_v = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)  # noqa: E731
+    flat_v = jax.tree.leaves(state["vs"], is_leaf=is_v)
+    new_v, new_p = [], []
+    for g, v, p in zip(flat_g, flat_v, flat_p):
+        v2, p2 = upd(g, v, p)
+        new_v.append(v2)
+        new_p.append(p2)
+    return (jax.tree.unflatten(treedef, new_p),
+            {"vs": jax.tree.unflatten(treedef, new_v), "count": count})
+
+
+# ---------------------------------------------------------------------------
+# SGD momentum
+# ---------------------------------------------------------------------------
+
+def sgd_init(params: Any, cfg: TrainConfig) -> OptState:
+    return {"mom": _tree_zeros_like(params, jnp.float32),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(grads: Any, state: OptState, params: Any, lr: jax.Array,
+               cfg: TrainConfig) -> Tuple[Any, OptState]:
+    def upd(g, mo, p):
+        mo = cfg.beta1 * mo + g.astype(jnp.float32)
+        return mo, (p.astype(jnp.float32) - lr * mo).astype(p.dtype)
+
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["mom"])
+    flat_p, treedef = jax.tree.flatten(params)
+    new_m, new_p = [], []
+    for g, mo, p in zip(flat_g, flat_m, flat_p):
+        m2, p2 = upd(g, mo, p)
+        new_m.append(m2)
+        new_p.append(p2)
+    return (jax.tree.unflatten(treedef, new_p),
+            {"mom": jax.tree.unflatten(treedef, new_m),
+             "count": state["count"] + 1})
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+def make_optimizer(cfg: TrainConfig) -> Tuple[Callable, Callable]:
+    if cfg.optimizer == "adamw":
+        return (lambda p: adamw_init(p, cfg),
+                lambda g, s, p, lr: adamw_update(g, s, p, lr, cfg))
+    if cfg.optimizer == "adafactor":
+        return (lambda p: adafactor_init(p, cfg),
+                lambda g, s, p, lr: adafactor_update(g, s, p, lr, cfg))
+    if cfg.optimizer == "sgd":
+        return (lambda p: sgd_init(p, cfg),
+                lambda g, s, p, lr: sgd_update(g, s, p, lr, cfg))
+    raise ValueError(f"unknown optimizer {cfg.optimizer}")

@@ -1,0 +1,30 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def make_schedule(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    base = cfg.learning_rate
+    warmup = max(cfg.warmup_steps, 1)
+    total = max(cfg.total_steps, warmup + 1)
+
+    def schedule(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = base * jnp.minimum(step / warmup, 1.0)
+        if cfg.schedule == "constant":
+            return warm
+        frac = jnp.clip((step - warmup) / (total - warmup), 0.0, 1.0)
+        if cfg.schedule == "linear":
+            decay = 1.0 - frac
+        else:  # cosine
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, base * decay)
+
+    return schedule

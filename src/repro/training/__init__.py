@@ -1,0 +1,10 @@
+"""Training / serving steps + the fault-tolerant trainer."""
+
+from repro.training.steps import (  # noqa: F401
+    TrainState,
+    make_eval_step,
+    make_serve_fns,
+    make_train_step,
+    init_train_state,
+)
+from repro.training.trainer import Trainer  # noqa: F401

@@ -1,0 +1,135 @@
+"""Jitted step functions: train (fwd+bwd+opt+ReCXL replication), eval,
+prefill and decode.
+
+The train step is where the paper's mechanism meets the training loop:
+
+    grads  = d(loss)/d(params)           # fwd+bwd (GSPMD collectives)
+    update = optimizer(grads)            # the "store"
+    logs'  = REPL/VAL of update -> replica Logging Units (variant-shaped)
+    commit = params' usable only after replication validated
+
+``writethrough`` (the paper's WT strawman) instead barriers the step on a
+synchronous copy into a persistent-tier staging buffer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RunConfig
+from repro.core.replication import ReplicationEngine, _tie
+from repro.distributed.context import get_mesh_context
+from repro.models.model_zoo import Model
+from repro.optim import make_optimizer, make_schedule
+from repro.optim.optimizers import clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    logs: Dict[str, jax.Array]          # ReCXL replica log rings
+    step: jax.Array                     # int32
+    wt_buffer: Optional[Any] = None     # writethrough staging tier
+
+
+def init_train_state(run: RunConfig, model: Model, key: jax.Array,
+                     engine: Optional[ReplicationEngine]) -> TrainState:
+    params = model.init(key)
+    opt_init, _ = make_optimizer(run.train)
+    logs = engine.init_logs() if engine is not None and \
+        run.replication.is_replicating else {}
+    wt = None
+    if run.replication.variant == "writethrough":
+        wt = jax.tree.map(jnp.zeros_like, params)
+    return TrainState(params=params, opt_state=opt_init(params), logs=logs,
+                      step=jnp.zeros((), jnp.int32), wt_buffer=wt)
+
+
+def make_train_step(run: RunConfig, model: Model,
+                    engine: Optional[ReplicationEngine]
+                    ) -> Callable[[TrainState, Dict[str, jax.Array]],
+                                  Tuple[TrainState, Dict[str, jax.Array]]]:
+    _, opt_update = make_optimizer(run.train)
+    schedule = make_schedule(run.train)
+    rep = run.replication
+    remat = run.train.remat
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        def loss_fn(p):
+            loss, metrics = model.loss_fn(p, batch, remat=remat)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        grads, gnorm = clip_by_global_norm(grads, run.train.grad_clip)
+        lr = schedule(state.step)
+        new_params, new_opt = opt_update(grads, state.opt_state,
+                                         state.params, lr)
+
+        logs = state.logs
+        wt_buffer = state.wt_buffer
+        if engine is not None and rep.is_replicating:
+            logs, new_params = engine.replicate(
+                new_params, logs, state.step, new_params)
+        elif rep.variant == "writethrough":
+            # WT: synchronous persist -- the step's output state is
+            # barrier-tied to the staging-buffer copy, serializing every
+            # update behind the persistent tier (the paper's 7.6x path;
+            # quantified by the protocol simulator).
+            wt_buffer = jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16), new_params)
+            new_params = jax.tree.map(
+                lambda p: _tie(p, *jax.tree.leaves(wt_buffer)), new_params)
+
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm, "lr": lr})
+        return TrainState(params=new_params, opt_state=new_opt, logs=logs,
+                          step=state.step + 1, wt_buffer=wt_buffer), metrics
+
+    return train_step
+
+
+def make_eval_step(run: RunConfig, model: Model):
+    def eval_step(params: Any, batch: Dict[str, jax.Array]
+                  ) -> Dict[str, jax.Array]:
+        loss, metrics = model.loss_fn(params, batch, remat="none")
+        return {"loss": loss, **metrics}
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+class ServeState(NamedTuple):
+    cache: Dict[str, jax.Array]
+    tokens: jax.Array                  # last emitted token per sequence (B,)
+
+
+def make_serve_fns(run: RunConfig, model: Model):
+    """(prefill_fn, decode_fn) for the serving path.
+
+    ``prefill_fn(params, batch)`` consumes the prompt and returns
+    (first_tokens, ServeState); ``decode_fn(params, state)`` emits one
+    token per sequence against the KV cache (what ``decode_*`` shape
+    cells lower as ``serve_step``).
+    """
+    def prefill_fn(params: Any, batch: Dict[str, jax.Array],
+                   max_len: Optional[int] = None):
+        logits, cache = model.prefill(params, batch, max_len=max_len)
+        toks = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return toks, ServeState(cache=cache, tokens=toks)
+
+    def decode_fn(params: Any, state: ServeState
+                  ) -> Tuple[jax.Array, ServeState]:
+        logits, cache = model.decode_step(params, state.cache, state.tokens)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return toks, ServeState(cache=cache, tokens=toks)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,210 @@
+"""Fault-tolerant trainer: the control plane around the jitted step.
+
+Responsibilities (the paper's SS V, operationally):
+
+* drive the data pipeline + jitted train step;
+* heartbeat every node; detect failures (lease expiry / injected
+  fail-stop) via :class:`FailureDetector`;
+* on failure: promote the lowest live rank to Configuration Manager,
+  pause, run Algorithm 1-2 recovery out of the replica Logging Units
+  (core/recovery.py), install the recovered shard on a spare
+  (distributed/elastic.py), clear logs, rewind the pipeline, resume;
+* periodic MN dumps (async checkpoint + compressed log dump) every
+  ``dump_interval`` steps -- the 2.5 ms analogue;
+* straggler mitigation: per-step timing, flag nodes slower than
+  ``straggler_factor`` x median over a window; with a spare available the
+  straggler is treated as a graceful failure (state read directly, no log
+  recovery needed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.config import RunConfig
+from repro.core.directory import ShardDirectory
+from repro.core.failures import FailureDetector, FailureEvent, FailureInjector
+from repro.core.recovery import recover_node
+from repro.core.replication import ReplicationEngine
+from repro.data import SyntheticTokenPipeline
+from repro.distributed.context import MeshContext, make_context, mesh_context
+from repro.distributed.elastic import install_recovered_shard
+from repro.distributed.sharding import named_shardings, param_specs
+from repro.models import build_model
+from repro.training.steps import TrainState, init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    factor: float = 3.0
+    window: int = 5
+    history: List[float] = dataclasses.field(default_factory=list)
+    slow_streak: int = 0
+
+    def observe(self, dt: float) -> bool:
+        """Returns True when the current step is straggler-suspect."""
+        self.history.append(dt)
+        if len(self.history) < max(self.window * 2, 8):
+            return False
+        median = float(np.median(self.history[-50:]))
+        if dt > self.factor * median:
+            self.slow_streak += 1
+        else:
+            self.slow_streak = 0
+        return self.slow_streak >= self.window
+
+
+class Trainer:
+    def __init__(self, run: RunConfig, mesh: jax.sharding.Mesh,
+                 workdir: str,
+                 injector: Optional[FailureInjector] = None,
+                 model=None):
+        self.run = run
+        self.mesh = mesh
+        self.ctx: MeshContext = make_context(mesh)
+        self.model = model or build_model(run.model)
+        self.ckpt = CheckpointManager(workdir)
+        self.injector = injector or FailureInjector()
+        self.monitor = StragglerMonitor()
+        self.events: List[Dict[str, Any]] = []
+
+        with mesh_context(self.ctx):
+            key = jax.random.PRNGKey(run.train.seed)
+            params_shape = jax.eval_shape(self.model.init, key)
+            self.specs = param_specs(params_shape, run.model, self.ctx)
+            self.engine: Optional[ReplicationEngine] = None
+            if run.replication.is_replicating:
+                self.engine = ReplicationEngine(
+                    run.replication, self.ctx, self.specs, params_shape)
+            self.state = self._init_state(key)
+            self._step_fn = jax.jit(
+                make_train_step(run, self.model, self.engine),
+                donate_argnums=(0,))
+
+        n_nodes = self.engine.n_nodes if self.engine else self.ctx.data_size
+        n_buckets = (self.engine.layout.n_buckets if self.engine
+                     else run.replication.n_buckets)
+        self.directory = ShardDirectory(
+            n_nodes, n_buckets, run.replication.n_replicas)
+        self.detector = FailureDetector(n_nodes, lease_s=30.0)
+        self.pipeline = SyntheticTokenPipeline(
+            run.model, run.shape, seed=run.train.seed)
+        self._batch_shardings = None
+
+    # ------------------------------------------------------------------
+    def _init_state(self, key: jax.Array) -> TrainState:
+        state = init_train_state(self.run, self.model, key, self.engine)
+        shardings = named_shardings(state.params, self.run.model, self.ctx)
+        params = jax.tree.map(jax.device_put, state.params, shardings)
+        return state._replace(params=params)
+
+    def _shard_batch(self, batch: Dict[str, np.ndarray]) -> Dict[str, jax.Array]:
+        if self._batch_shardings is None:
+            self._batch_shardings = {
+                k: NamedSharding(
+                    self.mesh,
+                    P(self.ctx.batch_axes, *([None] * (v.ndim - 1))))
+                for k, v in batch.items()}
+        return {k: jax.device_put(v, self._batch_shardings[k])
+                for k, v in batch.items()}
+
+    # ------------------------------------------------------------------
+    def train(self, num_steps: int,
+              log_every: int = 10,
+              on_metrics: Optional[Callable[[int, Dict], None]] = None
+              ) -> List[Dict[str, float]]:
+        history: List[Dict[str, float]] = []
+        with mesh_context(self.ctx):
+            for _ in range(num_steps):
+                step_no = int(self.state.step)
+                # ---- failure control plane -------------------------------
+                for ev in self.injector.poll(step_no):
+                    if ev.kind == "fail-stop":
+                        self.detector.mark_failed(ev.node)
+                        self.events.append({"step": step_no, "event": "fail",
+                                            "node": ev.node})
+                    else:
+                        self.detector.mark_straggler(ev.node, ev.delay_s)
+                failed = [n for n in self.detector.failed_nodes
+                          if not any(e.get("recovered") == n
+                                     for e in self.events)]
+                if failed:
+                    self._recover(failed[0], step_no)
+
+                # ---- one step --------------------------------------------
+                t0 = time.perf_counter()
+                batch = self._shard_batch(self.pipeline.next())
+                self.state, metrics = self._step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                # straggler injection: modeled as an artificial delay
+                for node, delay in list(self.detector.stragglers.items()):
+                    time.sleep(delay)
+                    dt += delay
+                if self.monitor.observe(dt):
+                    self.events.append({"step": step_no, "event": "straggler"})
+                    self.detector.stragglers.clear()
+
+                for n in self.detector.live_nodes:
+                    self.detector.heartbeat(n)
+                self.directory.record_commit(step_no)
+
+                # ---- MN dump ---------------------------------------------
+                if (step_no + 1) % self.run.replication.dump_interval == 0:
+                    self._dump(step_no)
+
+                m = {k: float(v) for k, v in metrics.items()
+                     if jnp.ndim(v) == 0}
+                m["step"] = step_no
+                m["wall_s"] = dt
+                history.append(m)
+                if on_metrics and step_no % log_every == 0:
+                    on_metrics(step_no, m)
+        return history
+
+    # ------------------------------------------------------------------
+    def _dump(self, step_no: int) -> None:
+        """MN-tier dump: full state async + directory watermark."""
+        self.ckpt.save(step_no, {"params": self.state.params,
+                                 "opt": self.state.opt_state},
+                       extra={"pipeline_step": self.pipeline.state.step,
+                              "directory": self.directory.to_json()})
+        self.directory.record_dump(step_no)
+        self.events.append({"step": step_no, "event": "mn_dump"})
+
+    # ------------------------------------------------------------------
+    def _recover(self, failed_node: int, step_no: int) -> None:
+        """CM-driven recovery + spare replacement (DESIGN.md S2)."""
+        if self.engine is None:
+            raise RuntimeError(
+                f"node {failed_node} failed but replication variant is "
+                f"{self.run.replication.variant!r}: state is lost (this is "
+                "the WB data-loss case the paper fixes)")
+        cm = self.detector.configuration_manager()
+        t0 = time.perf_counter()
+        result = recover_node(self.engine, self.state.logs, self.directory,
+                              failed_coord=(failed_node,))
+        self.state = self.state._replace(
+            params=install_recovered_shard(
+                self.state.params, self.specs, self.engine, result,
+                target_coord=(failed_node,)))
+        # spare replacement: the rank is re-admitted with recovered state
+        self.detector.viral_status[failed_node] = False
+        self.detector.heartbeat(failed_node)
+        for bucket in range(self.directory.n_buckets):
+            self.directory.reassign(failed_node, bucket, failed_node)
+        self.pipeline.seek(int(self.state.step))
+        self.events.append({
+            "step": step_no, "event": "recovery", "cm": cm,
+            "recovered": failed_node,
+            "stats": dataclasses.asdict(result.stats),
+            "wall_s": time.perf_counter() - t0,
+        })

@@ -1,0 +1,33 @@
+"""Shared fixtures.
+
+NOTE: tests intentionally do NOT set XLA_FLAGS device-count overrides
+globally (the dry-run launcher owns that); multi-device tests spawn their
+mesh from a session-scoped 8-device override ONLY if no jax backend has
+been initialized yet.
+"""
+
+import os
+
+# 8 host devices for the distributed tests; set before any jax import.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    """(4 data x 2 model) mesh over 8 host devices."""
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices (XLA_FLAGS was already consumed)")
+    return jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def pod_mesh8():
+    """(2 pod x 2 data x 2 model) mesh over 8 host devices."""
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices")
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)

@@ -1,0 +1,96 @@
+"""Per-architecture smoke tests (assignment requirement): reduced
+same-family config, one forward/train step on CPU, output shapes + no
+NaNs; plus prefill/decode agreement on every family."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro
+from repro.config import ShapeConfig
+from repro.configs import ASSIGNED_ARCHS
+from repro.models import build_model
+from repro.models.model_zoo import make_batch
+
+SMOKE = ShapeConfig("smoke", seq_len=48, global_batch=2, kind="train")
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = repro.get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SMOKE)
+    batch["labels"] = batch["tokens"]
+
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (2, 48, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(lambda p: model.loss_fn(p, batch), has_aux=True)
+    )(params)
+    assert jnp.isfinite(loss)
+    gnorm = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_agreement(arch):
+    """decode(prefill(t[:-1]), t[-1]) == prefill(t)[-1] -- per family.
+    MoE archs use a no-drop capacity so routing is identical."""
+    cfg = repro.get_reduced_config(arch)
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = make_batch(cfg, SMOKE)
+    batch.pop("labels", None)
+
+    full, _ = jax.jit(lambda p, b: model.prefill(p, b, max_len=64))(
+        params, batch)
+    short = dict(batch)
+    short["tokens"] = batch["tokens"][:, :-1]
+    _, cache = jax.jit(lambda p, b: model.prefill(p, b, max_len=64))(
+        params, short)
+    dec, _ = jax.jit(model.decode_step)(params, cache,
+                                        batch["tokens"][:, -1])
+    err = float(jnp.max(jnp.abs(dec - full[:, -1, :])))
+    # bf16 recurrence recompute tolerance (ssm/hybrid slightly looser)
+    tol = 0.12 if cfg.family in ("ssm", "hybrid") else 0.05
+    assert err <= tol, f"{arch}: decode/prefill mismatch {err}"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_full_config_registered(arch):
+    cfg = repro.get_model_config(arch)
+    assert cfg.param_count() > 0
+    red = repro.get_reduced_config(arch)
+    assert red.family == cfg.family
+    assert red.is_moe == cfg.is_moe
+    assert red.is_encdec == cfg.is_encdec
+    assert red.param_count() < 1e6 * 5   # CPU-sized
+
+
+def test_param_counts_match_published():
+    """Total parameter counts must match the published sizes (+-15%)."""
+    expected = {
+        "qwen3-0.6b": 0.6e9, "deepseek-67b": 67e9, "stablelm-12b": 12.1e9,
+        "starcoder2-15b": 16e9, "mamba2-2.7b": 2.7e9, "grok-1-314b": 314e9,
+        "whisper-medium": 0.77e9, "hymba-1.5b": 1.5e9,
+    }
+    for arch, n in expected.items():
+        got = repro.get_model_config(arch).param_count()
+        assert abs(got - n) / n < 0.20, f"{arch}: {got/1e9:.2f}B vs {n/1e9}B"
+    # moonshot: the ASSIGNED spec (48L) is deeper than the HF release
+    # (27L); the derived count must match the assigned spec, and the MoE
+    # active/total ratio must reflect 64e top-6 + 2 shared.
+    ms = repro.get_model_config("moonshot-v1-16b-a3b")
+    assert abs(ms.param_count() - 28.9e9) / 28.9e9 < 0.05
+    assert 0.1 < ms.active_param_count() / ms.param_count() < 0.25
+    # internvl2-26b models the LM backbone only (InternViT is stubbed)
+    iv = repro.get_model_config("internvl2-26b")
+    assert abs(iv.param_count() - 19.9e9) / 19.9e9 < 0.05

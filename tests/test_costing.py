@@ -1,0 +1,150 @@
+"""Dry-run cost accounting: jaxpr walker trip-count math and the
+while-aware HLO collective parser (launch/costing.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.costing import (
+    collective_bytes,
+    computation_multipliers,
+    jaxpr_cost,
+)
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((8, 32), jnp.float32)
+    b = jnp.zeros((32, 16), jnp.float32)
+    c = jaxpr_cost(lambda a, b: a @ b, (a, b), mesh_size=1)
+    assert c["flops"] == 2 * 8 * 32 * 16
+
+
+def test_scan_trip_count_multiplies():
+    w = jnp.zeros((16, 16), jnp.float32)
+    x = jnp.zeros((4, 16), jnp.float32)
+
+    def f(w, x):
+        def body(h, _):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, None, length=7)
+        return h
+
+    c = jaxpr_cost(f, (w, x), mesh_size=1)
+    assert c["flops"] == 7 * 2 * 4 * 16 * 16
+
+
+def test_nested_scan_multiplies():
+    w = jnp.zeros((8, 8), jnp.float32)
+
+    def f(w):
+        def outer(h, _):
+            def inner(h2, _):
+                return h2 @ w, None
+            h2, _ = jax.lax.scan(inner, h, None, length=3)
+            return h2, None
+        h, _ = jax.lax.scan(outer, jnp.zeros((2, 8)), None, length=5)
+        return h
+
+    c = jaxpr_cost(f, (w,), mesh_size=1)
+    assert c["flops"] == 5 * 3 * 2 * 2 * 8 * 8
+
+
+def test_remat_counts_recompute():
+    w = jnp.zeros((16, 16), jnp.float32)
+    x = jnp.zeros((4, 16), jnp.float32)
+
+    def loss(w, x):
+        @jax.checkpoint
+        def block(x):
+            return jnp.tanh(x @ w)
+        return jnp.sum(block(block(x)))
+
+    plain = jaxpr_cost(lambda w, x: jnp.sum(jnp.tanh(jnp.tanh(x @ w) @ w)),
+                       (w, x), mesh_size=1)
+    g = jaxpr_cost(lambda w, x: jax.grad(loss)(w, x), (w, x), mesh_size=1)
+    # grad-of-remat >= 3x the fwd matmul flops (fwd + recompute + bwd dots)
+    assert g["flops"] >= 3 * plain["flops"] * 0.9
+
+
+def test_vmem_scan_suppresses_bytes_not_flops():
+    w = jnp.zeros((64, 64), jnp.float32)
+    x = jnp.zeros((8, 64), jnp.float32)
+
+    def f(w, x):
+        def body(h, _):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, None, length=11)
+        return h
+
+    c_hbm = jaxpr_cost(f, (w, x), mesh_size=1)
+    c_vmem = jaxpr_cost(f, (w, x), mesh_size=1,
+                        vmem_scan_lengths=frozenset({11}))
+    assert c_vmem["flops"] == c_hbm["flops"]
+    assert c_vmem["bytes"] < c_hbm["bytes"] * 0.2
+
+
+def test_shard_map_multiplies_by_devices(mesh8):
+    from jax.sharding import PartitionSpec as P
+
+    w = jnp.zeros((8, 16, 16), jnp.float32)
+
+    def f(w):
+        def inner(wl):
+            return wl[0] @ wl[0]
+        return jax.shard_map(inner, mesh=mesh8,
+                             in_specs=P(("data", "model")),
+                             out_specs=P(("data", "model")),
+                             check_vma=False)(w)
+
+    c = jaxpr_cost(f, (w,), mesh_size=8)
+    assert c["flops"] == 8 * 2 * 16 * 16 * 16
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+FAKE_HLO = """\
+HloModule test
+
+%cond.1 (arg.1: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(28)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body.1 (arg.2: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p2 = (s32[], f32[4]) parameter(0)
+  %x = f32[4]{0} get-tuple-element(%p2), index=1
+  %ar = f32[4]{0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%sum
+  ROOT %t = (s32[], f32[4]) tuple(%x, %ar)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  %ag = bf16[32]{0} all-gather(%a), replica_groups=[16,16]<=[256], dimensions={0}
+  %w = (s32[], f32[4]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[4]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_multipliers_from_while_condition():
+    mult = computation_multipliers(FAKE_HLO)
+    assert mult["__entry__"] == 1.0
+    assert mult["body.1"] == 28.0
+
+
+def test_collective_bytes_trip_corrected():
+    out = collective_bytes(FAKE_HLO, total_devices=256)
+    # the in-loop f32[4] all-reduce counts 28 times: 16B * 2*(15/16) * 28
+    ar = out["per_kind_bytes"]["all-reduce"]
+    assert abs(ar - 16 * 2 * 15 / 16 * 28) < 1e-6
+    # the bf16 all-gather counts once: 64B out * 15/16
+    ag = out["per_kind_bytes"]["all-gather"]
+    assert abs(ag - 64 * 15 / 16) < 1e-6
+    # f32 promotion adjustment: only the AR payload is f32-wide
+    assert out["f32_bytes"] == pytest.approx(ar)
+    assert out["total_bytes_bf16adj"] == pytest.approx(ar / 2 + ag)

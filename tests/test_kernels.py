@@ -1,0 +1,120 @@
+"""Per-kernel shape/dtype sweeps vs. the pure-jnp oracles (interpret
+mode on CPU), plus hypothesis property tests on the compressor."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.ref import attention_ref
+from repro.kernels.log_compress import compress, decompress, compression_factor
+from repro.kernels.log_compress.ref import compress_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (b, sq, skv, h, kh, d, causal, dtype)
+    (2, 256, 256, 4, 2, 64, True, jnp.float32),
+    (1, 128, 128, 8, 8, 32, True, jnp.float32),     # MHA
+    (1, 128, 128, 8, 1, 64, True, jnp.float32),     # MQA
+    (2, 192, 192, 6, 2, 64, True, jnp.bfloat16),    # bf16 + unaligned
+    (1, 64, 320, 4, 2, 64, True, jnp.float32),      # kv longer (decode-ish)
+    (1, 256, 256, 4, 4, 128, False, jnp.float32),   # non-causal
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("path", ["pallas_interpret", "jnp"])
+def test_flash_attention_vs_ref(case, path):
+    b, sq, skv, h, kh, d, causal, dt = case
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, d)), dt)
+    k = jnp.asarray(RNG.standard_normal((b, skv, kh, d)), dt)
+    v = jnp.asarray(RNG.standard_normal((b, skv, kh, d)), dt)
+    ref = attention_ref(q, k, v, causal).astype(jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          force=path).astype(jnp.float32)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out, ref, atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # (b, l, h, p, n, chunk, dtype)
+    (2, 128, 4, 16, 32, 32, jnp.float32),
+    (1, 96, 2, 64, 128, 32, jnp.float32),   # unaligned l
+    (2, 64, 3, 32, 16, 64, jnp.float32),
+    (1, 128, 2, 32, 32, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("path", ["pallas_interpret", "jnp"])
+def test_ssd_scan_vs_ref(case, path):
+    b, l, h, p, n, chunk, dt = case
+    x = jnp.asarray(RNG.standard_normal((b, l, h, p)) * 0.5, dt)
+    dtt = jnp.asarray(RNG.uniform(0.001, 0.1, (b, l, h)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((b, l, n)) * 0.3, dt)
+    C = jnp.asarray(RNG.standard_normal((b, l, n)) * 0.3, dt)
+    y_ref, s_ref = ssd_ref(x, dtt, A, B, C)
+    y, s = ssd_scan(x, dtt, A, B, C, chunk=chunk, force=path)
+    scale = float(jnp.max(jnp.abs(y_ref.astype(jnp.float32)))) + 1e-9
+    tol = 3e-2 if dt == jnp.bfloat16 else 1e-5
+    assert float(jnp.max(jnp.abs(
+        y.astype(jnp.float32) - y_ref.astype(jnp.float32)))) / scale < tol
+    assert float(jnp.max(jnp.abs(
+        s.astype(jnp.float32) - s_ref.astype(jnp.float32)))) < tol * 10
+
+
+# ---------------------------------------------------------------------------
+# log compressor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [256, 1000, 4096, 12345])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_compress_roundtrip_error_bound(n, bits):
+    vals = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    base = vals + jnp.asarray(RNG.standard_normal(n) * 0.02, jnp.float32)
+    codes, scales = compress(vals, base, bits=bits)
+    rec = decompress(codes, scales, base, n)
+    # error bounded by half a quantization step per block
+    bound = float(jnp.max(scales)) * 0.51
+    assert float(jnp.max(jnp.abs(rec - vals))) <= bound
+
+
+def test_compress_pallas_matches_ref_bitexact():
+    n = 8 * 256 * 3
+    vals = jnp.asarray(RNG.standard_normal(n), jnp.float32).reshape(-1, 256)
+    base = jnp.zeros_like(vals)
+    codes_k, scales_k = compress(vals.reshape(-1), base.reshape(-1))
+    codes_r, scales_r = compress_ref(vals, base)
+    assert bool(jnp.all(codes_k == codes_r))
+    np.testing.assert_allclose(scales_k, scales_r, rtol=1e-7)
+
+
+def test_compression_factor_reported():
+    assert 3.5 < compression_factor(8) < 4.0
+    assert 7.0 < compression_factor(4) < 8.0
+
+
+@given(st.integers(1, 2000), st.floats(0.0, 10.0))
+@settings(max_examples=20, deadline=None)
+def test_property_compress_zero_delta(n, basefill):
+    """values == base => all codes zero, perfect reconstruction."""
+    vals = jnp.full((n,), basefill, jnp.float32)
+    codes, scales = compress(vals, vals)
+    assert bool(jnp.all(codes == 0))
+    rec = decompress(codes, scales, vals, n)
+    np.testing.assert_allclose(rec, vals)

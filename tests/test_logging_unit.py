@@ -1,0 +1,182 @@
+"""Logging Unit (paper SS IV.B-C): allocation, validation, in-order drain.
+
+Includes hypothesis property tests: under arbitrary cross-source /
+cross-address message reordering (with per-(src, addr) point-to-point
+order preserved -- the protocol's well-definedness assumption), the DRAM
+log commits every source's entries in logical-timestamp (program) order
+and never loses a validated entry.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import logging_unit as lu
+
+
+def _mk(sram=16, dram=64, sources=4, width=1):
+    return lu.init_state(sram, dram, sources, width)
+
+
+def test_repl_allocates_entry():
+    s = _mk()
+    s = lu.receive_repl(s, 1, 42, jnp.asarray([7.0]))
+    assert int(jnp.sum(s.sram_src != lu.EMPTY)) == 1
+    assert int(s.dropped) == 0
+
+
+def test_val_before_drain_required():
+    s = _mk()
+    s = lu.receive_repl(s, 1, 42, jnp.asarray([7.0]))
+    s = lu.drain(s, 4)
+    assert int(s.dram_ptr) == 0          # unvalidated entries never drain
+    s = lu.receive_val(s, 1, 42, 0)
+    s = lu.drain(s, 4)
+    assert int(s.dram_ptr) == 1
+    assert int(s.dram_addr[0]) == 42
+    assert float(s.dram_val[0, 0]) == 7.0
+
+
+def test_out_of_order_vals_commit_in_ts_order():
+    """Fabric reorders two VALs from one source: ts=1 arrives before ts=0.
+    The DRAM log must still commit ts=0 first."""
+    s = _mk()
+    s = lu.receive_repl(s, 2, 10, jnp.asarray([1.0]))   # will get ts=0
+    s = lu.receive_repl(s, 2, 11, jnp.asarray([2.0]))   # will get ts=1
+    s = lu.receive_val(s, 2, 11, 1)                      # reordered!
+    s = lu.drain(s, 4)
+    assert int(s.dram_ptr) == 0          # ts=1 must wait for ts=0
+    s = lu.receive_val(s, 2, 10, 0)
+    s = lu.drain(s, 4)
+    assert int(s.dram_ptr) == 2
+    assert int(s.dram_ts[0]) == 0 and int(s.dram_ts[1]) == 1
+
+
+def test_same_address_two_inflight_stores():
+    """Proactive can have two same-(src, addr) REPLs outstanding; VALs must
+    pair FIFO with allocation order."""
+    s = _mk()
+    s = lu.receive_repl(s, 0, 5, jnp.asarray([1.0]))
+    s = lu.receive_repl(s, 0, 5, jnp.asarray([2.0]))
+    s = lu.receive_val(s, 0, 5, 0)       # validates the OLDER entry
+    s = lu.receive_val(s, 0, 5, 1)
+    s = lu.drain(s, 4)
+    assert int(s.dram_ptr) == 2
+    assert float(s.dram_val[0, 0]) == 1.0
+    assert float(s.dram_val[1, 0]) == 2.0
+
+
+def test_sram_full_drops_counted():
+    s = _mk(sram=2)
+    for i in range(3):
+        s = lu.receive_repl(s, 0, i, jnp.asarray([float(i)]))
+    assert int(s.dropped) == 1
+
+
+def test_latest_version_query():
+    s = _mk()
+    for ts, val in [(0, 1.0), (1, 2.0), (2, 3.0)]:
+        s = lu.receive_repl(s, 1, 99, jnp.asarray([val]))
+        s = lu.receive_val(s, 1, 99, ts)
+    s = lu.drain(s, 8)
+    found, ts, val = lu.latest_version(s, 1, 99)
+    assert bool(found) and int(ts) == 2 and float(val[0]) == 3.0
+
+
+def test_clear_dram():
+    s = _mk()
+    s = lu.receive_repl(s, 0, 1, jnp.asarray([5.0]))
+    s = lu.receive_val(s, 0, 1, 0)
+    s = lu.drain(s, 2)
+    s = lu.clear_dram(s)
+    assert int(s.dram_ptr) == 0
+    found, _, _ = lu.latest_version(s, 0, 1)
+    assert not bool(found)
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+
+@st.composite
+def message_schedule(draw):
+    """A set of stores + an interleaving preserving causality (VAL after
+    its REPL) and per-(src, addr) point-to-point order."""
+    n_src = draw(st.integers(2, 3))
+    stores = []
+    for src in range(n_src):
+        n = draw(st.integers(1, 5))
+        addrs = draw(st.lists(st.integers(0, 3), min_size=n, max_size=n))
+        for ts, addr in enumerate(addrs):
+            stores.append((src, addr, ts))
+    # events: (kind, src, addr, ts); REPL must precede its VAL; same
+    # (src, addr) REPLs keep relative order, same for VALs.
+    events = []
+    for (src, addr, ts) in stores:
+        events.append(("repl", src, addr, ts))
+        events.append(("val", src, addr, ts))
+    perm = draw(st.permutations(events))
+    # repair causality + per-(src, addr) FIFO by stable-sorting within keys
+    fixed = []
+    pending = {}
+    by_key_r = {}
+    by_key_v = {}
+    for ev in perm:
+        k = (ev[1], ev[2])
+        if ev[0] == "repl":
+            by_key_r.setdefault(k, []).append(ev)
+        else:
+            by_key_v.setdefault(k, []).append(ev)
+    for k in by_key_r:
+        by_key_r[k].sort(key=lambda e: e[3])
+    for k in by_key_v:
+        by_key_v[k].sort(key=lambda e: e[3])
+    # now re-walk the permutation emitting the next-in-order event per key
+    ri = {k: 0 for k in by_key_r}
+    vi = {k: 0 for k in by_key_v}
+    seen_repl = set()
+    deferred = []
+    for ev in perm:
+        k = (ev[1], ev[2])
+        if ev[0] == "repl":
+            e = by_key_r[k][ri[k]]
+            ri[k] += 1
+            fixed.append(e)
+            seen_repl.add((k, e[3]))
+        else:
+            e = by_key_v[k][vi[k]]
+            vi[k] += 1
+            if (k, e[3]) in seen_repl:
+                fixed.append(e)
+            else:
+                deferred.append(e)
+    fixed.extend(sorted(deferred, key=lambda e: (e[1], e[2], e[3])))
+    return n_src, stores, fixed
+
+
+@given(message_schedule())
+@settings(max_examples=30, deadline=None)
+def test_property_commit_order_and_no_loss(sched):
+    n_src, stores, events = sched
+    s = lu.init_state(64, 128, n_src, 1)
+    for (kind, src, addr, ts) in events:
+        if kind == "repl":
+            s = lu.receive_repl(s, src, addr,
+                                jnp.asarray([src * 100.0 + ts]))
+        else:
+            s = lu.receive_val(s, src, addr, ts)
+        s = lu.drain(s, 4)
+    s = lu.drain(s, 64)
+    # no loss
+    assert int(s.dropped) == 0
+    n = int(s.dram_ptr)
+    assert n == len(stores)
+    # per-source: timestamps strictly increasing in DRAM order
+    srcs = np.asarray(s.dram_src[:n])
+    tss = np.asarray(s.dram_ts[:n])
+    for src in range(n_src):
+        seq = tss[srcs == src]
+        assert list(seq) == sorted(seq)
+        assert list(seq) == list(range(len(seq)))

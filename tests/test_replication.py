@@ -1,0 +1,224 @@
+"""Replication engine: variants, coalescing, recovery exactness, and the
+replica-group invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ReplicationConfig
+from repro.core import recovery as R
+from repro.core import replica_groups as rg
+from repro.core.directory import ShardDirectory
+from repro.core.replication import ReplicationEngine
+from repro.distributed.context import make_context, mesh_context
+
+
+# ---------------------------------------------------------------------------
+# Replica groups
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 1000), st.integers(1, 4), st.integers(4, 64))
+@settings(max_examples=50, deadline=None)
+def test_replica_offsets_invariants(bucket, n_rep, n_nodes):
+    if n_rep >= n_nodes:
+        n_rep = n_nodes - 1
+    offs = rg.replica_offsets(bucket, n_rep, n_nodes)
+    assert len(set(offs)) == n_rep
+    assert all(1 <= o < n_nodes for o in offs)
+
+
+@given(st.integers(0, 100), st.integers(4, 32))
+@settings(max_examples=30, deadline=None)
+def test_targets_sources_inverse(bucket, n_nodes):
+    n_rep = 3 if n_nodes > 3 else n_nodes - 1
+    for node in range(n_nodes):
+        for t in rg.replica_targets(node, bucket, n_rep, n_nodes):
+            assert node in rg.replica_sources(t, bucket, n_rep, n_nodes)
+
+
+def test_balanced_load():
+    """Every node logs for exactly N_r sources per bucket."""
+    n, r = 16, 3
+    for bucket in range(8):
+        counts = {i: 0 for i in range(n)}
+        for node in range(n):
+            for t in rg.replica_targets(node, bucket, r, n):
+                counts[t] += 1
+        assert all(c == r for c in counts.values())
+
+
+def test_line_replicas_address_determined():
+    a = rg.line_replicas(1234, 3, 16)
+    b = rg.line_replicas(1234, 3, 16)
+    assert a == b and len(set(a)) == 3
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end on a mesh
+# ---------------------------------------------------------------------------
+
+def _setup(mesh, variant, coalescing, n_buckets=2, cap=3):
+    ctx = make_context(mesh)
+    params = {
+        "w1": jnp.arange(48, dtype=jnp.float32).reshape(8, 6),
+        "w2": jnp.arange(32, dtype=jnp.float32).reshape(4, 8) * 0.5,
+        "scale": jnp.ones((6,), jnp.float32),
+    }
+    specs = {"w1": P("data", "model"), "w2": P("model", "data"),
+             "scale": P(None)}
+    params = {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+              for k, v in params.items()}
+    rep = ReplicationConfig(variant=variant, n_replicas=2,
+                            n_buckets=n_buckets, log_capacity=cap,
+                            coalescing=coalescing, log_dtype="float32")
+    eng = ReplicationEngine(rep, ctx, specs, params)
+    return ctx, params, specs, eng
+
+
+@pytest.mark.parametrize("variant", ["baseline", "parallel", "proactive"])
+@pytest.mark.parametrize("coalescing", [True, False])
+def test_recover_exact_all_variants(mesh8, variant, coalescing):
+    ctx, params, specs, eng = _setup(mesh8, variant, coalescing)
+    logs = eng.init_logs()
+
+    @jax.jit
+    def step(params, logs, step_no):
+        new_params = jax.tree.map(lambda x: x * 1.5 + 1.0, params)
+        logs, committed = eng.replicate(new_params, logs, step_no, new_params)
+        return committed, logs
+
+    with mesh_context(ctx):
+        p, l = params, logs
+        for i in range(3):
+            p, l = step(p, l, jnp.int32(i))
+
+    directory = ShardDirectory(4, eng.layout.n_buckets, 2)
+    for failed in range(4):
+        res = R.recover_node(eng, l, directory if failed == 0 else
+                             ShardDirectory(4, eng.layout.n_buckets, 2),
+                             failed_coord=(failed,))
+        assert res.stats.unrecoverable == 0
+        per_model = R.reassemble_shard(eng, res)
+        for m in range(2):
+            leaves = per_model[m]
+            w1_true = np.asarray(p["w1"])[2 * failed:2 * failed + 2,
+                                          3 * m:3 * m + 3]
+            w2_true = np.asarray(p["w2"])[2 * m:2 * m + 2,
+                                          2 * failed:2 * failed + 2]
+            tree = eng.unflatten(leaves)
+            np.testing.assert_allclose(tree["w1"], w1_true)
+            np.testing.assert_allclose(tree["w2"], w2_true)
+            np.testing.assert_allclose(tree["scale"], np.asarray(p["scale"]))
+
+
+def test_latest_version_wins(mesh8):
+    """Recovery must return the newest validated step, not an older one."""
+    ctx, params, specs, eng = _setup(mesh8, "proactive", False, cap=2)
+    logs = eng.init_logs()
+
+    @jax.jit
+    def step(params, logs, step_no):
+        new_params = jax.tree.map(lambda x: x + 1.0, params)
+        logs, committed = eng.replicate(new_params, logs, step_no, new_params)
+        return committed, logs
+
+    with mesh_context(ctx):
+        p, l = params, logs
+        for i in range(5):   # wraps the capacity-2 ring twice
+            p, l = step(p, l, jnp.int32(i))
+
+    res = R.recover_node(eng, l, ShardDirectory(4, eng.layout.n_buckets, 2),
+                         failed_coord=(1,))
+    for b, shard in res.shards.items():
+        assert shard.ts == 4          # newest step
+
+
+def test_log_memory_layout(mesh8):
+    ctx, params, specs, eng = _setup(mesh8, "proactive", True, n_buckets=2)
+    st_ = eng.log_struct()
+    # (data, model, N_r, capacity, n_buckets, bucket_len)
+    assert st_["values"].shape[:2] == (4, 2)
+    assert st_["values"].shape[2] == 2       # N_r
+    assert st_["ts"].shape == st_["valid"].shape
+
+
+def test_writethrough_and_none_noop(mesh8):
+    ctx = make_context(mesh8)
+    for variant in ("none", "writethrough"):
+        rep = ReplicationConfig(variant=variant)
+        assert not rep.is_replicating
+
+
+@pytest.mark.parametrize("failed", [0, 2, 3])
+def test_parity_mode_recovery_exact(mesh8, failed):
+    """Beyond-paper erasure-coded logs: lost shard = parity - survivors.
+    One parity shard per group of G nodes => N_r x less log memory."""
+    ctx = make_context(mesh8)
+    params = {
+        "w1": jnp.arange(48, dtype=jnp.float32).reshape(8, 6),
+        "w2": jnp.arange(32, dtype=jnp.float32).reshape(4, 8) * 0.5,
+    }
+    specs = {"w1": P("data", "model"), "w2": P("model", "data")}
+    params = {k: jax.device_put(v, NamedSharding(mesh8, specs[k]))
+              for k, v in params.items()}
+    rep = ReplicationConfig(variant="proactive", n_replicas=1, n_buckets=2,
+                            log_capacity=2, mode="parity", parity_group=2,
+                            log_dtype="float32")
+    eng = ReplicationEngine(rep, ctx, specs, params)
+    logs = eng.init_logs()
+    assert eng.log_struct()["values"].shape[2] == 1   # one parity shard
+
+    @jax.jit
+    def step(params, logs, step_no):
+        new_params = jax.tree.map(lambda x: x * 1.25 + 0.5, params)
+        logs, committed = eng.replicate(new_params, logs, step_no,
+                                        new_params)
+        return committed, logs
+
+    with mesh_context(ctx):
+        p, l = params, logs
+        for i in range(3):
+            p, l = step(p, l, jnp.int32(i))
+
+    res = R.recover_node_parity(eng, l, p, specs, failed_coord=(failed,))
+    assert res.stats.unrecoverable == 0
+    per_model = R.reassemble_shard(eng, res)
+    for m in range(2):
+        tree = eng.unflatten(per_model[m])
+        w1_true = np.asarray(p["w1"])[2 * failed:2 * failed + 2,
+                                      3 * m:3 * m + 3]
+        w2_true = np.asarray(p["w2"])[2 * m:2 * m + 2,
+                                      2 * failed:2 * failed + 2]
+        np.testing.assert_allclose(tree["w1"], w1_true, atol=1e-4)
+        np.testing.assert_allclose(tree["w2"], w2_true, atol=1e-4)
+
+
+def test_parity_holder_outside_group(mesh8):
+    ctx = make_context(mesh8)
+    params = {"w": jnp.zeros((8, 8), jnp.float32)}
+    specs = {"w": P("data", "model")}
+    rep = ReplicationConfig(variant="proactive", n_replicas=1,
+                            mode="parity", parity_group=2, n_buckets=4)
+    eng = ReplicationEngine(rep, ctx, specs, params)
+    for g in range(2):
+        for b in range(eng.layout.n_buckets):
+            h = eng.parity_holder(g, b)
+            assert h // 2 != g            # never inside its own group
+
+
+def test_bucket_pack_unpack_roundtrip(mesh8):
+    ctx, params, specs, eng = _setup(mesh8, "proactive", False, n_buckets=3)
+    lay = eng.layout
+    rng = np.random.default_rng(0)
+    leaves = [jnp.asarray(rng.standard_normal(s), jnp.float32)
+              for s in lay.local_shapes]
+    buckets = jnp.stack([eng.pack_bucket(leaves, b)
+                         for b in range(lay.n_buckets)])
+    out = eng.unpack(buckets)
+    for a, b in zip(leaves, out):
+        np.testing.assert_allclose(a, b)
