@@ -24,7 +24,7 @@ from repro.config import (
     TrainConfig,
 )
 from repro.core import logging_unit as lu
-from repro.distributed.context import make_context, mesh_context
+from repro.distributed.context import make_context, make_mesh, mesh_context
 from repro.distributed.sharding import named_shardings, param_specs
 from repro.kernels.log_compress import compress, decompress
 from repro.models import build_model
@@ -36,8 +36,7 @@ from repro.core.replication import ReplicationEngine
 def _local_mesh():
     n = jax.device_count()
     mp = 2 if n % 2 == 0 else 1
-    return jax.make_mesh((n // mp, mp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // mp, mp), ("data", "model"))
 
 
 def _time(fn, *args, iters=5, warmup=2):

@@ -2,31 +2,56 @@
 
 Every function returns a list of row dicts with at least
 (name, us_per_call, derived); run.py renders them as CSV.
+
+All grids run through the batched sweep engine (``simulate_batch`` /
+``core.scenarios`` grid builders): one jitted call per figure instead of
+a serial Python loop per cell. ``bench_batch_speedup`` keeps the serial
+oracle honest by timing both paths on the full Fig. 10 grid and
+reporting the wall-clock ratio, so the speedup is tracked in the
+``BENCH_*.json`` history.
+
+Quick smoke mode for CI: set ``RECXL_BENCH_QUICK=1`` (shrinks the store
+count) -- or override the store count directly with
+``RECXL_BENCH_STORES=<n>``.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
-
-import numpy as np
+import os
+import time
+from typing import Dict, List, Sequence
 
 from repro.configs.recxl_paper import PAPER_CLAIMS, WORKLOADS
+from repro.core.scenarios import fig16_grid, fig17_grid, fig18_grid
 from repro.core.simulator import (
     CONFIGS,
+    ScenarioSpec,
+    SimResult,
     geomean_slowdowns,
     simulate,
-    slowdown_table,
+    simulate_batch,
+    slowdowns_from_results,
 )
 
-N_STORES = 30_000
+QUICK = os.environ.get("RECXL_BENCH_QUICK", "") not in ("", "0")
+N_STORES = int(os.environ.get("RECXL_BENCH_STORES",
+                              "5000" if QUICK else "30000"))
+
+
+def _run(specs: Sequence[ScenarioSpec]) -> Dict[tuple, SimResult]:
+    """One batched call; results keyed by the spec itself."""
+    res = simulate_batch(specs, n_stores=N_STORES)
+    return {s: r for s, r in zip(specs, res)}
 
 
 def bench_wb_wt() -> List[Dict]:
     """Fig. 2: WB vs WT execution time (normalized to WB)."""
+    specs = [ScenarioSpec(w, c) for w in WORKLOADS for c in ("wb", "wt")]
+    by = _run(specs)
     rows = []
     for w in WORKLOADS:
-        wb = simulate(w, "wb", n_stores=N_STORES)
-        wt = simulate(w, "wt", n_stores=N_STORES)
+        wb = by[ScenarioSpec(w, "wb")]
+        wt = by[ScenarioSpec(w, "wt")]
         rows.append({
             "name": f"fig2/{w}/wt_over_wb",
             "us_per_call": wt.exec_time_ns / 1e3,
@@ -37,14 +62,15 @@ def bench_wb_wt() -> List[Dict]:
 
 def bench_protocols() -> List[Dict]:
     """Fig. 10: the five configurations; headline validation vs. paper."""
-    table = slowdown_table(n_stores=N_STORES)
+    specs = [ScenarioSpec(w, c) for w in WORKLOADS for c in CONFIGS]
+    by = _run(specs)
+    table = slowdowns_from_results(by.values())
     gm = geomean_slowdowns(table)
     rows = []
     for w, row in table.items():
         for c in CONFIGS:
-            t = simulate(w, c, n_stores=N_STORES)
             rows.append({"name": f"fig10/{w}/{c}",
-                         "us_per_call": t.exec_time_ns / 1e3,
+                         "us_per_call": by[ScenarioSpec(w, c)].exec_time_ns / 1e3,
                          "derived": round(row[c], 3)})
     for c, target_key in [("wt", "wt_slowdown_geomean"),
                           ("baseline", "baseline_slowdown_geomean"),
@@ -58,23 +84,61 @@ def bench_protocols() -> List[Dict]:
     return rows
 
 
+def bench_batch_speedup() -> List[Dict]:
+    """Serial-vs-batched wall-clock on the full Fig. 10 grid (45 cells).
+
+    Both paths are warmed once so the row tracks steady-state sweep
+    throughput, not XLA compile time; the cold batched time is reported
+    in its own row since a CI smoke run pays it.
+    """
+    specs = [ScenarioSpec(w, c) for w in WORKLOADS for c in CONFIGS]
+
+    t0 = time.perf_counter()
+    simulate_batch(specs, n_stores=N_STORES)
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    simulate_batch(specs, n_stores=N_STORES)
+    batched_s = time.perf_counter() - t0
+
+    for s in specs[:5]:                     # warm the per-config serial jits
+        simulate(s.workload, s.config, n_stores=N_STORES)
+    t0 = time.perf_counter()
+    for s in specs:
+        simulate(s.workload, s.config, n_stores=N_STORES)
+    serial_s = time.perf_counter() - t0
+
+    return [
+        {"name": "fig10/sweep/serial_ms", "us_per_call": serial_s * 1e6 / len(specs),
+         "derived": round(serial_s * 1e3, 2)},
+        {"name": "fig10/sweep/batched_ms", "us_per_call": batched_s * 1e6 / len(specs),
+         "derived": round(batched_s * 1e3, 2)},
+        {"name": "fig10/sweep/batched_cold_ms", "us_per_call": cold_s * 1e6 / len(specs),
+         "derived": round(cold_s * 1e3, 2)},
+        {"name": "fig10/sweep/speedup_serial_over_batched",
+         "us_per_call": 0.0,
+         "derived": round(serial_s / max(batched_s, 1e-9), 2)},
+    ]
+
+
 def bench_repl_timing() -> List[Dict]:
     """Fig. 11: fraction of REPLs sent at the SB head under proactive."""
-    rows = []
-    for w in WORKLOADS:
-        r = simulate(w, "proactive", n_stores=N_STORES)
-        rows.append({"name": f"fig11/{w}/repl_at_head",
-                     "us_per_call": r.exec_time_ns / 1e3,
-                     "derived": round(r.repl_at_head_frac, 4)})
-    return rows
+    specs = [ScenarioSpec(w, "proactive") for w in WORKLOADS]
+    by = _run(specs)
+    return [{"name": f"fig11/{s.workload}/repl_at_head",
+             "us_per_call": by[s].exec_time_ns / 1e3,
+             "derived": round(by[s].repl_at_head_frac, 4)}
+            for s in specs]
 
 
 def bench_coalescing() -> List[Dict]:
     """Fig. 12: proactive speedup from supporting coalescing."""
+    specs = [ScenarioSpec(w, "proactive", coalescing=co)
+             for w in WORKLOADS for co in (True, False)]
+    by = _run(specs)
     rows = []
     for w in WORKLOADS:
-        on = simulate(w, "proactive", n_stores=N_STORES, coalescing=True)
-        off = simulate(w, "proactive", n_stores=N_STORES, coalescing=False)
+        on = by[ScenarioSpec(w, "proactive", coalescing=True)]
+        off = by[ScenarioSpec(w, "proactive", coalescing=False)]
         rows.append({"name": f"fig12/{w}/coalescing_speedup",
                      "us_per_call": on.exec_time_ns / 1e3,
                      "derived": round(off.exec_time_ns / on.exec_time_ns, 4)})
@@ -83,24 +147,25 @@ def bench_coalescing() -> List[Dict]:
 
 def bench_log_size() -> List[Dict]:
     """Fig. 13: max DRAM log bytes per CN per dump period."""
-    rows = []
-    for w in WORKLOADS:
-        r = simulate(w, "proactive", n_stores=N_STORES)
-        rows.append({"name": f"fig13/{w}/log_mb",
-                     "us_per_call": r.exec_time_ns / 1e3,
-                     "derived": round(r.max_log_bytes / 1e6, 3)})
-    return rows
+    specs = [ScenarioSpec(w, "proactive") for w in WORKLOADS]
+    by = _run(specs)
+    return [{"name": f"fig13/{s.workload}/log_mb",
+             "us_per_call": by[s].exec_time_ns / 1e3,
+             "derived": round(by[s].max_log_bytes / 1e6, 3)}
+            for s in specs]
 
 
 def bench_bandwidth() -> List[Dict]:
     """Fig. 14: CXL bandwidth split (memory traffic vs log dumps)."""
+    specs = [ScenarioSpec(w, "proactive") for w in WORKLOADS]
+    by = _run(specs)
     rows = []
-    for w in WORKLOADS:
-        r = simulate(w, "proactive", n_stores=N_STORES)
-        rows.append({"name": f"fig14/{w}/mem_bw_gbps",
+    for s in specs:
+        r = by[s]
+        rows.append({"name": f"fig14/{s.workload}/mem_bw_gbps",
                      "us_per_call": r.exec_time_ns / 1e3,
                      "derived": round(r.cxl_mem_bw_gbps, 2)})
-        rows.append({"name": f"fig14/{w}/dump_bw_gbps",
+        rows.append({"name": f"fig14/{s.workload}/dump_bw_gbps",
                      "us_per_call": 0.0,
                      "derived": round(r.log_dump_bw_gbps, 3)})
     return rows
@@ -128,15 +193,16 @@ def bench_owned_lines() -> List[Dict]:
 
 def bench_link_bw() -> List[Dict]:
     """Fig. 16: sensitivity to CXL link bandwidth (160 -> 20 GB/s)."""
+    grid = fig16_grid()
+    by = _run(grid)
     rows = []
     for w in ("ycsb", "canneal", "streamcluster"):
-        base = simulate(w, "wb", n_stores=N_STORES,
-                        link_bw_gbps=160).exec_time_ns
-        for bw in (160, 80, 40, 20):
+        base = by[ScenarioSpec(w, "wb", link_bw_gbps=160.0)].exec_time_ns
+        for bw in (160.0, 80.0, 40.0, 20.0):
             for cfg in ("wb", "proactive"):
-                t = simulate(w, cfg, n_stores=N_STORES, link_bw_gbps=bw)
+                t = by[ScenarioSpec(w, cfg, link_bw_gbps=bw)]
                 rows.append({
-                    "name": f"fig16/{w}/{cfg}/bw{bw}",
+                    "name": f"fig16/{w}/{cfg}/bw{int(bw)}",
                     "us_per_call": t.exec_time_ns / 1e3,
                     "derived": round(t.exec_time_ns / base, 3)})
     return rows
@@ -144,12 +210,13 @@ def bench_link_bw() -> List[Dict]:
 
 def bench_replication_factor() -> List[Dict]:
     """Fig. 17: execution time vs N_r (normalized to N_r=3)."""
+    grid = fig17_grid()
+    by = _run(grid)
     rows = []
     for w in WORKLOADS:
-        t3 = simulate(w, "proactive", n_stores=N_STORES,
-                      n_replicas=3).exec_time_ns
+        t3 = by[ScenarioSpec(w, "proactive", n_replicas=3)].exec_time_ns
         for nr in (1, 2, 3, 4):
-            t = simulate(w, "proactive", n_stores=N_STORES, n_replicas=nr)
+            t = by[ScenarioSpec(w, "proactive", n_replicas=nr)]
             rows.append({"name": f"fig17/{w}/nr{nr}",
                          "us_per_call": t.exec_time_ns / 1e3,
                          "derived": round(t.exec_time_ns / t3, 4)})
@@ -158,13 +225,15 @@ def bench_replication_factor() -> List[Dict]:
 
 def bench_num_nodes() -> List[Dict]:
     """Fig. 18: execution time vs CN count (normalized to 16)."""
+    grid = fig18_grid()
+    by = _run(grid)
     rows = []
     for w in ("barnes", "ycsb", "bodytrack"):
-        t16 = {c: simulate(w, c, n_stores=N_STORES, n_cns=16).exec_time_ns
+        t16 = {c: by[ScenarioSpec(w, c, n_cns=16)].exec_time_ns
                for c in ("wb", "proactive")}
         for ncn in (4, 8, 16):
             for c in ("wb", "proactive"):
-                t = simulate(w, c, n_stores=N_STORES, n_cns=ncn)
+                t = by[ScenarioSpec(w, c, n_cns=ncn)]
                 rows.append({"name": f"fig18/{w}/{c}/cn{ncn}",
                              "us_per_call": t.exec_time_ns / 1e3,
                              "derived": round(t.exec_time_ns / t16[c], 3)})
@@ -172,7 +241,7 @@ def bench_num_nodes() -> List[Dict]:
 
 
 ALL_PROTOCOL_BENCHES = [
-    bench_wb_wt, bench_protocols, bench_repl_timing, bench_coalescing,
-    bench_log_size, bench_bandwidth, bench_owned_lines, bench_link_bw,
-    bench_replication_factor, bench_num_nodes,
+    bench_wb_wt, bench_protocols, bench_batch_speedup, bench_repl_timing,
+    bench_coalescing, bench_log_size, bench_bandwidth, bench_owned_lines,
+    bench_link_bw, bench_replication_factor, bench_num_nodes,
 ]

@@ -3,7 +3,8 @@ and roofline benches. Prints ``name,us_per_call,derived`` CSV.
 
 Sections:
   fig2/*        WB vs WT (paper Fig. 2)
-  fig10/*       five configurations + geomeans vs paper claims (Fig. 10)
+  fig10/*       five configurations + geomeans vs paper claims (Fig. 10),
+                plus fig10/sweep/* serial-vs-batched wall-clock tracking
   fig11..18/*   characterization + sensitivity (Figs. 11-18)
   framework/*   jitted step wall times per ReCXL variant, Logging-Unit op
                 latencies, log-compressor throughput
@@ -11,33 +12,46 @@ Sections:
                 dry-run artifacts (see benchmarks/roofline.py; requires
                 `python -m repro.launch.dryrun` to have produced
                 benchmarks/artifacts/)
+
+``--quick`` (or RECXL_BENCH_QUICK=1) is the CI smoke mode: protocol
+benches only, at a reduced store count.
 """
 
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
+    if "--quick" in sys.argv[1:]:
+        os.environ["RECXL_BENCH_QUICK"] = "1"
+    quick = os.environ.get("RECXL_BENCH_QUICK", "") not in ("", "0")
+
     from benchmarks.protocol_benches import ALL_PROTOCOL_BENCHES
-    from benchmarks.framework_benches import ALL_FRAMEWORK_BENCHES
-    from benchmarks.roofline import bench_roofline
+
+    benches = list(ALL_PROTOCOL_BENCHES)
+    if not quick:
+        from benchmarks.framework_benches import ALL_FRAMEWORK_BENCHES
+        benches += ALL_FRAMEWORK_BENCHES
 
     print("name,us_per_call,derived")
     rows = []
-    for bench in ALL_PROTOCOL_BENCHES + ALL_FRAMEWORK_BENCHES:
+    for bench in benches:
         try:
             rows.extend(bench())
         except Exception as e:  # noqa: BLE001
             rows.append({"name": f"ERROR/{bench.__name__}",
                          "us_per_call": 0.0,
                          "derived": f"{type(e).__name__}:{e}"})
-    try:
-        rows.extend(bench_roofline())
-    except Exception as e:  # noqa: BLE001
-        rows.append({"name": "ERROR/bench_roofline", "us_per_call": 0.0,
-                     "derived": f"{type(e).__name__}:{e}"})
+    if not quick:
+        from benchmarks.roofline import bench_roofline
+        try:
+            rows.extend(bench_roofline())
+        except Exception as e:  # noqa: BLE001
+            rows.append({"name": "ERROR/bench_roofline", "us_per_call": 0.0,
+                         "derived": f"{type(e).__name__}:{e}"})
 
     for r in rows:
         extra = f",paper={r['paper_claim']}" if "paper_claim" in r else ""

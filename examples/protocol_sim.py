@@ -1,22 +1,41 @@
 """Reproduce the paper's headline evaluation (Figs. 2 and 10) with the
 trace-driven protocol simulator and compare against the published claims.
 
+The whole 9-workload x 5-configuration grid runs as ONE batched
+``simulate_batch`` call (see the ScenarioSpec API in
+repro/core/simulator.py); the serial oracle is timed alongside for
+reference.
+
     PYTHONPATH=src python examples/protocol_sim.py
 """
 
-from repro.configs.recxl_paper import PAPER_CLAIMS
-from repro.core.simulator import geomean_slowdowns, slowdown_table
+import time
+
+from repro.configs.recxl_paper import PAPER_CLAIMS, WORKLOADS
+from repro.core.simulator import (
+    CONFIGS,
+    ScenarioSpec,
+    geomean_slowdowns,
+    simulate_batch,
+    slowdowns_from_results,
+)
+
+N_STORES = 30_000
 
 
 def main() -> None:
     print("simulating 9 workloads x 5 configurations "
           "(16 CN / 16 MN cluster, Table II parameters)...")
-    table = slowdown_table(n_stores=30_000)
+    specs = [ScenarioSpec(w, c) for w in WORKLOADS for c in CONFIGS]
+    t0 = time.perf_counter()
+    results = simulate_batch(specs, n_stores=N_STORES)
+    wall = time.perf_counter() - t0
+    table = slowdowns_from_results(results)
     gm = geomean_slowdowns(table)
+    print(f"...{len(specs)} cells in {wall:.2f}s (one jitted batch)")
 
     print(f"\n{'workload':14s}" + "".join(
-        f"{c:>11s}" for c in ("wb", "wt", "baseline", "parallel",
-                              "proactive")))
+        f"{c:>11s}" for c in CONFIGS))
     for w, row in table.items():
         print(f"{w:14s}" + "".join(f"{row[c]:11.2f}" for c in row))
 

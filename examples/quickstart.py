@@ -22,6 +22,7 @@ from repro.config import (
     TrainConfig,
 )
 from repro.core.failures import FailureEvent, FailureInjector
+from repro.distributed.context import make_mesh
 from repro.training.trainer import Trainer
 
 
@@ -36,8 +37,7 @@ def main() -> None:
         train=TrainConfig(total_steps=40, warmup_steps=4,
                           learning_rate=1e-3),
     )
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     injector = FailureInjector([FailureEvent(step=20, node=2)])
     trainer = Trainer(run, mesh, "/tmp/recxl_quickstart", injector=injector)
 

@@ -24,6 +24,7 @@ from repro.config import (
     TrainConfig,
 )
 from repro.core.failures import FailureEvent, FailureInjector
+from repro.distributed.context import make_mesh
 from repro.training.trainer import Trainer
 
 MODEL_100M = ModelConfig(
@@ -68,8 +69,7 @@ def main() -> None:
                           warmup_steps=max(args.steps // 20, 1),
                           learning_rate=6e-4),
     )
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     injector = FailureInjector([FailureEvent(step=fail_step, node=1)])
     trainer = Trainer(run, mesh, "/tmp/recxl_100m", injector=injector)
 

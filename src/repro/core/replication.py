@@ -46,7 +46,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import ReplicationConfig
 from repro.core import replica_groups
-from repro.distributed.context import MeshContext
+from repro.distributed.context import MeshContext, shard_map
 
 LogState = Dict[str, jax.Array]
 
@@ -416,9 +416,9 @@ class ReplicationEngine:
                 [jnp.ravel(t).astype(jnp.int32) for t in val_tokens]))
             return new_logs, token
 
-        new_logs, token = jax.shard_map(
-            region, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False)(updates, logs, step, commit_value)
+        new_logs, token = shard_map(
+            region, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs)(updates, logs, step, commit_value)
 
         # the store commits only once replication finished (all variants)
         committed = jax.tree.map(lambda x: _tie(x, token), commit_value)

@@ -1,0 +1,311 @@
+"""Failure/recovery scenario engine (paper SS V end-to-end, enumerable).
+
+Two scenario families, both first-class values rather than ad-hoc example
+code:
+
+* **Sweep scenarios** -- grids of :class:`~repro.core.simulator.ScenarioSpec`
+  cells over the paper's sensitivity space (Figs. 10/16/17/18). The grid
+  builders here are consumed by ``benchmarks/protocol_benches.py`` and by
+  the property tests, and every grid runs as ONE ``simulate_batch`` call.
+
+* **Fault scenarios** -- end-to-end resilience runs on a real device mesh:
+  train steps replicate state through the :class:`ReplicationEngine`,
+  a :class:`FailureInjector` schedule fails nodes mid-run, the
+  :class:`FailureDetector` sets viral bits, and recovery replay
+  (``recover_node``, Algorithms 1-2) repairs directory + memory before
+  the run resumes. :func:`run_fault_scenario` executes one such scenario
+  and returns a checkable :class:`ScenarioOutcome`; the invariants the
+  paper's design guarantees (replay idempotence, no directory reference
+  to a failed node, exact shard recovery) are computed for every event so
+  property tests can assert them under arbitrary fail-stop schedules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ReplicationConfig
+from repro.configs.recxl_paper import WORKLOADS
+from repro.core.directory import ShardDirectory, ShardState
+from repro.core.failures import FailureDetector, FailureEvent, FailureInjector
+from repro.core.recovery import RecoveryResult, reassemble_shard, recover_node
+from repro.core.replication import ReplicationEngine
+from repro.core.simulator import CONFIGS, ScenarioSpec
+from repro.distributed.context import make_context, make_mesh, mesh_context
+
+# ---------------------------------------------------------------------------
+# Sweep scenarios: the paper's evaluation grids as ScenarioSpec lists
+# ---------------------------------------------------------------------------
+
+
+def sweep_grid(workloads: Sequence[str] = tuple(WORKLOADS),
+               configs: Sequence[str] = CONFIGS,
+               seeds: Sequence[int] = (0,),
+               n_replicas: Sequence[Optional[int]] = (None,),
+               link_bw_gbps: Sequence[Optional[float]] = (None,),
+               n_cns: Sequence[Optional[int]] = (None,),
+               sb_sizes: Sequence[Optional[int]] = (None,),
+               coalescing: Sequence[bool] = (True,)) -> List[ScenarioSpec]:
+    """Cartesian product of sensitivity knobs as a flat spec list."""
+    return [ScenarioSpec(w, c, seed=s, n_replicas=nr, link_bw_gbps=bw,
+                         n_cns=ncn, sb_size=sb, coalescing=co)
+            for w, c, s, nr, bw, ncn, sb, co in itertools.product(
+                workloads, configs, seeds, n_replicas, link_bw_gbps,
+                n_cns, sb_sizes, coalescing)]
+
+
+def fig10_grid(seeds: Sequence[int] = (0,)) -> List[ScenarioSpec]:
+    """All workloads x all five configurations."""
+    return sweep_grid(seeds=seeds)
+
+
+def fig16_grid(bandwidths: Sequence[float] = (160.0, 80.0, 40.0, 20.0),
+               workloads: Sequence[str] = ("ycsb", "canneal",
+                                           "streamcluster")) -> List[ScenarioSpec]:
+    """Link-bandwidth sensitivity (WB vs proactive)."""
+    return sweep_grid(workloads=workloads, configs=("wb", "proactive"),
+                      link_bw_gbps=bandwidths)
+
+
+def fig17_grid(replicas: Sequence[int] = (1, 2, 3, 4),
+               workloads: Sequence[str] = tuple(WORKLOADS)) -> List[ScenarioSpec]:
+    """Replication-factor sensitivity under proactive."""
+    return sweep_grid(workloads=workloads, configs=("proactive",),
+                      n_replicas=replicas)
+
+
+def fig18_grid(cn_counts: Sequence[int] = (4, 8, 16),
+               workloads: Sequence[str] = ("barnes", "ycsb",
+                                           "bodytrack")) -> List[ScenarioSpec]:
+    """CN-count weak scaling (WB vs proactive)."""
+    return sweep_grid(workloads=workloads, configs=("wb", "proactive"),
+                      n_cns=cn_counts)
+
+
+# ---------------------------------------------------------------------------
+# Fault scenarios: fail node f at step s -> replay -> consistent -> resume
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultScenario:
+    """One enumerable end-to-end resilience run."""
+    name: str
+    events: Tuple[FailureEvent, ...]
+    n_nodes: int = 4
+    n_steps: int = 6
+    variant: str = "proactive"       # baseline | parallel | proactive
+    coalescing: bool = False
+    n_replicas: int = 2
+    n_buckets: int = 2
+    log_capacity: int = 3
+
+    def validate(self) -> None:
+        if self.variant not in ("baseline", "parallel", "proactive"):
+            raise ValueError(f"unknown variant {self.variant!r}")
+        if self.n_replicas >= self.n_nodes:
+            raise ValueError("n_replicas must be < n_nodes")
+        for ev in self.events:
+            if not 0 <= ev.node < self.n_nodes:
+                raise ValueError(f"event node {ev.node} outside mesh")
+
+
+@dataclasses.dataclass
+class RecoveryCheck:
+    """Invariants computed for one fail-stop event's recovery replay."""
+    node: int
+    step: int
+    exact: bool                      # recovered shard == live truth
+    newest_ts: int                   # newest recovered logical timestamp
+    replay_idempotent: bool          # second replay = identical result
+    directory_consistent: bool       # no reference to any failed node
+    unrecoverable: int
+
+
+@dataclasses.dataclass
+class ScenarioOutcome:
+    scenario: FaultScenario
+    steps_run: int
+    failed_nodes: Tuple[int, ...]
+    stragglers: Dict[int, float]
+    checks: List[RecoveryCheck]
+    directory: ShardDirectory
+    resumed: bool                    # live nodes kept stepping to the end
+
+    @property
+    def all_invariants_hold(self) -> bool:
+        return all(c.exact and c.replay_idempotent and
+                   c.directory_consistent and c.unrecoverable == 0
+                   for c in self.checks)
+
+
+def enumerate_fault_scenarios(n_nodes: int = 4, n_steps: int = 6,
+                              variants: Sequence[str] = ("baseline",
+                                                         "parallel",
+                                                         "proactive"),
+                              ) -> List[FaultScenario]:
+    """The canonical single- and double-failure schedule grid."""
+    out: List[FaultScenario] = []
+    for v in variants:
+        for step in range(1, n_steps - 1):
+            for node in range(n_nodes):
+                out.append(FaultScenario(
+                    name=f"{v}/fail-n{node}@s{step}",
+                    events=(FailureEvent(step=step, node=node),),
+                    n_nodes=n_nodes, n_steps=n_steps, variant=v))
+        out.append(FaultScenario(
+            name=f"{v}/double-failure",
+            events=(FailureEvent(step=1, node=0),
+                    FailureEvent(step=n_steps - 2, node=n_nodes - 1)),
+            n_nodes=n_nodes, n_steps=n_steps, variant=v))
+    return out
+
+
+def directory_references(directory: ShardDirectory,
+                         failed: Set[int]) -> bool:
+    """True iff the directory still references any failed node: as a
+    live replica holder anywhere, or as a still-OWNED owner."""
+    for (_, _), e in directory.entries.items():
+        if any(f in e.replicas for f in failed):
+            return True
+        if e.owner in failed and e.state == ShardState.OWNED:
+            return True
+    return False
+
+
+def _scenario_params(scn: FaultScenario, mesh) -> Tuple[Dict, Dict]:
+    rows = 2 * scn.n_nodes
+    params = {
+        "w": jnp.arange(rows * 4, dtype=jnp.float32).reshape(rows, 4) * 0.25,
+        "scale": jnp.linspace(0.5, 1.5, 6, dtype=jnp.float32),
+    }
+    specs = {"w": P("data", None), "scale": P(None)}
+    params = {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+              for k, v in params.items()}
+    return params, specs
+
+
+def _node_truth(engine: ReplicationEngine, params: Dict,
+                node: int) -> Dict[str, np.ndarray]:
+    """The failed node's true local shard of the live global state."""
+    w = np.asarray(params["w"])
+    rows = w.shape[0] // engine.n_nodes
+    return {"w": w[rows * node:rows * (node + 1)],
+            "scale": np.asarray(params["scale"])}
+
+
+def _replay(engine: ReplicationEngine, logs, directory_blob: str,
+            scn: FaultScenario, node: int) -> Tuple[RecoveryResult,
+                                                    ShardDirectory]:
+    d = ShardDirectory.from_json(directory_blob, scn.n_nodes,
+                                 engine.layout.n_buckets, scn.n_replicas)
+    return recover_node(engine, logs, d, failed_coord=(node,)), d
+
+
+def run_fault_scenario(scn: FaultScenario,
+                       mesh: Optional[jax.sharding.Mesh] = None,
+                       ) -> ScenarioOutcome:
+    """Execute one fault scenario end-to-end (Fig. 9 sequence).
+
+    Steps replicate state; at each injected fail-stop the detector sets
+    the viral bit, recovery replays the surviving Logging-Unit logs, the
+    repaired shard is checked against the live truth, and the run
+    resumes on the remaining schedule. Needs ``scn.n_nodes`` devices
+    (use ``--xla_force_host_platform_device_count`` on CPU).
+    """
+    scn.validate()
+    if mesh is None:
+        if jax.device_count() < scn.n_nodes:
+            raise RuntimeError(
+                f"scenario needs {scn.n_nodes} devices, "
+                f"have {jax.device_count()}")
+        mesh = make_mesh((scn.n_nodes,), ("data",),
+                         devices=jax.devices()[:scn.n_nodes])
+    ctx = make_context(mesh)
+    params, specs = _scenario_params(scn, mesh)
+    rep = ReplicationConfig(variant=scn.variant, n_replicas=scn.n_replicas,
+                            n_buckets=scn.n_buckets,
+                            log_capacity=scn.log_capacity,
+                            coalescing=scn.coalescing, log_dtype="float32")
+    engine = ReplicationEngine(rep, ctx, specs, params)
+    logs = engine.init_logs()
+    directory = ShardDirectory(scn.n_nodes, engine.layout.n_buckets,
+                               scn.n_replicas)
+    detector = FailureDetector(scn.n_nodes, lease_s=1e9)
+    injector = FailureInjector(scn.events)
+
+    @jax.jit
+    def step(p, l, step_no):
+        new_p = jax.tree.map(lambda x: x * 1.125 + 0.5, p)
+        l, committed = engine.replicate(new_p, l, step_no, new_p)
+        return committed, l
+
+    checks: List[RecoveryCheck] = []
+    failed: Set[int] = set()
+    with mesh_context(ctx):
+        for t in range(scn.n_steps):
+            params, logs = step(params, logs, jnp.int32(t))
+            if not failed:
+                # failed owners must stay UNOWNED: only record cluster-wide
+                # commits while the directory is undamaged
+                directory.record_commit(t)
+            for ev in injector.poll(t):
+                if ev.kind == "straggler":
+                    detector.mark_straggler(ev.node, ev.delay_s)
+                    continue
+                if ev.node in failed:
+                    continue
+                detector.mark_failed(ev.node)
+                failed.add(ev.node)
+                # snapshot the pre-repair directory, then replay on the
+                # real one and twice more on copies of the snapshot: all
+                # three runs must recover identical shards (idempotence)
+                blob = directory.to_json()
+                res = recover_node(engine, logs, directory,
+                                   failed_coord=(ev.node,))
+                r1, _ = _replay(engine, logs, blob, scn, ev.node)
+                r2, _ = _replay(engine, logs, blob, scn, ev.node)
+                idem = (set(r1.shards) == set(r2.shards) == set(res.shards)
+                        and all(r1.shards[b].ts == r2.shards[b].ts
+                                and np.array_equal(r1.shards[b].values,
+                                                   r2.shards[b].values)
+                                and r1.shards[b].ts == res.shards[b].ts
+                                and np.array_equal(r1.shards[b].values,
+                                                   res.shards[b].values)
+                                for b in r1.shards))
+                # replaying on the already-repaired directory must be a
+                # no-op: every owned entry is UNOWNED, nothing re-fetched
+                res_again = recover_node(engine, logs, directory,
+                                         failed_coord=(ev.node,))
+                idem = idem and not res_again.shards
+
+                exact = res.stats.unrecoverable == 0
+                newest = -1
+                if exact:
+                    truth = _node_truth(engine, params, ev.node)
+                    leaves = reassemble_shard(engine, res)[0]
+                    got = engine.unflatten(leaves)
+                    exact = all(
+                        np.allclose(np.asarray(got[k]), truth[k],
+                                    rtol=1e-6, atol=1e-6) for k in truth)
+                    newest = max(s.ts for s in res.shards.values())
+                checks.append(RecoveryCheck(
+                    node=ev.node, step=t, exact=exact, newest_ts=newest,
+                    replay_idempotent=idem,
+                    directory_consistent=not directory_references(
+                        directory, failed),
+                    unrecoverable=res.stats.unrecoverable))
+
+    return ScenarioOutcome(
+        scenario=scn, steps_run=scn.n_steps,
+        failed_nodes=tuple(sorted(failed)),
+        stragglers=dict(detector.stragglers),
+        checks=checks, directory=directory,
+        resumed=len(detector.live_nodes) > 0)

@@ -28,13 +28,43 @@ ReCXL-baseline.
 Everything is deterministic given (workload, seed). Calibration targets
 are the paper's headline numbers (PAPER_CLAIMS in configs/recxl_paper.py);
 tests assert the reproduced geomeans land inside acceptance bands.
+
+Batched sweeps -- the ScenarioSpec API
+--------------------------------------
+
+A whole evaluation grid (Figs. 10-18: workload x config x sensitivity
+knob) is ONE jitted call:
+
+    specs = [ScenarioSpec(w, c) for w in WORKLOADS for c in CONFIGS]
+    results = simulate_batch(specs)          # List[SimResult], same order
+
+:class:`ScenarioSpec` names one grid cell: ``(workload, config, seed,
+n_replicas, link_bw_gbps, n_cns, sb_size, coalescing)``; ``None`` knobs
+default to the :class:`ClusterConfig`. ``simulate_batch`` synthesizes
+each unique ``(workload, seed)`` trace once, derives the per-cell cost
+arrays on the host, pads the batch (size to a multiple of 8, store-buffer
+rings to the widest cell), and runs one branch-free ``lax.scan`` over the
+stacked ``(B, n_stores)`` arrays in which all five commit rules are
+computed and the per-cell rule selected by config index.
+
+Batched-vs-serial contract: ``simulate()`` (the differential-testing
+oracle) and ``simulate_batch`` share trace synthesis and the per-cell
+cost derivation, and their timelines apply identical arithmetic -- every
+``SimResult`` field from the batched path must match the serial path for
+the same cell within 1e-5 relative tolerance (tests/test_batch_sim.py
+enforces this; in practice the results are bit-identical). The serial
+path stays the readable reference; new commit rules must be added to
+both ``_timeline`` and ``_timeline_batch``.
+
+Failure/recovery scenario sweeps build on this API in
+``repro.core.scenarios``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +78,8 @@ from repro.configs.recxl_paper import (
 )
 
 CONFIGS = ("wb", "wt", "baseline", "parallel", "proactive")
+_CONFIG_IDX = {c: i for i, c in enumerate(CONFIGS)}
+_REPLICATING = ("baseline", "parallel", "proactive")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,8 +96,44 @@ class SimResult:
     sb_full_frac: float
 
 
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One cell of an evaluation grid (Figs. 10-18 sensitivity space).
+
+    ``None`` knobs resolve to the ClusterConfig defaults at simulation
+    time, so a spec is portable across cluster configs.
+    """
+    workload: str
+    config: str
+    seed: int = 0
+    n_replicas: Optional[int] = None
+    link_bw_gbps: Optional[float] = None
+    n_cns: Optional[int] = None
+    sb_size: Optional[int] = None
+    coalescing: bool = True
+
+    def validate(self, cluster: ClusterConfig) -> None:
+        if self.config not in CONFIGS:
+            raise ValueError(f"unknown config {self.config!r}")
+        if self.workload not in WORKLOADS:
+            raise ValueError(f"unknown workload {self.workload!r}")
+        sb = self.sb_size if self.sb_size is not None else cluster.store_buffer
+        if sb < 1:
+            raise ValueError(f"sb_size must be >= 1, got {sb}")
+        nr = self.n_replicas if self.n_replicas is not None else cluster.n_replicas
+        if nr < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {nr}")
+        ncn = self.n_cns if self.n_cns is not None else cluster.n_cns
+        if ncn < 1:
+            raise ValueError(f"n_cns must be >= 1, got {ncn}")
+        bw = self.link_bw_gbps if self.link_bw_gbps is not None \
+            else cluster.cxl_link_bw_gbps
+        if bw <= 0.0:
+            raise ValueError(f"link_bw_gbps must be > 0, got {bw}")
+
+
 # ---------------------------------------------------------------------------
-# Trace synthesis
+# Trace synthesis (fully vectorized -- no per-store Python loops)
 # ---------------------------------------------------------------------------
 
 def synthesize_trace(wl: WorkloadProfile, n_stores: int, seed: int,
@@ -80,6 +148,12 @@ def synthesize_trace(wl: WorkloadProfile, n_stores: int, seed: int,
     value. Burst runs longer than the SB depth are what separate
     ReCXL-proactive from ReCXL-parallel (Fig. 8): only there does commit
     latency back-pressure the core.
+
+    The chain is materialized by its run-length representation: burst /
+    calm run lengths are geometric (exactly the two-state chain's
+    sojourn distribution), drawn for the whole trace at once and
+    expanded with ``np.repeat`` -- there is no per-store Python loop, so
+    a batch of traces costs a handful of array ops per cell.
     """
     rng = np.random.default_rng(seed)
     ipc = 2.0
@@ -87,21 +161,25 @@ def synthesize_trace(wl: WorkloadProfile, n_stores: int, seed: int,
     instr_per_store = 1000.0 / wl.remote_store_rate
     mean_gap = instr_per_store * ns_per_instr
 
-    # two-state Markov chain over stores
+    # two-state Markov chain over stores, as alternating geometric runs
     burst_len = max(wl.burst_len, 1.0)
     p_leave_burst = 1.0 / burst_len
     frac = np.clip(wl.burstiness, 0.0, 0.98)     # fraction of stores in bursts
     calm_len = burst_len * (1.0 - frac) / max(frac, 1e-3)
-    p_leave_calm = 1.0 / max(calm_len, 1.0)
-    in_burst = np.zeros(n_stores, dtype=bool)
-    state = rng.random() < frac
-    u = rng.random(n_stores)
-    for i in range(n_stores):
-        in_burst[i] = state
-        if state:
-            state = not (u[i] < p_leave_burst)
-        else:
-            state = (u[i] < p_leave_calm)
+    p_leave_calm = min(1.0 / max(calm_len, 1.0), 1.0)
+    state0 = bool(rng.random() < frac)
+    # each run is >= 1 store, so n_stores runs of each state always cover
+    # the trace; trim to the first run crossing n_stores before expanding.
+    m = max(n_stores, 1)
+    run_burst = rng.geometric(p_leave_burst, m)
+    run_calm = rng.geometric(p_leave_calm, m)
+    runs = np.empty(2 * m, dtype=np.int64)
+    states = np.empty(2 * m, dtype=bool)
+    first, second = (run_burst, run_calm) if state0 else (run_calm, run_burst)
+    runs[0::2], runs[1::2] = first, second
+    states[0::2], states[1::2] = state0, not state0
+    k = int(np.searchsorted(np.cumsum(runs), n_stores)) + 1
+    in_burst = np.repeat(states[:k], runs[:k])[:n_stores]
 
     burst_gap = cluster.cycle_ns
     n_burst = int(in_burst.sum())
@@ -112,12 +190,11 @@ def synthesize_trace(wl: WorkloadProfile, n_stores: int, seed: int,
     gaps = np.where(in_burst, burst_gap,
                     rng.exponential(calm_gap, n_stores))
 
-    # position within the current burst (Logging-Unit backlog ramps with it)
-    pos = np.zeros(n_stores, dtype=np.float32)
-    run = 0
-    for i in range(n_stores):
-        run = run + 1 if in_burst[i] else 0
-        pos[i] = run
+    # position within the current burst (Logging-Unit backlog ramps with
+    # it): index distance to the latest calm store at or before i.
+    idx = np.arange(n_stores, dtype=np.int64)
+    last_calm = np.maximum.accumulate(np.where(~in_burst, idx, -1))
+    pos = np.where(in_burst, idx - last_calm, 0).astype(np.float32)
 
     coalesce = rng.random(n_stores) < wl.coalesce_rate
 
@@ -138,7 +215,7 @@ def synthesize_trace(wl: WorkloadProfile, n_stores: int, seed: int,
 
 
 # ---------------------------------------------------------------------------
-# Store-buffer timeline (one lax.scan per run)
+# Per-cell cost derivation (shared by the serial and batched paths)
 # ---------------------------------------------------------------------------
 
 def _commit_cost_ns(config: str, cluster: ClusterConfig) -> Dict[str, float]:
@@ -153,6 +230,132 @@ def _commit_cost_ns(config: str, cluster: ClusterConfig) -> Dict[str, float]:
         "t_drain": cluster.cycle_ns,
     }
 
+
+@dataclasses.dataclass
+class _CellInputs:
+    """Everything _timeline{,_batch} and result assembly need for one cell."""
+    spec: ScenarioSpec
+    n_stores: int
+    sb_size: int
+    config_idx: int
+    work_scale: float
+    # per-store timeline inputs
+    gaps: np.ndarray
+    coalesce: np.ndarray
+    exposed: np.ndarray
+    t_repl_i: np.ndarray
+    svc_i: np.ndarray
+    # derived bandwidth / log metrics (timeline-independent)
+    n_repl_msgs: int
+    max_log_bytes: float
+    cxl_mem_bw_gbps: float
+    log_dump_bw_gbps: float
+
+
+def _prepare_cell(spec: ScenarioSpec, trace: Dict[str, np.ndarray],
+                  n_stores: int, cluster: ClusterConfig) -> _CellInputs:
+    """Resolve a ScenarioSpec against a synthesized trace into the exact
+    per-store arrays the timeline consumes. Pure host-side numpy; used
+    verbatim by both ``simulate`` and ``simulate_batch`` (which validate
+    the specs up front) so the two paths cannot drift."""
+    wl = WORKLOADS[spec.workload]
+    config = spec.config
+    nr = cluster.n_replicas if spec.n_replicas is None else spec.n_replicas
+    bw = cluster.cxl_link_bw_gbps if spec.link_bw_gbps is None else spec.link_bw_gbps
+    ncn = cluster.n_cns if spec.n_cns is None else spec.n_cns
+    sb = cluster.store_buffer if spec.sb_size is None else spec.sb_size
+    costs = _commit_cost_ns(config, cluster)
+
+    # --- replication fan-out cost scaling -------------------------------
+    # N_r REPLs leave in parallel but share the CN's CXL port: serialization
+    # grows mildly with N_r; congestion scales latencies when offered load
+    # nears the link bandwidth (Fig. 16/17 behaviour).
+    repl_bytes = 8 + 64  # header + payload (coalesced line worst case)
+    mean_gap = float(np.mean(trace["gaps"]))
+    store_rate_per_core = 1e9 / max(mean_gap, 1e-3)          # stores/s/core
+    cores = cluster.cores_per_cn
+    repl_demand = store_rate_per_core * cores * nr * repl_bytes / 1e9  # GB/s
+    mem_bytes = 64 + 16
+    read_rate = (wl.remote_read_rate / wl.remote_store_rate) * store_rate_per_core
+    mem_demand = (store_rate_per_core + read_rate) * cores * mem_bytes / 1e9
+    total_demand = mem_demand + (repl_demand if config in _REPLICATING else 0.0)
+    congestion = max(1.0, total_demand / bw)
+    port_serial = 1.0 + 0.08 * (nr - 1)
+
+    coalesce = trace["coalesce"] if (spec.coalescing and config != "wt") else \
+        np.zeros_like(trace["coalesce"])
+    exposed = trace["exposed_coh"] * congestion
+
+    # Per-store REPL latency: inflated inside cluster-wide bursts (the
+    # SPMD apps' flush phases align across CNs, so every Logging Unit is
+    # absorbing its peers' REPL streams at once). The ACK backlog ramps
+    # with position in the burst, capped when the SRAM Log Buffer
+    # backpressures into DRAM-speed handling; the *sustained* drain floor
+    # is the DRAM-log write path (~2 DRAM accesses per entry), which is
+    # what bounds ReCXL-proactive during long flushes.
+    svc_entry_ns = 2.0 * (1e3 / cluster.logging_unit_freq_mhz)  # SRAM path
+    # saturated drain: log-entry write + log-metadata RMW at DRAM speed
+    dram_svc_ns = 4.0 * cluster.dram_lat_ns
+    qslope = (svc_entry_ns * cores * nr * (1.0 - wl.coalesce_rate)
+              - cluster.cycle_ns)
+    qcap = 195.0                 # SRAM buffer backpressure bound (ns)
+    queue_i = np.minimum(trace["burst_pos"] * max(qslope, 0.0), qcap) \
+        * trace["in_burst"] * congestion
+    t_repl_base = costs["t_repl"] * congestion * port_serial
+    t_repl_i = t_repl_base + queue_i
+    # commit-drain service floor inside bursts (proactive path)
+    svc_floor = dram_svc_ns * (1.0 - wl.coalesce_rate) * congestion \
+        * (1.0 + 0.1 * (nr - cluster.n_replicas))
+    svc_i = np.where(trace["in_burst"], svc_floor,
+                     costs["t_drain"]).astype(np.float32)
+
+    # --- scaling with CN count: fewer CNs -> each runs more of the fixed
+    # total work (weak scaling of the cluster as in Fig. 18).
+    work_scale = cluster.n_cns / ncn
+
+    n_repl = int(n_stores - coalesce.sum()) if config in _REPLICATING else 0
+
+    # --- log sizing (Fig. 13): entries accumulated per dump period ------
+    entry_bytes = 12                       # Fig. 5: ~97 bits
+    stores_per_s = store_rate_per_core * cores * nr  # logged at N_r peers / N_r srcs
+    log_bytes = stores_per_s * (cluster.dump_period_ms * 1e-3) * entry_bytes
+    dump_bw = (log_bytes / cluster.gzip_factor) / (cluster.dump_period_ms * 1e-3) / 1e9
+
+    return _CellInputs(
+        spec=spec, n_stores=n_stores, sb_size=sb,
+        config_idx=_CONFIG_IDX[config], work_scale=work_scale,
+        gaps=trace["gaps"],
+        coalesce=np.asarray(coalesce, bool),
+        exposed=np.asarray(exposed, np.float32),
+        t_repl_i=np.asarray(t_repl_i, np.float32),
+        svc_i=svc_i,
+        n_repl_msgs=n_repl,
+        max_log_bytes=log_bytes,
+        cxl_mem_bw_gbps=mem_demand * ncn,
+        log_dump_bw_gbps=(dump_bw * ncn if config in _REPLICATING else 0.0),
+    )
+
+
+def _finish_result(cell: _CellInputs, exec_ns: float, at_head: int,
+                   sb_full: int) -> SimResult:
+    n = cell.n_stores
+    return SimResult(
+        workload=cell.spec.workload,
+        config=cell.spec.config,
+        exec_time_ns=float(exec_ns) * cell.work_scale,
+        n_stores=n,
+        n_repl_msgs=cell.n_repl_msgs,
+        repl_at_head_frac=float(at_head) / max(n, 1),
+        max_log_bytes=cell.max_log_bytes,
+        cxl_mem_bw_gbps=cell.cxl_mem_bw_gbps,
+        log_dump_bw_gbps=cell.log_dump_bw_gbps,
+        sb_full_frac=float(sb_full) / max(n, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Store-buffer timeline -- serial oracle (one lax.scan per cell)
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("config", "sb_size"))
 def _timeline(gaps: jax.Array, coalesce: jax.Array, exposed: jax.Array,
@@ -212,7 +415,75 @@ def _timeline(gaps: jax.Array, coalesce: jax.Array, exposed: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Public entry
+# Store-buffer timeline -- batched (one lax.scan for the whole grid)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("sb_max",))
+def _timeline_batch(gaps: jax.Array, coalesce: jax.Array, exposed: jax.Array,
+                    t_repl_i: jax.Array, svc_i: jax.Array,
+                    config_idx: jax.Array, sb_size: jax.Array, sb_max: int,
+                    t_l1: float, t_wt: float
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Branch-free batched timeline over ``(B, n_stores)`` cell arrays.
+
+    All five commit rules are evaluated per step (they share the retire
+    recurrence and are each a couple of flops on a (B,)-vector) and the
+    per-cell rule is selected by ``config_idx`` -- cheaper and simpler
+    than a ``lax.switch`` which would lower to the same selects under
+    batching anyway. The SB ring is a circular (B, sb_max) buffer with a
+    per-cell read offset, so cells with different ``sb_size`` share one
+    scan: slot ``(i - sb) % sb_max`` was last written at step ``i - sb``
+    (or never, for i < sb, where it still holds the zero init), which is
+    exactly the serial oracle's ``c_{i-sb}``.
+
+    Returns per-cell (exec_time_ns, repl_at_head_count, sb_full_count).
+    """
+    n_b = gaps.shape[0]
+    arrivals = jnp.cumsum(gaps, axis=1)
+    # loop-invariant per-cell config masks, hoisted out of the scan body
+    is_wt = config_idx == _CONFIG_IDX["wt"]
+    is_bl = config_idx == _CONFIG_IDX["baseline"]
+    is_pl = config_idx == _CONFIG_IDX["parallel"]
+    is_pr = config_idx == _CONFIG_IDX["proactive"]
+
+    def body(carry, inp):
+        ring, last_c, at_head, sb_full, i = carry
+        a_i, co_i, coh_i, tr_i, sv_i = inp            # each (B,)
+        read = (i - sb_size) % sb_max                  # (B,)
+        oldest = jnp.take_along_axis(ring, read[:, None], axis=1)[:, 0]
+        r_i = jnp.maximum(a_i, oldest)
+        sb_full = sb_full + (oldest > a_i).astype(jnp.int32)
+
+        serial = jnp.maximum(r_i, last_c)
+        c_wb = serial + t_l1
+        c_wt = serial + t_wt
+        c_bl = serial + jnp.where(co_i, t_l1, coh_i + tr_i)
+        c_pl = serial + jnp.where(co_i, t_l1, jnp.maximum(coh_i, tr_i))
+        c_pr_raw = jnp.maximum(jnp.maximum(r_i + tr_i, r_i + coh_i),
+                               last_c + sv_i)
+        c_pr = jnp.where(co_i, serial + t_l1, c_pr_raw)
+        c_i = jnp.where(is_pr, c_pr,
+                        jnp.where(is_pl, c_pl,
+                                  jnp.where(is_bl, c_bl,
+                                            jnp.where(is_wt, c_wt, c_wb))))
+
+        at_head = at_head + (is_pr & ~co_i
+                             & (r_i >= last_c)).astype(jnp.int32)
+        ring = ring.at[:, i % sb_max].set(c_i)
+        return (ring, c_i, at_head, sb_full, i + 1), None
+
+    init = (jnp.zeros((n_b, sb_max), jnp.float32),
+            jnp.zeros((n_b,), jnp.float32),
+            jnp.zeros((n_b,), jnp.int32),
+            jnp.zeros((n_b,), jnp.int32),
+            jnp.int32(0))
+    xs = (arrivals.T, coalesce.T, exposed.T, t_repl_i.T, svc_i.T)
+    (_, last_c, at_head, sb_full, _), _ = jax.lax.scan(body, init, xs)
+    return last_c, at_head, sb_full
+
+
+# ---------------------------------------------------------------------------
+# Public entries
 # ---------------------------------------------------------------------------
 
 def simulate(workload: str, config: str,
@@ -221,109 +492,124 @@ def simulate(workload: str, config: str,
              n_replicas: Optional[int] = None,
              link_bw_gbps: Optional[float] = None,
              n_cns: Optional[int] = None,
+             sb_size: Optional[int] = None,
              coalescing: bool = True) -> SimResult:
     """Simulate one (workload, config) pair; all sensitivity knobs of
-    Figs. 16-18 are exposed as overrides."""
-    if config not in CONFIGS:
-        raise ValueError(f"unknown config {config}")
+    Figs. 16-18 are exposed as overrides. This is the serial oracle the
+    batched path is differentially tested against."""
+    spec = ScenarioSpec(workload, config, seed=seed, n_replicas=n_replicas,
+                        link_bw_gbps=link_bw_gbps, n_cns=n_cns,
+                        sb_size=sb_size, coalescing=coalescing)
+    spec.validate(cluster)
     wl = WORKLOADS[workload]
-    nr = cluster.n_replicas if n_replicas is None else n_replicas
-    bw = cluster.cxl_link_bw_gbps if link_bw_gbps is None else link_bw_gbps
-    ncn = cluster.n_cns if n_cns is None else n_cns
-
     trace = synthesize_trace(wl, n_stores, seed, cluster)
+    cell = _prepare_cell(spec, trace, n_stores, cluster)
     costs = _commit_cost_ns(config, cluster)
-
-    # --- replication fan-out cost scaling -------------------------------
-    # N_r REPLs leave in parallel but share the CN's CXL port: serialization
-    # grows mildly with N_r; congestion scales latencies when offered load
-    # nears the link bandwidth (Fig. 16/17 behaviour).
-    repl_bytes = 8 + 64  # header + payload (coalesced line worst case)
-    mean_gap = float(np.mean(trace["gaps"]))
-    store_rate_per_core = 1e9 / max(mean_gap, 1e-3)          # stores/s/core
-    cores = cluster.cores_per_cn
-    repl_demand = store_rate_per_core * cores * nr * repl_bytes / 1e9  # GB/s
-    mem_bytes = 64 + 16
-    read_rate = (wl.remote_read_rate / wl.remote_store_rate) * store_rate_per_core
-    mem_demand = (store_rate_per_core + read_rate) * cores * mem_bytes / 1e9
-    total_demand = mem_demand + (repl_demand if config in
-                                 ("baseline", "parallel", "proactive") else 0.0)
-    congestion = max(1.0, total_demand / bw)
-    port_serial = 1.0 + 0.08 * (nr - 1)
-
-    coalesce = trace["coalesce"] if (coalescing and config != "wt") else \
-        np.zeros_like(trace["coalesce"])
-    exposed = trace["exposed_coh"] * congestion
-
-    # Per-store REPL latency: inflated inside cluster-wide bursts (the
-    # SPMD apps' flush phases align across CNs, so every Logging Unit is
-    # absorbing its peers' REPL streams at once). The ACK backlog ramps
-    # with position in the burst, capped when the SRAM Log Buffer
-    # backpressures into DRAM-speed handling; the *sustained* drain floor
-    # is the DRAM-log write path (~2 DRAM accesses per entry), which is
-    # what bounds ReCXL-proactive during long flushes.
-    svc_entry_ns = 2.0 * (1e3 / cluster.logging_unit_freq_mhz)  # SRAM path
-    # saturated drain: log-entry write + log-metadata RMW at DRAM speed
-    dram_svc_ns = 4.0 * cluster.dram_lat_ns
-    qslope = (svc_entry_ns * cores * nr * (1.0 - wl.coalesce_rate)
-              - cluster.cycle_ns)
-    qcap = 195.0                 # SRAM buffer backpressure bound (ns)
-    queue_i = np.minimum(trace["burst_pos"] * max(qslope, 0.0), qcap) \
-        * trace["in_burst"] * congestion
-    t_repl_base = costs["t_repl"] * congestion * port_serial
-    t_repl_i = t_repl_base + queue_i
-    # commit-drain service floor inside bursts (proactive path)
-    svc_floor = dram_svc_ns * (1.0 - wl.coalesce_rate) * congestion \
-        * (1.0 + 0.1 * (nr - cluster.n_replicas))
-    svc_i = np.where(trace["in_burst"], svc_floor,
-                     costs["t_drain"]).astype(np.float32)
-
-    # --- scaling with CN count: fewer CNs -> each runs more of the fixed
-    # total work (weak scaling of the cluster as in Fig. 18).
-    work_scale = cluster.n_cns / ncn
-
     exec_ns, at_head, sb_full = _timeline(
-        jnp.asarray(trace["gaps"]), jnp.asarray(coalesce),
-        jnp.asarray(exposed), jnp.asarray(t_repl_i, jnp.float32),
-        jnp.asarray(svc_i), config, cluster.store_buffer,
+        jnp.asarray(cell.gaps), jnp.asarray(cell.coalesce),
+        jnp.asarray(cell.exposed), jnp.asarray(cell.t_repl_i),
+        jnp.asarray(cell.svc_i), config, cell.sb_size,
         costs["t_l1"], costs["t_wt"], costs["t_drain"])
-    exec_ns = float(exec_ns) * work_scale
+    return _finish_result(cell, exec_ns, int(at_head), int(sb_full))
 
-    n_repl = int(n_stores - coalesce.sum()) if config in (
-        "baseline", "parallel", "proactive") else 0
 
-    # --- log sizing (Fig. 13): entries accumulated per dump period ------
-    entry_bytes = 12                       # Fig. 5: ~97 bits
-    stores_per_s = store_rate_per_core * cores * nr  # logged at N_r peers / N_r srcs
-    log_bytes = stores_per_s * (cluster.dump_period_ms * 1e-3) * entry_bytes
-    dump_bw = (log_bytes / cluster.gzip_factor) / (cluster.dump_period_ms * 1e-3) / 1e9
+def _pad_len(n: int, mult: int = 8) -> int:
+    return max(((n + mult - 1) // mult) * mult, mult)
 
-    return SimResult(
-        workload=workload,
-        config=config,
-        exec_time_ns=exec_ns,
-        n_stores=n_stores,
-        n_repl_msgs=n_repl,
-        repl_at_head_frac=float(at_head) / max(n_stores, 1),
-        max_log_bytes=log_bytes,
-        cxl_mem_bw_gbps=mem_demand * ncn,
-        log_dump_bw_gbps=(dump_bw * ncn if config in
-                          ("baseline", "parallel", "proactive") else 0.0),
-        sb_full_frac=float(sb_full) / max(n_stores, 1),
-    )
+
+def simulate_batch(specs: Sequence[ScenarioSpec],
+                   cluster: ClusterConfig = PAPER_CLUSTER,
+                   n_stores: int = 50_000) -> List[SimResult]:
+    """Simulate a whole scenario grid in one jitted call.
+
+    Results come back in ``specs`` order. Unique ``(workload, seed)``
+    traces are synthesized once and shared across every cell that scans
+    them; the batch is padded to a multiple of 8 cells (and SB rings to
+    the widest cell, rounded to a multiple of 8) so sweeps of similar
+    size reuse one compiled program.
+    """
+    if not specs:
+        return []
+    for s in specs:
+        s.validate(cluster)
+
+    traces: Dict[Tuple[str, int], Dict[str, np.ndarray]] = {}
+    for s in specs:
+        key = (s.workload, s.seed)
+        if key not in traces:
+            traces[key] = synthesize_trace(WORKLOADS[s.workload], n_stores,
+                                           s.seed, cluster)
+    cells = [_prepare_cell(s, traces[(s.workload, s.seed)], n_stores, cluster)
+             for s in specs]
+
+    n_real = len(cells)
+    n_pad = _pad_len(n_real)
+    padded = cells + [cells[0]] * (n_pad - n_real)
+    sb_max = _pad_len(max(c.sb_size for c in padded))
+
+    costs = _commit_cost_ns("proactive", cluster)   # t_l1/t_wt are shared
+    exec_ns, at_head, sb_full = _timeline_batch(
+        jnp.asarray(np.stack([c.gaps for c in padded])),
+        jnp.asarray(np.stack([c.coalesce for c in padded])),
+        jnp.asarray(np.stack([c.exposed for c in padded])),
+        jnp.asarray(np.stack([c.t_repl_i for c in padded])),
+        jnp.asarray(np.stack([c.svc_i for c in padded])),
+        jnp.asarray([c.config_idx for c in padded], jnp.int32),
+        jnp.asarray([c.sb_size for c in padded], jnp.int32),
+        sb_max, costs["t_l1"], costs["t_wt"])
+    exec_ns = np.asarray(exec_ns)
+    at_head = np.asarray(at_head)
+    sb_full = np.asarray(sb_full)
+
+    return [_finish_result(c, exec_ns[i], int(at_head[i]), int(sb_full[i]))
+            for i, c in enumerate(cells)]
+
+
+def slowdowns_from_results(results: Sequence[SimResult],
+                           baseline: str = "wb"
+                           ) -> Dict[str, Dict[str, float]]:
+    """Group batched SimResults into a per-workload slowdown table
+    normalized to ``baseline`` (one ``baseline`` cell per workload must
+    be present; cells are keyed by (workload, config), so pass results
+    from a grid that does not repeat a cell with different knobs)."""
+    times: Dict[str, Dict[str, float]] = {}
+    for r in results:
+        times.setdefault(r.workload, {})[r.config] = r.exec_time_ns
+    out: Dict[str, Dict[str, float]] = {}
+    for w, row in times.items():
+        if baseline not in row:
+            raise ValueError(f"no {baseline!r} cell for workload {w!r}")
+        out[w] = {c: t / row[baseline] for c, t in row.items()}
+    return out
 
 
 def slowdown_table(configs: Tuple[str, ...] = CONFIGS,
                    workloads: Optional[Tuple[str, ...]] = None,
-                   n_stores: int = 50_000, **kw) -> Dict[str, Dict[str, float]]:
-    """Fig. 2 / Fig. 10: per-workload slowdowns normalized to WB."""
+                   n_stores: int = 50_000, batched: bool = True,
+                   cluster: ClusterConfig = PAPER_CLUSTER,
+                   **kw) -> Dict[str, Dict[str, float]]:
+    """Fig. 2 / Fig. 10: per-workload slowdowns normalized to WB.
+
+    ``batched=True`` (default) runs the whole grid as ONE
+    ``simulate_batch`` call; ``batched=False`` keeps the serial per-cell
+    oracle loop for differential testing. ``kw`` takes any ScenarioSpec
+    knob (seed, n_replicas, link_bw_gbps, n_cns, sb_size, coalescing).
+    """
     workloads = workloads or tuple(WORKLOADS)
+    cfgs = tuple(dict.fromkeys(("wb",) + tuple(configs)))
+    if batched:
+        specs = [ScenarioSpec(w, c, **kw) for w in workloads for c in cfgs]
+        results = simulate_batch(specs, cluster=cluster, n_stores=n_stores)
+        table = slowdowns_from_results(results)
+        return {w: {c: table[w][c] for c in configs} for w in workloads}
     out: Dict[str, Dict[str, float]] = {}
     for w in workloads:
-        base = simulate(w, "wb", n_stores=n_stores, **kw).exec_time_ns
+        base = simulate(w, "wb", cluster=cluster, n_stores=n_stores,
+                        **kw).exec_time_ns
         out[w] = {}
         for c in configs:
-            t = simulate(w, c, n_stores=n_stores, **kw).exec_time_ns
+            t = simulate(w, c, cluster=cluster, n_stores=n_stores,
+                         **kw).exec_time_ns
             out[w][c] = t / base
     return out
 

@@ -59,6 +59,45 @@ def mesh_context(ctx: MeshContext) -> Iterator[MeshContext]:
         set_mesh_context(prev)
 
 
+def make_mesh(axis_shapes: Tuple[int, ...], axis_names: Tuple[str, ...],
+              devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` across jax versions: newer releases want explicit
+    ``axis_types`` (Auto) for the shard_map regions; older ones (<= 0.4.x)
+    have neither the kwarg nor ``jax.sharding.AxisType``."""
+    kwargs = {} if devices is None else {"devices": devices}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names,
+                axis_types=(axis_type.Auto,) * len(axis_names), **kwargs)
+        except TypeError:
+            pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+    # jax < 0.4.35: no jax.make_mesh at all
+    from jax.experimental import mesh_utils
+    devs = mesh_utils.create_device_mesh(tuple(axis_shapes),
+                                         devices=devices)
+    return jax.sharding.Mesh(devs, tuple(axis_names))
+
+
+def shard_map(f, mesh: jax.sharding.Mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions: the top-level API (with
+    ``check_vma``) landed after 0.4.x, where the same transform lives in
+    ``jax.experimental.shard_map`` and the kwarg is ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:          # releases where the kwarg is check_rep
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
+
+
 def make_context(mesh: jax.sharding.Mesh) -> MeshContext:
     """Derive the canonical context from a mesh's axis names."""
     names = mesh.axis_names

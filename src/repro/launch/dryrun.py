@@ -44,7 +44,9 @@ from repro.config import (
 )
 from repro.configs import ASSIGNED_ARCHS
 from repro.core.replication import ReplicationEngine
-from repro.distributed.context import make_context, mesh_context
+from repro.distributed.context import (make_context,
+                                        make_mesh as make_compat_mesh,
+                                        mesh_context)
 from repro.distributed.sharding import (
     batch_specs,
     cache_specs,
@@ -113,9 +115,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     if mesh_shape is not None:
         axes = ("pod", "data", "model")[-len(mesh_shape):]
-        mesh = jax.make_mesh(
-            mesh_shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_shape))
+        mesh = make_compat_mesh(mesh_shape, axes)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     ctx = make_context(mesh)

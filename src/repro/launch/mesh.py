@@ -12,6 +12,7 @@ from typing import Optional, Tuple
 import jax
 
 from repro.config import MeshConfig, MULTI_POD, SINGLE_POD
+from repro.distributed.context import make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -19,14 +20,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     2x16x16 (512 chips, two pods)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(cfg: MeshConfig) -> jax.sharding.Mesh:
-    return jax.make_mesh(
-        cfg.shape, cfg.axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.axes))
+    return _make_mesh(cfg.shape, cfg.axes)
 
 
 def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
@@ -34,6 +32,5 @@ def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
     n = jax.device_count()
     if n % model_parallel:
         raise ValueError(f"{n} devices not divisible by mp={model_parallel}")
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+    return _make_mesh((n // model_parallel, model_parallel),
+                      ("data", "model"))

@@ -33,7 +33,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
-from repro.distributed.context import get_mesh_context
+from repro.distributed.context import get_mesh_context, shard_map
 from repro.models.layers import Params, dense_init, dtype_of, mlp_apply, mlp_init
 
 
@@ -229,9 +229,9 @@ def moe_apply(params: Params, x: jax.Array, cfg: ModelConfig
         # psum makes outputs replicated again. check_vma is disabled because
         # x is intentionally replicated over the model axis on entry.
         sm_params = {k: params[k] for k in specs}
-        out, aux = jax.shard_map(
-            sharded, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False)(x, sm_params)
+        out, aux = shard_map(
+            sharded, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs)(x, sm_params)
 
     if ctx is None and "shared" in params:
         xf = x.reshape(-1, d)

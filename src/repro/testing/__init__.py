@@ -1,0 +1,5 @@
+"""Test-support utilities (hypothesis fallback shim)."""
+
+from repro.testing.hypothesis_compat import install_hypothesis_shim
+
+__all__ = ["install_hypothesis_shim"]

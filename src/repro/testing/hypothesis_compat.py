@@ -1,0 +1,299 @@
+"""Minimal ``hypothesis`` fallback so the tier-1 suite collects and runs
+in environments without the real package.
+
+The real library is always preferred: ``install_hypothesis_shim()`` is a
+no-op when ``import hypothesis`` succeeds. Otherwise it registers a tiny
+deterministic stand-in under ``sys.modules['hypothesis']`` implementing
+the subset this repo's property tests use:
+
+* ``@given(*strategies)`` -- runs the test for a fixed, seeded sample of
+  examples (seeded by the test's qualified name, so failures reproduce);
+* ``@settings(max_examples=..., deadline=...)`` -- ``max_examples`` is
+  respected up to a cap (the shim samples fixed examples, it does not
+  shrink or search, so huge example counts buy nothing);
+* ``strategies``: ``integers, floats, booleans, just, sampled_from,
+  lists, tuples, one_of, permutations, composite`` and ``assume``.
+
+This is NOT a property-testing engine -- no shrinking, no coverage
+guidance, no database. It exists so `pytest` stays green and the
+properties still get exercised on a spread of deterministic inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, List, Optional, Sequence
+
+_MAX_EXAMPLES_CAP = 20
+_DEFAULT_EXAMPLES = 10
+
+
+class _Unsatisfied(Exception):
+    """Raised by ``assume(False)``: skip this example."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class SearchStrategy:
+    def example_from(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base: SearchStrategy, fn: Callable):
+        self.base, self.fn = base, fn
+
+    def example_from(self, rng):
+        return self.fn(self.base.example_from(rng))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base: SearchStrategy, pred: Callable):
+        self.base, self.pred = base, pred
+
+    def example_from(self, rng):
+        for _ in range(100):
+            x = self.base.example_from(rng)
+            if self.pred(x):
+                return x
+        raise _Unsatisfied()
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int = -(2 ** 31), max_value: int = 2 ** 31):
+        self.lo, self.hi = min_value, max_value
+
+    def example_from(self, rng):
+        # hit the boundaries sometimes -- they are the classic bug nests
+        r = rng.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float = 0.0, max_value: float = 1.0,
+                 **_ignored):
+        self.lo, self.hi = min_value, max_value
+
+    def example_from(self, rng):
+        r = rng.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(SearchStrategy):
+    def example_from(self, rng):
+        return rng.random() < 0.5
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example_from(self, rng):
+        return self.value
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def example_from(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size: int = 0,
+                 max_size: Optional[int] = None, unique: bool = False):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+        self.unique = unique
+
+    def example_from(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        out: List[Any] = []
+        tries = 0
+        while len(out) < n and tries < 100 * (n + 1):
+            x = self.elements.example_from(rng)
+            tries += 1
+            if self.unique and x in out:
+                continue
+            out.append(x)
+        if len(out) < self.min_size:
+            # element strategy cannot yield enough distinct values --
+            # never hand the test an input hypothesis would forbid
+            raise _Unsatisfied()
+        return out
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *strategies: SearchStrategy):
+        self.strategies = strategies
+
+    def example_from(self, rng):
+        return tuple(s.example_from(rng) for s in self.strategies)
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, *strategies: SearchStrategy):
+        self.strategies = strategies
+
+    def example_from(self, rng):
+        return rng.choice(self.strategies).example_from(rng)
+
+
+class _Permutations(SearchStrategy):
+    def __init__(self, values: Sequence[Any]):
+        self.values = list(values)
+
+    def example_from(self, rng):
+        out = list(self.values)
+        rng.shuffle(out)
+        return out
+
+
+class _Composite(SearchStrategy):
+    def __init__(self, fn: Callable, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def example_from(self, rng):
+        def draw(strategy: SearchStrategy) -> Any:
+            return strategy.example_from(rng)
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+def composite(fn: Callable) -> Callable:
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        return _Composite(fn, args, kwargs)
+    return builder
+
+
+class settings:
+    """Decorator recording (a subset of) hypothesis settings."""
+
+    def __init__(self, max_examples: int = _DEFAULT_EXAMPLES,
+                 deadline: Any = None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._hypothesis_shim_settings = self
+        return fn
+
+
+class HealthCheck:
+    """Placeholder namespace (the shim never raises health checks)."""
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+    function_scoped_fixture = "function_scoped_fixture"
+
+    @staticmethod
+    def all():
+        return []
+
+
+def given(*strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    def decorate(fn):
+        base_settings = getattr(fn, "_hypothesis_shim_settings", None)
+
+        @functools.wraps(fn)
+        def wrapper():
+            cfg = getattr(wrapper, "_hypothesis_shim_settings",
+                          base_settings)
+            n = min(cfg.max_examples if cfg else _DEFAULT_EXAMPLES,
+                    _MAX_EXAMPLES_CAP)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            ran = 0
+            for _ in range(4 * n):
+                if ran >= n:
+                    break
+                try:
+                    args = [s.example_from(rng) for s in strategies]
+                    kwargs = {k: s.example_from(rng)
+                              for k, s in kw_strategies.items()}
+                except _Unsatisfied:
+                    continue
+                try:
+                    fn(*args, **kwargs)
+                except _Unsatisfied:
+                    continue
+                ran += 1
+            if ran == 0:
+                raise _Unsatisfied(
+                    f"{fn.__qualname__}: no example satisfied assume()")
+
+        # pytest must see a zero-arg function (all inputs come from the
+        # strategies), not the wrapped test's parameter list
+        wrapper.__signature__ = inspect.Signature()
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.hypothesis_shim = True
+        return wrapper
+    return decorate
+
+
+def _build_modules() -> types.ModuleType:
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = __doc__
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _Integers
+    st.floats = _Floats
+    st.booleans = _Booleans
+    st.just = _Just
+    st.sampled_from = _SampledFrom
+    st.lists = _Lists
+    st.tuples = _Tuples
+    st.one_of = _OneOf
+    st.permutations = _Permutations
+    st.composite = composite
+    st.SearchStrategy = SearchStrategy
+    hyp.strategies = st
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.__version__ = "0.0-repro-shim"
+    return hyp
+
+
+def install_hypothesis_shim() -> bool:
+    """Register the shim iff the real hypothesis is unavailable.
+
+    Returns True when the shim was installed, False when the real
+    package (or an already-installed shim) is in use.
+    """
+    try:
+        import hypothesis  # noqa: F401
+        return False
+    except ImportError:
+        pass
+    hyp = _build_modules()
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = hyp.strategies
+    return True

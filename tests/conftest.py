@@ -1,18 +1,38 @@
-"""Shared fixtures.
+"""Shared fixtures + environment bootstrap.
 
 NOTE: tests intentionally do NOT set XLA_FLAGS device-count overrides
 globally (the dry-run launcher owns that); multi-device tests spawn their
 mesh from a session-scoped 8-device override ONLY if no jax backend has
 been initialized yet.
+
+Two compat layers are installed here, before any test module imports:
+
+* ``src`` goes on ``sys.path`` so plain ``pytest`` works without the
+  ``PYTHONPATH=src`` prefix;
+* when the real ``hypothesis`` package is missing, the deterministic
+  fallback from ``repro.testing`` is registered so the property-test
+  modules still collect and run (see hypothesis_compat.py).
 """
 
 import os
+import sys
 
 # 8 host devices for the distributed tests; set before any jax import.
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.isdir(_SRC) and os.path.abspath(_SRC) not in map(
+        os.path.abspath, sys.path):
+    sys.path.insert(0, _SRC)
+
+from repro.testing import install_hypothesis_shim
+
+install_hypothesis_shim()
+
 import jax
 import pytest
+
+from repro.distributed.context import make_mesh
 
 
 @pytest.fixture(scope="session")
@@ -20,8 +40,7 @@ def mesh8():
     """(4 data x 2 model) mesh over 8 host devices."""
     if jax.device_count() < 8:
         pytest.skip("needs 8 devices (XLA_FLAGS was already consumed)")
-    return jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((4, 2), ("data", "model"))
 
 
 @pytest.fixture(scope="session")
@@ -29,5 +48,4 @@ def pod_mesh8():
     """(2 pod x 2 data x 2 model) mesh over 8 host devices."""
     if jax.device_count() < 8:
         pytest.skip("needs 8 devices")
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return make_mesh((2, 2, 2), ("pod", "data", "model"))

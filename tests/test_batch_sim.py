@@ -1,0 +1,134 @@
+"""Differential tests: ``simulate_batch`` vs the serial ``simulate()``
+oracle, over a grid spanning every config and every sensitivity knob.
+
+The batched-vs-serial contract (simulator.py module docstring) promises
+<= 1e-5 relative error on every SimResult field; in practice the two
+paths share trace synthesis + cost derivation and apply identical
+arithmetic, so they agree bit-for-bit.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import (
+    CONFIGS,
+    ScenarioSpec,
+    geomean_slowdowns,
+    simulate,
+    simulate_batch,
+    slowdown_table,
+)
+
+N = 6_000
+RTOL = 1e-5
+FLOAT_FIELDS = ("exec_time_ns", "repl_at_head_frac", "sb_full_frac",
+                "max_log_bytes", "cxl_mem_bw_gbps", "log_dump_bw_gbps")
+
+# every config x a workload spread, plus one cell per sensitivity knob
+GRID = (
+    [ScenarioSpec(w, c)
+     for w in ("ycsb", "raytrace", "ocean_ncp", "streamcluster")
+     for c in CONFIGS]
+    + [
+        ScenarioSpec("canneal", "proactive", seed=7),
+        ScenarioSpec("barnes", "proactive", n_replicas=4),
+        ScenarioSpec("bodytrack", "baseline", link_bw_gbps=20.0),
+        ScenarioSpec("fluidanimate", "proactive", n_cns=4),
+        ScenarioSpec("ycsb", "parallel", sb_size=16),
+        ScenarioSpec("ocean_cp", "proactive", coalescing=False),
+        ScenarioSpec("ycsb", "wt", seed=2),
+    ]
+)
+
+
+def _serial(spec: ScenarioSpec):
+    return simulate(spec.workload, spec.config, n_stores=N, seed=spec.seed,
+                    n_replicas=spec.n_replicas,
+                    link_bw_gbps=spec.link_bw_gbps, n_cns=spec.n_cns,
+                    sb_size=spec.sb_size, coalescing=spec.coalescing)
+
+
+@pytest.fixture(scope="module")
+def batch_results():
+    return simulate_batch(GRID, n_stores=N)
+
+
+def test_batch_matches_serial_on_grid(batch_results):
+    assert len(batch_results) == len(GRID)
+    for spec, rb in zip(GRID, batch_results):
+        rs = _serial(spec)
+        assert rb.workload == spec.workload and rb.config == spec.config
+        assert rb.n_stores == rs.n_stores == N
+        assert rb.n_repl_msgs == rs.n_repl_msgs, spec
+        for f in FLOAT_FIELDS:
+            a, b = getattr(rs, f), getattr(rb, f)
+            np.testing.assert_allclose(b, a, rtol=RTOL, err_msg=f"{spec} {f}")
+
+
+def test_batch_results_preserve_spec_order(batch_results):
+    for spec, r in zip(GRID, batch_results):
+        assert (r.workload, r.config) == (spec.workload, spec.config)
+
+
+def test_batch_deterministic(batch_results):
+    again = simulate_batch(GRID, n_stores=N)
+    for a, b in zip(batch_results, again):
+        assert a.exec_time_ns == b.exec_time_ns
+        assert a.repl_at_head_frac == b.repl_at_head_frac
+
+
+def test_odd_batch_sizes_padded_correctly():
+    """Non-multiple-of-8 batches must pad internally without leaking
+    padding cells into the output."""
+    specs = [ScenarioSpec("ycsb", "proactive"),
+             ScenarioSpec("raytrace", "wb"),
+             ScenarioSpec("barnes", "wt", seed=1)]
+    out = simulate_batch(specs, n_stores=N)
+    assert len(out) == 3
+    for spec, rb in zip(specs, out):
+        rs = _serial(spec)
+        np.testing.assert_allclose(rb.exec_time_ns, rs.exec_time_ns,
+                                   rtol=RTOL)
+
+
+def test_single_cell_batch_matches_serial():
+    spec = ScenarioSpec("ocean_ncp", "proactive", sb_size=24)
+    (rb,) = simulate_batch([spec], n_stores=N)
+    rs = _serial(spec)
+    np.testing.assert_allclose(rb.exec_time_ns, rs.exec_time_ns, rtol=RTOL)
+    np.testing.assert_allclose(rb.sb_full_frac, rs.sb_full_frac, rtol=RTOL)
+
+
+def test_empty_batch():
+    assert simulate_batch([], n_stores=N) == []
+
+
+def test_invalid_specs_rejected():
+    with pytest.raises(ValueError):
+        simulate_batch([ScenarioSpec("ycsb", "nosuch")], n_stores=N)
+    with pytest.raises(ValueError):
+        simulate_batch([ScenarioSpec("nosuch", "wb")], n_stores=N)
+    with pytest.raises(ValueError):
+        simulate_batch([ScenarioSpec("ycsb", "wb", sb_size=0)], n_stores=N)
+    with pytest.raises(ValueError):
+        simulate_batch([ScenarioSpec("ycsb", "wb", n_replicas=0)], n_stores=N)
+    with pytest.raises(ValueError):
+        simulate_batch([ScenarioSpec("ycsb", "wb", n_cns=0)], n_stores=N)
+    with pytest.raises(ValueError):
+        simulate_batch([ScenarioSpec("ycsb", "wb", link_bw_gbps=0.0)],
+                       n_stores=N)
+
+
+def test_slowdown_table_batched_matches_serial():
+    workloads = ("ycsb", "raytrace")
+    t_batched = slowdown_table(workloads=workloads, n_stores=N, batched=True)
+    t_serial = slowdown_table(workloads=workloads, n_stores=N, batched=False)
+    assert set(t_batched) == set(t_serial)
+    for w in workloads:
+        for c in CONFIGS:
+            np.testing.assert_allclose(t_batched[w][c], t_serial[w][c],
+                                       rtol=RTOL, err_msg=f"{w}/{c}")
+    gm_b = geomean_slowdowns(t_batched)
+    gm_s = geomean_slowdowns(t_serial)
+    for c in CONFIGS:
+        np.testing.assert_allclose(gm_b[c], gm_s[c], rtol=RTOL)

@@ -87,15 +87,16 @@ def test_vmem_scan_suppresses_bytes_not_flops():
 def test_shard_map_multiplies_by_devices(mesh8):
     from jax.sharding import PartitionSpec as P
 
+    from repro.distributed.context import shard_map
+
     w = jnp.zeros((8, 16, 16), jnp.float32)
 
     def f(w):
         def inner(wl):
             return wl[0] @ wl[0]
-        return jax.shard_map(inner, mesh=mesh8,
-                             in_specs=P(("data", "model")),
-                             out_specs=P(("data", "model")),
-                             check_vma=False)(w)
+        return shard_map(inner, mesh=mesh8,
+                         in_specs=P(("data", "model")),
+                         out_specs=P(("data", "model")))(w)
 
     c = jaxpr_cost(f, (w,), mesh_size=8)
     assert c["flops"] == 8 * 2 * 16 * 16 * 16

@@ -12,7 +12,7 @@ from jax.sharding import PartitionSpec as P
 
 import repro
 from repro.config import ShapeConfig
-from repro.distributed.context import make_context, mesh_context
+from repro.distributed.context import make_context, make_mesh, mesh_context
 from repro.distributed.sharding import param_specs, sanitize_spec
 from repro.models import attention as attn
 from repro.models import build_model
@@ -178,8 +178,7 @@ def test_moe_no_drop_equals_dense_mixture():
 # ---------------------------------------------------------------------------
 
 def test_sanitize_spec_prefix():
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     # 12 divides (model, pod) = 4 but not (model, pod, data) = 8:
     # the longest dividing prefix survives
     s = sanitize_spec(P(("model", "pod", "data")), (12,), mesh)
