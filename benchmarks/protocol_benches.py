@@ -6,9 +6,13 @@ Every function returns a list of row dicts with at least
 All grids run through the batched sweep engine (``simulate_batch`` /
 ``core.scenarios`` grid builders): one jitted call per figure instead of
 a serial Python loop per cell. ``bench_batch_speedup`` keeps the serial
-oracle honest by timing both paths on the full Fig. 10 grid and
-reporting the wall-clock ratio, so the speedup is tracked in the
-``BENCH_*.json`` history.
+oracle and both batched engines (blocked default vs PR-1 per-step)
+honest by timing all paths on the full Fig. 10 grid and reporting the
+wall-clock ratios, so the speedups are tracked in the ``BENCH_*.json``
+history. ``bench_recovery`` adds the SS VII-E downtime model rows
+(``fig9/recovery/*``) from one batched failure-time x node sweep.
+
+See README.md (in this directory) for the bench-row schema.
 
 Quick smoke mode for CI: set ``RECXL_BENCH_QUICK=1`` (shrinks the store
 count) -- or override the store count directly with
@@ -85,12 +89,18 @@ def bench_protocols() -> List[Dict]:
 
 
 def bench_batch_speedup() -> List[Dict]:
-    """Serial-vs-batched wall-clock on the full Fig. 10 grid (45 cells).
+    """Engine wall-clock comparison on the full Fig. 10 grid (45 cells).
 
-    Both paths are warmed once so the row tracks steady-state sweep
-    throughput, not XLA compile time; the cold batched time is reported
-    in its own row since a CI smoke run pays it.
+    Four paths: the serial per-cell oracle loop; the PR-1 batched path
+    (per-step scan, host prep re-done every call -- exactly what PR 1
+    shipped, reproduced by clearing the input caches); the per-step
+    engine with cached inputs; and the blocked engine (the
+    ``simulate_batch`` default). Steady-state rows are warmed so they
+    track sweep throughput, not XLA compile time; the cold blocked time
+    is its own row since a CI smoke run pays it.
     """
+    from repro.core.simulator import _batch_inputs, _trace_cached
+
     specs = [ScenarioSpec(w, c) for w in WORKLOADS for c in CONFIGS]
 
     t0 = time.perf_counter()
@@ -98,7 +108,18 @@ def bench_batch_speedup() -> List[Dict]:
     cold_s = time.perf_counter() - t0
     t0 = time.perf_counter()
     simulate_batch(specs, n_stores=N_STORES)
-    batched_s = time.perf_counter() - t0
+    blocked_s = time.perf_counter() - t0
+
+    simulate_batch(specs, n_stores=N_STORES, chunk_size=0)   # warm per-step
+    t0 = time.perf_counter()
+    simulate_batch(specs, n_stores=N_STORES, chunk_size=0)
+    perstep_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()                                 # PR-1 path
+    _batch_inputs.cache_clear()
+    _trace_cached.cache_clear()
+    simulate_batch(specs, n_stores=N_STORES, chunk_size=0)
+    pr1_s = time.perf_counter() - t0
 
     for s in specs[:5]:                     # warm the per-config serial jits
         simulate(s.workload, s.config, n_stores=N_STORES)
@@ -107,16 +128,27 @@ def bench_batch_speedup() -> List[Dict]:
         simulate(s.workload, s.config, n_stores=N_STORES)
     serial_s = time.perf_counter() - t0
 
+    n = len(specs)
     return [
-        {"name": "fig10/sweep/serial_ms", "us_per_call": serial_s * 1e6 / len(specs),
+        {"name": "fig10/sweep/serial_ms", "us_per_call": serial_s * 1e6 / n,
          "derived": round(serial_s * 1e3, 2)},
-        {"name": "fig10/sweep/batched_ms", "us_per_call": batched_s * 1e6 / len(specs),
-         "derived": round(batched_s * 1e3, 2)},
-        {"name": "fig10/sweep/batched_cold_ms", "us_per_call": cold_s * 1e6 / len(specs),
+        {"name": "fig10/sweep/pr1_perstep_uncached_ms",
+         "us_per_call": pr1_s * 1e6 / n, "derived": round(pr1_s * 1e3, 2)},
+        {"name": "fig10/sweep/perstep_ms", "us_per_call": perstep_s * 1e6 / n,
+         "derived": round(perstep_s * 1e3, 2)},
+        {"name": "fig10/sweep/batched_ms", "us_per_call": blocked_s * 1e6 / n,
+         "derived": round(blocked_s * 1e3, 2)},
+        {"name": "fig10/sweep/batched_cold_ms", "us_per_call": cold_s * 1e6 / n,
          "derived": round(cold_s * 1e3, 2)},
         {"name": "fig10/sweep/speedup_serial_over_batched",
          "us_per_call": 0.0,
-         "derived": round(serial_s / max(batched_s, 1e-9), 2)},
+         "derived": round(serial_s / max(blocked_s, 1e-9), 2)},
+        {"name": "fig10/sweep/speedup_pr1_over_blocked",
+         "us_per_call": 0.0,
+         "derived": round(pr1_s / max(blocked_s, 1e-9), 2)},
+        {"name": "fig10/sweep/speedup_perstep_over_blocked",
+         "us_per_call": 0.0,
+         "derived": round(perstep_s / max(blocked_s, 1e-9), 2)},
     ]
 
 
@@ -240,8 +272,52 @@ def bench_num_nodes() -> List[Dict]:
     return rows
 
 
+def bench_recovery() -> List[Dict]:
+    """SS VII-E / Fig. 9: estimated downtime after a CN fail-stop.
+
+    One jitted ``recovery_sweep`` call covers the whole (workload x
+    failure-time x node-count) grid; rows report per-workload downtime
+    at mid-interval on 16 CNs, the worst-case/best-case ratio across
+    the failure-time axis (the undumped log grows until the next dump),
+    the 4-CN over 16-CN ratio (fewer nodes -> bigger shards to replay),
+    and the batched sweep's wall-clock.
+    """
+    from repro.core.scenarios import recovery_sweep
+
+    sweep = recovery_sweep()                       # warm the jit
+    t0 = time.perf_counter()
+    sweep = recovery_sweep()
+    wall_s = time.perf_counter() - t0
+
+    t_lo, t_mid, t_hi = sweep.fail_times_ms
+    rows = []
+    for w in sweep.workloads:
+        rows.append({"name": f"fig9/recovery/{w}/downtime_ms",
+                     "us_per_call": sweep.total_ms(w, t_mid, 16) * 1e3,
+                     "derived": round(sweep.total_ms(w, t_mid, 16), 4)})
+    iw = sweep.workloads.index("ycsb")
+    late = sweep.total_ns[iw, sweep.fail_times_ms.index(t_hi),
+                          sweep.cn_counts.index(16)]
+    early = sweep.total_ns[iw, sweep.fail_times_ms.index(t_lo),
+                           sweep.cn_counts.index(16)]
+    rows.append({"name": "fig9/recovery/ycsb/late_over_early_fail",
+                 "us_per_call": 0.0, "derived": round(float(late / early), 3)})
+    cn4 = sweep.total_ns[iw, sweep.fail_times_ms.index(t_mid),
+                         sweep.cn_counts.index(4)]
+    cn16 = sweep.total_ns[iw, sweep.fail_times_ms.index(t_mid),
+                          sweep.cn_counts.index(16)]
+    rows.append({"name": "fig9/recovery/ycsb/cn4_over_cn16",
+                 "us_per_call": 0.0, "derived": round(float(cn4 / cn16), 3)})
+    n_cells = sweep.total_ns.size
+    rows.append({"name": "fig9/recovery/sweep_ms",
+                 "us_per_call": wall_s * 1e6 / n_cells,
+                 "derived": round(wall_s * 1e3, 3)})
+    return rows
+
+
 ALL_PROTOCOL_BENCHES = [
     bench_wb_wt, bench_protocols, bench_batch_speedup, bench_repl_timing,
     bench_coalescing, bench_log_size, bench_bandwidth, bench_owned_lines,
     bench_link_bw, bench_replication_factor, bench_num_nodes,
+    bench_recovery,
 ]

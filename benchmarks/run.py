@@ -4,7 +4,10 @@ and roofline benches. Prints ``name,us_per_call,derived`` CSV.
 Sections:
   fig2/*        WB vs WT (paper Fig. 2)
   fig10/*       five configurations + geomeans vs paper claims (Fig. 10),
-                plus fig10/sweep/* serial-vs-batched wall-clock tracking
+                plus fig10/sweep/* engine wall-clock tracking (serial
+                oracle vs PR-1 per-step scan vs blocked scan)
+  fig9/recovery/*  SS VII-E downtime estimates from the batched
+                failure-time x node recovery sweep
   fig11..18/*   characterization + sensitivity (Figs. 11-18)
   framework/*   jitted step wall times per ReCXL variant, Logging-Unit op
                 latencies, log-compressor throughput

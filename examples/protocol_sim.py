@@ -1,10 +1,12 @@
 """Reproduce the paper's headline evaluation (Figs. 2 and 10) with the
-trace-driven protocol simulator and compare against the published claims.
+trace-driven protocol simulator, compare against the published claims,
+and estimate post-failure downtime (SS VII-E).
 
 The whole 9-workload x 5-configuration grid runs as ONE batched
-``simulate_batch`` call (see the ScenarioSpec API in
-repro/core/simulator.py); the serial oracle is timed alongside for
-reference.
+``simulate_batch`` call through the blocked-scan engine (see the
+ScenarioSpec API in repro/core/simulator.py); the PR-1 per-step engine
+is timed alongside for reference, and a batched ``recovery_sweep``
+reports estimated downtime per workload across the dump interval.
 
     PYTHONPATH=src python examples/protocol_sim.py
 """
@@ -12,6 +14,7 @@ reference.
 import time
 
 from repro.configs.recxl_paper import PAPER_CLAIMS, WORKLOADS
+from repro.core.scenarios import recovery_sweep
 from repro.core.simulator import (
     CONFIGS,
     ScenarioSpec,
@@ -29,10 +32,17 @@ def main() -> None:
     specs = [ScenarioSpec(w, c) for w in WORKLOADS for c in CONFIGS]
     t0 = time.perf_counter()
     results = simulate_batch(specs, n_stores=N_STORES)
-    wall = time.perf_counter() - t0
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    results = simulate_batch(specs, n_stores=N_STORES)
+    warm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    simulate_batch(specs, n_stores=N_STORES, chunk_size=0)
+    perstep = time.perf_counter() - t0
     table = slowdowns_from_results(results)
     gm = geomean_slowdowns(table)
-    print(f"...{len(specs)} cells in {wall:.2f}s (one jitted batch)")
+    print(f"...{len(specs)} cells: {cold:.2f}s cold, {warm*1e3:.0f} ms warm "
+          f"(blocked scan; per-step engine: {perstep*1e3:.0f} ms)")
 
     print(f"\n{'workload':14s}" + "".join(
         f"{c:>11s}" for c in CONFIGS))
@@ -52,6 +62,14 @@ def main() -> None:
     print(f"  {'configuration':22s}{'reproduced':>12s}{'paper':>8s}")
     for name, got, paper in rows:
         print(f"  {name:22s}{got:12.2f}{paper:8.2f}")
+
+    print("\nestimated downtime after a CN fail-stop (SS VII-E model,")
+    print("failure at 10% / 50% / 90% of the Logging-Unit dump interval):")
+    sweep = recovery_sweep(cn_counts=(16,))
+    print(f"  {'workload':14s}{'early':>9s}{'mid':>9s}{'late':>9s}   (ms)")
+    for w in sweep.workloads:
+        cells = [sweep.total_ms(w, t, 16) for t in sweep.fail_times_ms]
+        print(f"  {w:14s}" + "".join(f"{ms:9.3f}" for ms in cells))
 
 
 if __name__ == "__main__":

@@ -25,12 +25,14 @@ survives device failures by construction.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.recxl_paper import PAPER_CLUSTER, WORKLOADS, ClusterConfig
 from repro.core.directory import ShardDirectory, ShardState
 from repro.core.protocol import (
     FetchLatestVers,
@@ -277,6 +279,198 @@ def recover_node_parity(engine: ReplicationEngine,
         recovered_from_mn_dump=0, unrecoverable=n_unrec)
     return RecoveryResult(failed=failed_coord, shards=shards, stats=stats,
                           message_log=msg_log)
+
+
+# ---------------------------------------------------------------------------
+# Recovery-time (downtime) model -- paper SS VII-E
+# ---------------------------------------------------------------------------
+#
+# The paper prioritizes correctness over recovery speed, but SS VII-E still
+# quantifies the dominant cost: replaying the Logging-Unit logs to rebuild
+# directory + memory. Downtime is modeled as the Fig. 9 sequence of
+# sequential phases; the replay phase scales with the log volume that had
+# not yet been dumped at the failure point (it grows with the position
+# inside the dump interval) and the owned-line fetch volume, divided by the
+# CXL link bandwidth.
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryTimeParams:
+    """Cost constants of the downtime model (units in field names).
+
+    ``line_bytes``/``header_bytes`` size one FetchLatestVers payload;
+    ``log_entry_bytes`` (Fig. 5: ~97 bits -> 12 B) converts undumped log
+    bytes to entries for the Logging-Unit walk; ``scan_cycles_per_entry``
+    is the per-entry cost of Algorithm 2's newest-to-earliest traversal
+    at the Logging-Unit clock.
+    """
+    detect_us: float = 50.0          # failure-detection lease timeout
+    dir_entry_ns: float = 8.0        # per owned directory entry (Alg. 1)
+    line_bytes: int = 64             # recovered payload per owned line
+    header_bytes: int = 8            # CXL message header
+    log_entry_bytes: float = 12.0    # Fig. 5 log-entry footprint
+    scan_cycles_per_entry: float = 2.0
+
+
+DEFAULT_RECOVERY_PARAMS = RecoveryTimeParams()
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryEstimate:
+    """Estimated downtime breakdown for one fail-stop event.
+
+    Phase fields are ns and sum (sequentially, as in Fig. 9) to
+    ``total_ns``; ``replay_bytes`` is the total log-replay volume
+    (undumped log + fetched versions + memory writeback) in bytes.
+    """
+    detect_ns: float                 # lease expiry until CM reacts
+    quiesce_ns: float                # Interrupt -> InterruptResp drain
+    directory_ns: float              # Algorithm 1 walk + replica clears
+    log_scan_ns: float               # Algorithm 2 Logging-Unit traversal
+    fetch_ns: float                  # FetchLatestVers payloads over CXL
+    writeback_ns: float              # applying versions to MN memory
+    resume_ns: float                 # RecovEnd broadcast
+    owned_lines: float               # lines the failed node owned
+    undumped_log_bytes: float        # log bytes pending at failure point
+    replay_bytes: float              # total replayed volume (bytes)
+
+    @property
+    def total_ns(self) -> float:
+        return (self.detect_ns + self.quiesce_ns + self.directory_ns +
+                self.log_scan_ns + self.fetch_ns + self.writeback_ns +
+                self.resume_ns)
+
+    @property
+    def total_ms(self) -> float:
+        return self.total_ns / 1e6
+
+
+def estimate_recovery_time(owned_lines: float,
+                           undumped_log_bytes: float,
+                           cluster: ClusterConfig = PAPER_CLUSTER,
+                           link_bw_gbps: Optional[float] = None,
+                           params: RecoveryTimeParams =
+                           DEFAULT_RECOVERY_PARAMS) -> RecoveryEstimate:
+    """Closed-form downtime estimate for one failed CN.
+
+    ``owned_lines``: cache lines (or shard entries) the failed node
+    owned -- each needs a FetchLatestVers + memory writeback.
+    ``undumped_log_bytes``: Logging-Unit bytes accumulated since the
+    last dump at the failure point (bounded by the dump interval);
+    Algorithm 2 walks these to find the newest validated versions.
+    ``link_bw_gbps``: CXL link bandwidth in GB/s (1 GB/s == 1 byte/ns,
+    so transfer ns == bytes / GB/s); defaults to the cluster's.
+
+    The estimate is monotone increasing in both volumes and monotone
+    decreasing in the bandwidth (tests/test_recovery_time.py holds this
+    under hypothesis).
+    """
+    bw = cluster.cxl_link_bw_gbps if link_bw_gbps is None else link_bw_gbps
+    if bw <= 0.0:
+        raise ValueError(f"link_bw_gbps must be > 0, got {bw}")
+    if owned_lines < 0 or undumped_log_bytes < 0:
+        raise ValueError("volumes must be >= 0")
+    fetch_bytes = owned_lines * (params.line_bytes + params.header_bytes)
+    wb_bytes = owned_lines * params.line_bytes
+    entries = undumped_log_bytes / params.log_entry_bytes
+    lu_cycle_ns = 1e3 / cluster.logging_unit_freq_mhz
+    return RecoveryEstimate(
+        detect_ns=params.detect_us * 1e3,
+        quiesce_ns=cluster.cxl_rtt_ns
+        + cluster.store_buffer * 2.0 * cluster.cycle_ns,
+        directory_ns=owned_lines * params.dir_entry_ns,
+        log_scan_ns=entries * params.scan_cycles_per_entry * lu_cycle_ns,
+        fetch_ns=fetch_bytes / bw,
+        writeback_ns=wb_bytes / bw,
+        resume_ns=cluster.cxl_rtt_ns,
+        owned_lines=owned_lines,
+        undumped_log_bytes=undumped_log_bytes,
+        replay_bytes=undumped_log_bytes + fetch_bytes + wb_bytes,
+    )
+
+
+def workload_recovery_inputs(workload: str, fail_time_ms: float,
+                             cluster: ClusterConfig = PAPER_CLUSTER,
+                             n_cns: Optional[int] = None,
+                             n_replicas: Optional[int] = None,
+                             params: RecoveryTimeParams =
+                             DEFAULT_RECOVERY_PARAMS
+                             ) -> Tuple[float, float]:
+    """Derive ``(owned_lines, undumped_log_bytes)`` for a workload at a
+    given failure time.
+
+    ``fail_time_ms`` is wall-clock since the last Logging-Unit dump
+    epoch; only its position inside the dump interval matters (the dump
+    resets the pending log), so the undumped volume is periodic in
+    ``cluster.dump_period_ms``. With fewer CNs each node runs more of
+    the fixed total work (weak scaling, Fig. 18), so both the owned-line
+    census (Fig. 15) and the per-node store rate scale by
+    ``cluster.n_cns / n_cns``. Coalesced stores never reach the log.
+    """
+    wl = WORKLOADS[workload]
+    ncn = cluster.n_cns if n_cns is None else n_cns
+    if ncn < 1:
+        raise ValueError(f"n_cns must be >= 1, got {ncn}")
+    del n_replicas  # every replica holds a full copy of the node's log
+    scale = cluster.n_cns / ncn
+    owned = wl.working_lines * scale
+    ipc = 2.0
+    stores_per_s = (wl.remote_store_rate / 1e3) * ipc \
+        * cluster.cpu_freq_ghz * 1e9 * cluster.cores_per_cn * scale
+    entries_per_s = stores_per_s * (1.0 - wl.coalesce_rate)
+    phase_ms = fail_time_ms % cluster.dump_period_ms
+    undumped = entries_per_s * (phase_ms * 1e-3) * params.log_entry_bytes
+    return owned, undumped
+
+
+@functools.partial(jax.jit, static_argnames=("cluster", "params"))
+def recovery_time_batch(owned_lines: jax.Array,
+                        undumped_log_bytes: jax.Array,
+                        link_bw_gbps: jax.Array,
+                        cluster: ClusterConfig = PAPER_CLUSTER,
+                        params: RecoveryTimeParams =
+                        DEFAULT_RECOVERY_PARAMS) -> Dict[str, jax.Array]:
+    """Vectorized :func:`estimate_recovery_time` over broadcastable
+    arrays (one jitted call for a whole failure-time x node grid).
+
+    Inputs broadcast together to the grid shape; returns a dict of
+    arrays of that shape: every phase field of :class:`RecoveryEstimate`
+    plus ``total_ns`` and ``replay_bytes``. Same arithmetic as the
+    scalar model (tests/test_recovery_time.py checks them against each
+    other).
+    """
+    owned = jnp.asarray(owned_lines, jnp.float64 if jax.config.jax_enable_x64
+                        else jnp.float32)
+    undumped = jnp.asarray(undumped_log_bytes, owned.dtype)
+    bw = jnp.asarray(link_bw_gbps, owned.dtype)
+    fetch_bytes = owned * (params.line_bytes + params.header_bytes)
+    wb_bytes = owned * params.line_bytes
+    entries = undumped / params.log_entry_bytes
+    lu_cycle_ns = 1e3 / cluster.logging_unit_freq_mhz
+    out = {
+        "detect_ns": jnp.broadcast_to(params.detect_us * 1e3,
+                                      jnp.broadcast_shapes(
+                                          owned.shape, undumped.shape,
+                                          bw.shape)),
+        "quiesce_ns": jnp.broadcast_to(
+            cluster.cxl_rtt_ns + cluster.store_buffer * 2.0
+            * cluster.cycle_ns,
+            jnp.broadcast_shapes(owned.shape, undumped.shape, bw.shape)),
+        "directory_ns": owned * params.dir_entry_ns,
+        "log_scan_ns": entries * params.scan_cycles_per_entry * lu_cycle_ns,
+        "fetch_ns": fetch_bytes / bw,
+        "writeback_ns": wb_bytes / bw,
+        "resume_ns": jnp.broadcast_to(cluster.cxl_rtt_ns,
+                                      jnp.broadcast_shapes(
+                                          owned.shape, undumped.shape,
+                                          bw.shape)),
+        "replay_bytes": undumped + fetch_bytes + wb_bytes,
+    }
+    out["total_ns"] = (out["detect_ns"] + out["quiesce_ns"]
+                       + out["directory_ns"] + out["log_scan_ns"]
+                       + out["fetch_ns"] + out["writeback_ns"]
+                       + out["resume_ns"])
+    return out
 
 
 # ---------------------------------------------------------------------------

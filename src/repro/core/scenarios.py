@@ -18,6 +18,12 @@ code:
   paper's design guarantees (replay idempotence, no directory reference
   to a failed node, exact shard recovery) are computed for every event so
   property tests can assert them under arbitrary fail-stop schedules.
+
+Both families report **downtime**: every :class:`RecoveryCheck` carries a
+:class:`~repro.core.recovery.RecoveryEstimate` derived from the volumes
+the replay actually moved (SS VII-E model), and :func:`recovery_sweep`
+runs the analytic model batched over a whole (workload x failure-time x
+node-count) grid in one jitted call (``fig9/recovery/*`` bench rows).
 """
 
 from __future__ import annotations
@@ -32,10 +38,21 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import ReplicationConfig
-from repro.configs.recxl_paper import WORKLOADS
+from repro.configs.recxl_paper import PAPER_CLUSTER, WORKLOADS, ClusterConfig
 from repro.core.directory import ShardDirectory, ShardState
 from repro.core.failures import FailureDetector, FailureEvent, FailureInjector
-from repro.core.recovery import RecoveryResult, reassemble_shard, recover_node
+from repro.core.protocol import MsgType
+from repro.core.recovery import (
+    DEFAULT_RECOVERY_PARAMS,
+    RecoveryEstimate,
+    RecoveryResult,
+    RecoveryTimeParams,
+    estimate_recovery_time,
+    recover_node,
+    recovery_time_batch,
+    reassemble_shard,
+    workload_recovery_inputs,
+)
 from repro.core.replication import ReplicationEngine
 from repro.core.simulator import CONFIGS, ScenarioSpec
 from repro.distributed.context import make_context, make_mesh, mesh_context
@@ -90,6 +107,82 @@ def fig18_grid(cn_counts: Sequence[int] = (4, 8, 16),
 
 
 # ---------------------------------------------------------------------------
+# Recovery-time sweeps: downtime over a failure-time x node grid (SS VII-E)
+# ---------------------------------------------------------------------------
+
+
+#: Default failure times as fractions of the Logging-Unit dump interval
+#: (just after a dump, mid-interval, just before the next dump).
+DEFAULT_FAIL_FRACS = (0.1, 0.5, 0.9)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoverySweep:
+    """Batched downtime estimates over a (workload x failure-time x
+    node-count) grid.
+
+    ``total_ns`` and every phase/volume array in ``components`` have
+    shape ``(len(workloads), len(fail_times_ms), len(cn_counts))``;
+    times are ns, ``replay_bytes`` is bytes.
+    """
+    workloads: Tuple[str, ...]
+    fail_times_ms: Tuple[float, ...]
+    cn_counts: Tuple[int, ...]
+    total_ns: np.ndarray
+    components: Dict[str, np.ndarray]
+
+    def total_ms(self, workload: str, fail_time_ms: float,
+                 n_cns: int) -> float:
+        """Downtime of one grid cell in milliseconds."""
+        w = self.workloads.index(workload)
+        t = self.fail_times_ms.index(fail_time_ms)
+        c = self.cn_counts.index(n_cns)
+        return float(self.total_ns[w, t, c]) / 1e6
+
+
+def recovery_sweep(workloads: Sequence[str] = tuple(WORKLOADS),
+                   fail_times_ms: Optional[Sequence[float]] = None,
+                   cn_counts: Sequence[int] = (4, 8, 16),
+                   link_bw_gbps: Optional[float] = None,
+                   cluster: ClusterConfig = PAPER_CLUSTER,
+                   params: RecoveryTimeParams = DEFAULT_RECOVERY_PARAMS
+                   ) -> RecoverySweep:
+    """Sweep the SS VII-E downtime model over a (workload x
+    failure-time x node-count) grid in ONE jitted call.
+
+    ``fail_times_ms`` defaults to :data:`DEFAULT_FAIL_FRACS` fractions
+    of the dump interval -- downtime grows within the interval because
+    the undumped log (and so the Algorithm 2 replay volume) accumulates
+    until the next dump resets it. ``link_bw_gbps`` (GB/s) defaults to
+    the cluster link.
+    """
+    bw = cluster.cxl_link_bw_gbps if link_bw_gbps is None else link_bw_gbps
+    if bw <= 0.0:
+        raise ValueError(f"link_bw_gbps must be > 0, got {bw}")
+    if fail_times_ms is None:
+        fail_times_ms = tuple(round(f * cluster.dump_period_ms, 6)
+                              for f in DEFAULT_FAIL_FRACS)
+    workloads = tuple(workloads)
+    fail_times_ms = tuple(fail_times_ms)
+    cn_counts = tuple(cn_counts)
+    shape = (len(workloads), len(fail_times_ms), len(cn_counts))
+    owned = np.empty(shape, np.float64)
+    undumped = np.empty(shape, np.float64)
+    for iw, wname in enumerate(workloads):
+        for it, t_ms in enumerate(fail_times_ms):
+            for ic, ncn in enumerate(cn_counts):
+                owned[iw, it, ic], undumped[iw, it, ic] = \
+                    workload_recovery_inputs(wname, t_ms, cluster=cluster,
+                                             n_cns=ncn, params=params)
+    out = recovery_time_batch(owned, undumped, np.full(shape, bw),
+                              cluster=cluster, params=params)
+    comps = {k: np.asarray(v) for k, v in out.items()}
+    return RecoverySweep(workloads=workloads, fail_times_ms=fail_times_ms,
+                         cn_counts=cn_counts, total_ns=comps.pop("total_ns"),
+                         components=comps)
+
+
+# ---------------------------------------------------------------------------
 # Fault scenarios: fail node f at step s -> replay -> consistent -> resume
 # ---------------------------------------------------------------------------
 
@@ -127,6 +220,12 @@ class RecoveryCheck:
     replay_idempotent: bool          # second replay = identical result
     directory_consistent: bool       # no reference to any failed node
     unrecoverable: int
+    downtime: Optional[RecoveryEstimate] = None  # SS VII-E estimate (ns)
+
+    @property
+    def downtime_ns(self) -> float:
+        """Estimated downtime of this event in ns (0.0 if unmodeled)."""
+        return self.downtime.total_ns if self.downtime is not None else 0.0
 
 
 @dataclasses.dataclass
@@ -144,6 +243,37 @@ class ScenarioOutcome:
         return all(c.exact and c.replay_idempotent and
                    c.directory_consistent and c.unrecoverable == 0
                    for c in self.checks)
+
+    @property
+    def total_downtime_ns(self) -> float:
+        """Summed downtime estimate over every recovery event (ns)."""
+        return sum(c.downtime_ns for c in self.checks)
+
+
+def estimate_scenario_downtime(engine: ReplicationEngine,
+                               result: RecoveryResult,
+                               cluster: ClusterConfig = PAPER_CLUSTER,
+                               params: RecoveryTimeParams =
+                               DEFAULT_RECOVERY_PARAMS) -> RecoveryEstimate:
+    """Downtime estimate for one executed recovery replay, fed by the
+    volumes the replay *actually* moved.
+
+    ``owned_lines`` is the owned-entry census from Algorithm 1, with the
+    payload ("line") size set to the engine's bucket footprint in bytes;
+    the undumped log volume is the number of log versions Algorithm 2
+    walked (the FetchLatestVersResp message log records them), also at
+    bucket granularity. Times in the returned estimate are ns.
+    """
+    bucket_bytes = engine.layout.bucket_len * engine.log_dtype.itemsize
+    n_versions = sum(m[1].get("n_versions", 0) for m in result.message_log
+                     if m[0] == MsgType.FETCH_LATEST_VERS_RESP)
+    p = dataclasses.replace(params, line_bytes=bucket_bytes,
+                            log_entry_bytes=float(
+                                bucket_bytes + params.header_bytes))
+    return estimate_recovery_time(
+        owned_lines=float(result.stats.owned_entries),
+        undumped_log_bytes=n_versions * p.log_entry_bytes,
+        cluster=cluster, params=p)
 
 
 def enumerate_fault_scenarios(n_nodes: int = 4, n_steps: int = 6,
@@ -217,8 +347,11 @@ def run_fault_scenario(scn: FaultScenario,
     Steps replicate state; at each injected fail-stop the detector sets
     the viral bit, recovery replays the surviving Logging-Unit logs, the
     repaired shard is checked against the live truth, and the run
-    resumes on the remaining schedule. Needs ``scn.n_nodes`` devices
-    (use ``--xla_force_host_platform_device_count`` on CPU).
+    resumes on the remaining schedule. Every :class:`RecoveryCheck` in
+    the outcome carries a SS VII-E downtime estimate
+    (:func:`estimate_scenario_downtime`, ns) fed by the volumes that
+    replay actually moved. Needs ``scn.n_nodes`` devices (use
+    ``--xla_force_host_platform_device_count`` on CPU).
     """
     scn.validate()
     if mesh is None:
@@ -301,7 +434,8 @@ def run_fault_scenario(scn: FaultScenario,
                     replay_idempotent=idem,
                     directory_consistent=not directory_references(
                         directory, failed),
-                    unrecoverable=res.stats.unrecoverable))
+                    unrecoverable=res.stats.unrecoverable,
+                    downtime=estimate_scenario_downtime(engine, res)))
 
     return ScenarioOutcome(
         scenario=scn, steps_run=scn.n_steps,

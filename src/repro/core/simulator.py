@@ -47,17 +47,50 @@ rings to the widest cell), and runs one branch-free ``lax.scan`` over the
 stacked ``(B, n_stores)`` arrays in which all five commit rules are
 computed and the per-cell rule selected by config index.
 
+The blocked scan
+----------------
+
+The per-step batched scan (PR 1) is CPU-bound on ``lax.scan`` step
+overhead: every store is one scan step of a handful of tiny ``(B,)``
+ops. ``simulate_batch`` therefore defaults to a **blocked** formulation
+(``chunk_size`` stores per block, clamped to the narrowest SB in the
+batch -- the SB depth bounds how far back the retire recurrence can
+look, so within a block every ``c_{i-sb}`` read refers to a *previous*
+block):
+
+* everything that does not feed back into the commit recurrence is
+  precomputed **vectorized over the whole (B, n_stores) arrays** before
+  the scan: arrival times (one host-side ``np.cumsum`` per trace,
+  shared verbatim with the serial oracle), and the coalesce-mask
+  selects / exposed-latency terms of all five commit rules collapsed --
+  exactly, because IEEE-754 addition is monotone, so ``max(r, c) + e ==
+  max(r + e, c + e)`` and ``max(r + a, r + b) == r + max(a, b)`` hold
+  bit-for-bit -- into one shared max-plus recurrence
+  ``c_i = max(r_i + w_i, c_{i-1} + v_i)`` (see ``_blocked_precompute``);
+* ``lax.scan`` runs only over **chunk boundaries** (``n_stores /
+  chunk_size`` steps); within a block, the SB-ring reads collapse to a
+  single vectorized gather from the carried commit history, retire
+  times and both censuses (SB-full, Fig. 11 REPL-at-head) are computed
+  as ``(B, K)`` block ops, and only the irreducible 2-op max-plus core
+  runs per store (an unrolled, fully fusible chain of ``(B,)`` ops);
+* a ragged tail (``n_stores % chunk_size``) is processed once after the
+  scan with the same step function, so every chunk size is exact.
+
+The result is **bit-identical** to the per-step scan and to the serial
+oracle, for every chunk size (tests/test_batch_sim.py enforces ``==``).
+
 Batched-vs-serial contract: ``simulate()`` (the differential-testing
 oracle) and ``simulate_batch`` share trace synthesis and the per-cell
 cost derivation, and their timelines apply identical arithmetic -- every
-``SimResult`` field from the batched path must match the serial path for
-the same cell within 1e-5 relative tolerance (tests/test_batch_sim.py
-enforces this; in practice the results are bit-identical). The serial
-path stays the readable reference; new commit rules must be added to
-both ``_timeline`` and ``_timeline_batch``.
+``SimResult`` field from the batched paths (blocked and per-step) must
+match the serial path bit-for-bit (tests/test_batch_sim.py enforces
+this across chunk sizes, including ragged tails). The serial path stays
+the readable reference; new commit rules must be added to
+``_timeline``, ``_timeline_batch`` and ``_blocked_precompute``/
+``_blocked_steps``.
 
-Failure/recovery scenario sweeps build on this API in
-``repro.core.scenarios``.
+Failure/recovery scenario sweeps and the recovery-time (downtime) model
+build on this API in ``repro.core.scenarios`` / ``repro.core.recovery``.
 """
 
 from __future__ import annotations
@@ -84,16 +117,24 @@ _REPLICATING = ("baseline", "parallel", "proactive")
 
 @dataclasses.dataclass(frozen=True)
 class SimResult:
+    """Per-cell simulation outputs (one store-buffer timeline).
+
+    Field units: ``exec_time_ns`` ns (commit time of the last store,
+    work-scaled for CN-count sweeps); ``max_log_bytes`` bytes (per CN
+    per dump period, Fig. 13); ``*_bw_gbps`` GB/s cluster-wide (Fig.
+    14); ``repl_at_head_frac`` / ``sb_full_frac`` are fractions of
+    ``n_stores`` in [0, 1].
+    """
     workload: str
     config: str
-    exec_time_ns: float
+    exec_time_ns: float              # ns
     n_stores: int
-    n_repl_msgs: int                 # after coalescing
-    repl_at_head_frac: float         # Fig. 11
-    max_log_bytes: float             # Fig. 13 (per CN, per dump period)
-    cxl_mem_bw_gbps: float           # Fig. 14 (memory traffic component)
-    log_dump_bw_gbps: float          # Fig. 14 (log dump component)
-    sb_full_frac: float
+    n_repl_msgs: int                 # REPL messages after coalescing
+    repl_at_head_frac: float         # Fig. 11: REPLs issued at SB head
+    max_log_bytes: float             # Fig. 13: bytes/CN/dump period
+    cxl_mem_bw_gbps: float           # Fig. 14: memory traffic (GB/s)
+    log_dump_bw_gbps: float          # Fig. 14: log dump traffic (GB/s)
+    sb_full_frac: float              # stores that stalled on a full SB
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,7 +142,11 @@ class ScenarioSpec:
     """One cell of an evaluation grid (Figs. 10-18 sensitivity space).
 
     ``None`` knobs resolve to the ClusterConfig defaults at simulation
-    time, so a spec is portable across cluster configs.
+    time, so a spec is portable across cluster configs. Knob units:
+    ``n_replicas`` peer replicas (Fig. 17), ``link_bw_gbps`` CXL link
+    bandwidth in GB/s (Fig. 16), ``n_cns`` compute nodes (Fig. 18),
+    ``sb_size`` store-buffer entries, ``coalescing`` enables same-line
+    SB coalescing (Fig. 12).
     """
     workload: str
     config: str
@@ -138,8 +183,19 @@ class ScenarioSpec:
 
 def synthesize_trace(wl: WorkloadProfile, n_stores: int, seed: int,
                      cluster: ClusterConfig) -> Dict[str, np.ndarray]:
-    """Per-store arrays: arrival gap (ns), coalescable flag, in-burst
-    flag, exposed coherence latency (ns).
+    """Synthesize one deterministic remote-store trace.
+
+    Returns per-store arrays, each of shape ``(n_stores,)``:
+
+    * ``gaps``        -- inter-arrival gap to the previous store (ns, f32)
+    * ``arrivals``    -- absolute arrival time ``cumsum(gaps)`` (ns, f32;
+      a single host-side ``np.cumsum`` shared by the serial oracle and
+      both batched engines, so all three consume bit-identical inputs)
+    * ``coalesce``    -- store coalesces with the previous SB entry (bool)
+    * ``in_burst``    -- store is inside a flush burst (bool)
+    * ``burst_pos``   -- index distance into the current burst (f32)
+    * ``exposed_coh`` -- coherence latency still exposed at the SB head
+      after the exclusive prefetch (ns, f32)
 
     Arrivals follow a two-state Markov burst process: inside a store
     burst (flush phases of the SPMD apps) gaps are ~1 cycle and runs are
@@ -207,11 +263,22 @@ def synthesize_trace(wl: WorkloadProfile, n_stores: int, seed: int,
     tail = rng.random(n_stores) < 0.12
     exposed = np.where(tail, rng.exponential(0.15 * base_rtt, n_stores), 0.0)
 
-    return {"gaps": gaps.astype(np.float32),
+    gaps32 = gaps.astype(np.float32)
+    return {"gaps": gaps32,
+            "arrivals": np.cumsum(gaps32, dtype=np.float32),
             "coalesce": coalesce,
             "in_burst": in_burst,
             "burst_pos": pos,
             "exposed_coh": exposed.astype(np.float32)}
+
+
+@functools.lru_cache(maxsize=64)
+def _trace_cached(workload: str, n_stores: int, seed: int,
+                  cluster: ClusterConfig) -> Dict[str, np.ndarray]:
+    """Memoized :func:`synthesize_trace` (traces are deterministic in
+    the key, and sweeps re-scan the same trace for many cells and many
+    calls). Callers must treat the arrays as read-only."""
+    return synthesize_trace(WORKLOADS[workload], n_stores, seed, cluster)
 
 
 # ---------------------------------------------------------------------------
@@ -239,8 +306,8 @@ class _CellInputs:
     sb_size: int
     config_idx: int
     work_scale: float
-    # per-store timeline inputs
-    gaps: np.ndarray
+    # per-store timeline inputs, each (n_stores,)
+    arrivals: np.ndarray
     coalesce: np.ndarray
     exposed: np.ndarray
     t_repl_i: np.ndarray
@@ -324,7 +391,7 @@ def _prepare_cell(spec: ScenarioSpec, trace: Dict[str, np.ndarray],
     return _CellInputs(
         spec=spec, n_stores=n_stores, sb_size=sb,
         config_idx=_CONFIG_IDX[config], work_scale=work_scale,
-        gaps=trace["gaps"],
+        arrivals=trace["arrivals"],
         coalesce=np.asarray(coalesce, bool),
         exposed=np.asarray(exposed, np.float32),
         t_repl_i=np.asarray(t_repl_i, np.float32),
@@ -358,19 +425,19 @@ def _finish_result(cell: _CellInputs, exec_ns: float, at_head: int,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("config", "sb_size"))
-def _timeline(gaps: jax.Array, coalesce: jax.Array, exposed: jax.Array,
+def _timeline(arrivals: jax.Array, coalesce: jax.Array, exposed: jax.Array,
               t_repl_i: jax.Array, svc_i: jax.Array,
               config: str, sb_size: int, t_l1: float, t_wt: float,
               t_drain: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (exec_time_ns, repl_at_head_count, sb_full_count).
 
+    ``arrivals``: absolute store arrival times (ns), precomputed on the
+    host so all engines share one bit-identical input.
     ``t_repl_i``: per-store REPL->ACK latency (congestion/N_r adjusted).
     ``svc_i``: per-store replica Logging-Unit service time -- the
     throughput floor of commit draining during cluster-wide bursts (every
     CN's unit is absorbing the other CNs' REPL streams at the same time).
     """
-    arrivals = jnp.cumsum(gaps)
-
     def body(carry, inp):
         ring, last_c, at_head, sb_full = carry
         a_i, co_i, coh_i, tr_i, sv_i = inp
@@ -419,12 +486,15 @@ def _timeline(gaps: jax.Array, coalesce: jax.Array, exposed: jax.Array,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("sb_max",))
-def _timeline_batch(gaps: jax.Array, coalesce: jax.Array, exposed: jax.Array,
+def _timeline_batch(arrivals: jax.Array, coalesce: jax.Array,
+                    exposed: jax.Array,
                     t_repl_i: jax.Array, svc_i: jax.Array,
                     config_idx: jax.Array, sb_size: jax.Array, sb_max: int,
                     t_l1: float, t_wt: float
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Branch-free batched timeline over ``(B, n_stores)`` cell arrays.
+    """Per-step batched timeline over time-major ``(n_stores, B)`` cell
+    arrays (the PR-1 engine; kept as the ``chunk_size=0`` differential
+    path and the speedup baseline for ``fig10/sweep/*`` bench rows).
 
     All five commit rules are evaluated per step (they share the retire
     recurrence and are each a couple of flops on a (B,)-vector) and the
@@ -438,8 +508,7 @@ def _timeline_batch(gaps: jax.Array, coalesce: jax.Array, exposed: jax.Array,
 
     Returns per-cell (exec_time_ns, repl_at_head_count, sb_full_count).
     """
-    n_b = gaps.shape[0]
-    arrivals = jnp.cumsum(gaps, axis=1)
+    n_b = arrivals.shape[1]
     # loop-invariant per-cell config masks, hoisted out of the scan body
     is_wt = config_idx == _CONFIG_IDX["wt"]
     is_bl = config_idx == _CONFIG_IDX["baseline"]
@@ -477,9 +546,221 @@ def _timeline_batch(gaps: jax.Array, coalesce: jax.Array, exposed: jax.Array,
             jnp.zeros((n_b,), jnp.int32),
             jnp.zeros((n_b,), jnp.int32),
             jnp.int32(0))
-    xs = (arrivals.T, coalesce.T, exposed.T, t_repl_i.T, svc_i.T)
+    xs = (arrivals, coalesce, exposed, t_repl_i, svc_i)
     (_, last_c, at_head, sb_full, _), _ = jax.lax.scan(body, init, xs)
     return last_c, at_head, sb_full
+
+
+# ---------------------------------------------------------------------------
+# Store-buffer timeline -- blocked scan (chunk the store stream, scan over
+# chunk boundaries, vectorized intra-chunk precomputation)
+# ---------------------------------------------------------------------------
+
+DEFAULT_CHUNK_SIZE = 128
+
+
+def _blocked_precompute(coalesce: jax.Array, exposed: jax.Array,
+                        t_repl_i: jax.Array, svc_i: jax.Array,
+                        config_idx: jax.Array, t_l1: float, t_wt: float
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Collapse all five commit rules into one max-plus recurrence.
+
+    Every rule is exactly (bit-for-bit) of the form
+
+        c_i = max(r_i + w_i,  c_{i-1} + v_i)
+
+    because IEEE-754 addition is monotone, so ``max(r, c) + e ==
+    max(r + e, c + e)`` and ``max(r + a, r + b) == r + max(a, b)``
+    hold exactly:
+
+    * WB / WT / baseline / parallel / coalesced-proactive
+      (``c_i = max(r_i, c_{i-1}) + extra_i``):  w_i = v_i = extra_i,
+      where ``extra_i`` is t_l1, t_wt, or the coalesce-mask select over
+      ``exposed``/``t_repl_i`` of the replicating rules;
+    * non-coalesced proactive
+      (``c_i = max(r_i + max(t_repl_i, coh_i), c_{i-1} + svc_i)``):
+      w_i = max(t_repl_i, exposed_i), v_i = svc_i.
+
+    Returns ``(w, v, pr_nc)``, each time-major ``(n_stores, B)``
+    (``w``/``v`` f32 ns, ``pr_nc`` bool = proactive-and-not-coalesced,
+    the Fig. 11 REPL-at-SB-head candidate mask), computed in one
+    vectorized pass.
+    """
+    is_wt = config_idx == _CONFIG_IDX["wt"]
+    is_bl = config_idx == _CONFIG_IDX["baseline"]
+    is_pl = config_idx == _CONFIG_IDX["parallel"]
+    is_pr = config_idx == _CONFIG_IDX["proactive"]
+
+    ex_bl = jnp.where(coalesce, t_l1, exposed + t_repl_i)
+    ex_pl = jnp.where(coalesce, t_l1, jnp.maximum(exposed, t_repl_i))
+    # wb and coalesced-proactive both add t_l1
+    ex_other = jnp.where(is_wt[None, :], jnp.float32(t_wt),
+                         jnp.float32(t_l1))
+    extra = jnp.where(is_bl[None, :], ex_bl,
+                      jnp.where(is_pl[None, :], ex_pl, ex_other))
+    pr_nc = is_pr[None, :] & ~coalesce
+    w = jnp.where(pr_nc, jnp.maximum(t_repl_i, exposed), extra)
+    v = jnp.where(pr_nc, svc_i, extra)
+    return w, v, pr_nc
+
+
+def _blocked_steps(carry, a_b, w_b, v_b, sb_size: jax.Array):
+    """Advance the blocked timeline by one block of ``K`` stores.
+
+    ``carry`` = (hist (H, B) f32 -- the last H commit times, oldest
+    first, H = padded max SB depth; last (B,) f32 -- ``c_{i-1}``).
+    Block inputs are time-major ``(K, B)`` slices of the precomputed
+    arrays, with K <= min(sb_size): the SB depth bounds how far back a
+    retire can look, so every ``c_{i-sb}`` a block needs was committed
+    in a *previous* block and sits in ``hist``. That makes the SB-ring
+    reads for the whole block ONE vectorized gather (``hist[H - sb + k]``
+    is exactly the oracle's ``c_{i-sb}``, still the 0.0 init for
+    i < sb), leaves ``u = max(a, oldest) + w`` vectorized over the
+    block, and reduces the per-store sequential work to the irreducible
+    2-op max-plus core ``c = max(u_k, c + v_k)`` -- an unrolled chain of
+    contiguous (B,) row ops.
+
+    Returns the new carry and the per-block ``(c, oldest)`` matrices;
+    both censuses (SB-full, Fig. 11 REPL-at-head) are recovered
+    vectorized from them *outside* the scan.
+    """
+    hist, last = carry
+    k_len = a_b.shape[0]
+    h = hist.shape[0]
+    idx = (h - sb_size)[None, :] + jnp.arange(k_len)[:, None]      # (K, B)
+    oldest = jnp.take_along_axis(hist, idx, axis=0)                # (K, B)
+    u = jnp.maximum(a_b, oldest) + w_b
+
+    cs = []
+    for k in range(k_len):
+        last = jnp.maximum(u[k], last + v_b[k])
+        cs.append(last)
+    c = jnp.stack(cs, axis=0)                                      # (K, B)
+    hist = c if k_len == h else jnp.concatenate([hist[k_len:], c], axis=0)
+    return (hist, last), (c, oldest)
+
+
+def _blocked_steps_uniform(carry, a_b, w_b, v_b, p_b):
+    """Uniform-SB fast path for one block of ``K`` stores.
+
+    When every cell shares one store-buffer depth ``sb`` (the common
+    case -- Table II fixes SB = 72 unless the sweep varies it), the
+    commit history is carried as a *tuple* of ``sb`` ``(B,)`` arrays
+    (oldest first), so the SB-ring read for store ``k`` is the plain
+    Python indexing ``hist[k]`` (``c_{i-sb}`` exactly, K <= sb) and the
+    history shift is static tuple slicing -- no gather, no stacked
+    commit matrix, no materialized per-store timeline. Both censuses
+    accumulate in-scan (integer adds, order-exact). The per-store work
+    is ~7 tiny fusible ``(B,)`` ops; applies the same arithmetic as
+    :func:`_blocked_steps` element-for-element, so results stay
+    bit-identical across paths.
+
+    ``carry`` = (hist tuple, last (B,), at_head (B,) i32, sb_full (B,)
+    i32); block inputs are time-major ``(K, B)`` slices.
+    """
+    hist, last, at_head, sb_full = carry
+    k_len = a_b.shape[0]
+    cs = []
+    for k in range(k_len):
+        old = hist[k]
+        r_k = jnp.maximum(a_b[k], old)
+        sb_full = sb_full + (old > a_b[k])
+        at_head = at_head + (p_b[k] & (r_k >= last))
+        last = jnp.maximum(r_k + w_b[k], last + v_b[k])
+        cs.append(last)
+    return (hist[k_len:] + tuple(cs), last, at_head, sb_full)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sb_max", "chunk", "sb_uniform"))
+def _timeline_batch_blocked(arrivals: jax.Array, coalesce: jax.Array,
+                            exposed: jax.Array, t_repl_i: jax.Array,
+                            svc_i: jax.Array, config_idx: jax.Array,
+                            sb_size: jax.Array, sb_max: int, chunk: int,
+                            sb_uniform: Optional[int],
+                            t_l1: float, t_wt: float
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Blocked batched timeline: ``lax.scan`` over chunk boundaries only.
+
+    Same inputs/outputs as ``_timeline_batch`` plus two statics:
+    ``chunk`` (stores per block; the caller clamps it to
+    ``min(sb_size)``) and ``sb_uniform`` (the shared SB depth when every
+    cell has the same one, else None). ``n_stores // chunk`` full blocks
+    run inside one scan -- in the time-major layout the blocking
+    reshape is free -- and the ragged tail (``n_stores % chunk``
+    stores) is processed once after the scan with the same step
+    function, so results are exact for every chunk size.
+
+    With ``sb_uniform`` set, the tuple-history fast path
+    (:func:`_blocked_steps_uniform`) runs with censuses accumulated
+    in-scan. The general path (:func:`_blocked_steps`, per-cell SB
+    depths) emits the full commit / SB-read timelines and computes both
+    censuses vectorized over the whole ``(n_stores, B)`` arrays
+    afterwards. Both are bit-identical to the per-step engine and the
+    serial oracle by construction (see module docstring).
+
+    Returns per-cell (exec_time_ns, repl_at_head_count, sb_full_count).
+    """
+    n, n_b = arrivals.shape
+    w, v, pr_nc = _blocked_precompute(
+        coalesce, exposed, t_repl_i, svc_i, config_idx, t_l1, t_wt)
+
+    n_main = (n // chunk) * chunk
+    rem = n - n_main
+
+    def to_blocks(x):
+        # time-major blocking is a free reshape: (n_main, B) ->
+        # (n_blocks, chunk, B)
+        return x[:n_main].reshape(-1, chunk, n_b)
+
+    if sb_uniform is not None:
+        carry = (tuple(jnp.zeros((n_b,), jnp.float32)
+                       for _ in range(sb_uniform)),
+                 jnp.zeros((n_b,), jnp.float32),
+                 jnp.zeros((n_b,), jnp.int32),
+                 jnp.zeros((n_b,), jnp.int32))
+        if n_main:
+            xs = tuple(to_blocks(x) for x in (arrivals, w, v, pr_nc))
+
+            def body(c, blk):
+                return _blocked_steps_uniform(c, *blk), None
+
+            carry, _ = jax.lax.scan(body, carry, xs)
+        if rem:
+            tail = tuple(x[n_main:] for x in (arrivals, w, v, pr_nc))
+            carry = _blocked_steps_uniform(carry, *tail)
+        _, last_c, at_head, sb_full = carry
+        return last_c, at_head, sb_full
+
+    carry = (jnp.zeros((sb_max, n_b), jnp.float32),
+             jnp.zeros((n_b,), jnp.float32))
+    parts_c, parts_old = [], []
+    if n_main:
+        xs = tuple(to_blocks(x) for x in (arrivals, w, v))
+
+        def body(c, blk):
+            return _blocked_steps(c, *blk, sb_size=sb_size)
+
+        carry, (c_blks, old_blks) = jax.lax.scan(body, carry, xs)
+        parts_c.append(c_blks.reshape(n_main, n_b))
+        parts_old.append(old_blks.reshape(n_main, n_b))
+    if rem:
+        tail = tuple(x[n_main:] for x in (arrivals, w, v))
+        carry, (c_tail, old_tail) = _blocked_steps(carry, *tail,
+                                                   sb_size=sb_size)
+        parts_c.append(c_tail)
+        parts_old.append(old_tail)
+    c = parts_c[0] if len(parts_c) == 1 else jnp.concatenate(parts_c, axis=0)
+    oldest = parts_old[0] if len(parts_old) == 1 \
+        else jnp.concatenate(parts_old, axis=0)
+
+    # post-hoc vectorized censuses (identical f32 ops, so identical bits)
+    r = jnp.maximum(arrivals, oldest)
+    sb_full = jnp.sum(oldest > arrivals, axis=0, dtype=jnp.int32)
+    prev = jnp.concatenate([jnp.zeros((1, n_b), jnp.float32), c[:-1]],
+                           axis=0)
+    at_head = jnp.sum(pr_nc & (r >= prev), axis=0, dtype=jnp.int32)
+    return c[-1], at_head, sb_full
 
 
 # ---------------------------------------------------------------------------
@@ -494,19 +775,24 @@ def simulate(workload: str, config: str,
              n_cns: Optional[int] = None,
              sb_size: Optional[int] = None,
              coalescing: bool = True) -> SimResult:
-    """Simulate one (workload, config) pair; all sensitivity knobs of
-    Figs. 16-18 are exposed as overrides. This is the serial oracle the
-    batched path is differentially tested against."""
+    """Simulate one (workload, config) pair on one compute node.
+
+    All sensitivity knobs of Figs. 16-18 are exposed as overrides
+    (``n_replicas`` replica count, ``link_bw_gbps`` CXL link bandwidth in
+    GB/s, ``n_cns`` compute-node count, ``sb_size`` store-buffer entries).
+    This is the serial oracle the batched engines are differentially
+    tested against; returns a :class:`SimResult` (times in ns, log sizes
+    in bytes, bandwidths in GB/s).
+    """
     spec = ScenarioSpec(workload, config, seed=seed, n_replicas=n_replicas,
                         link_bw_gbps=link_bw_gbps, n_cns=n_cns,
                         sb_size=sb_size, coalescing=coalescing)
     spec.validate(cluster)
-    wl = WORKLOADS[workload]
-    trace = synthesize_trace(wl, n_stores, seed, cluster)
+    trace = _trace_cached(workload, n_stores, seed, cluster)
     cell = _prepare_cell(spec, trace, n_stores, cluster)
     costs = _commit_cost_ns(config, cluster)
     exec_ns, at_head, sb_full = _timeline(
-        jnp.asarray(cell.gaps), jnp.asarray(cell.coalesce),
+        jnp.asarray(cell.arrivals), jnp.asarray(cell.coalesce),
         jnp.asarray(cell.exposed), jnp.asarray(cell.t_repl_i),
         jnp.asarray(cell.svc_i), config, cell.sb_size,
         costs["t_l1"], costs["t_wt"], costs["t_drain"])
@@ -517,46 +803,78 @@ def _pad_len(n: int, mult: int = 8) -> int:
     return max(((n + mult - 1) // mult) * mult, mult)
 
 
+@functools.lru_cache(maxsize=4)
+def _batch_inputs(specs: Tuple[ScenarioSpec, ...], n_stores: int,
+                  cluster: ClusterConfig):
+    """Memoized host-side prep for one batch: synthesizes/derives every
+    cell and stacks the padded device arrays. Sweeps that re-run the
+    same grid (benchmarks, repeated scenario evaluation) skip straight
+    to the timeline. The small maxsize bounds pinned memory: one entry
+    holds five (n_stores, B) f32 arrays plus the host cells (~50 MB for
+    the Fig. 10 grid at the default store count)."""
+    cells = [_prepare_cell(s, _trace_cached(s.workload, n_stores, s.seed,
+                                            cluster), n_stores, cluster)
+             for s in specs]
+    n_pad = _pad_len(len(cells))
+    padded = cells + [cells[0]] * (n_pad - len(cells))
+    sb_max = _pad_len(max(c.sb_size for c in padded))
+    # per-store arrays are stacked time-major (n_stores, B): the natural
+    # layout for both scans (xs slices and block reshapes are contiguous)
+    args = (
+        jnp.asarray(np.stack([c.arrivals for c in padded], axis=1)),
+        jnp.asarray(np.stack([c.coalesce for c in padded], axis=1)),
+        jnp.asarray(np.stack([c.exposed for c in padded], axis=1)),
+        jnp.asarray(np.stack([c.t_repl_i for c in padded], axis=1)),
+        jnp.asarray(np.stack([c.svc_i for c in padded], axis=1)),
+        jnp.asarray([c.config_idx for c in padded], jnp.int32),
+        jnp.asarray([c.sb_size for c in padded], jnp.int32),
+    )
+    sb_min = min(c.sb_size for c in padded)
+    sb_uniform = sb_min if sb_min == max(c.sb_size for c in padded) else None
+    return cells, args, sb_max, sb_min, sb_uniform
+
+
 def simulate_batch(specs: Sequence[ScenarioSpec],
                    cluster: ClusterConfig = PAPER_CLUSTER,
-                   n_stores: int = 50_000) -> List[SimResult]:
+                   n_stores: int = 50_000,
+                   chunk_size: int = DEFAULT_CHUNK_SIZE) -> List[SimResult]:
     """Simulate a whole scenario grid in one jitted call.
 
-    Results come back in ``specs`` order. Unique ``(workload, seed)``
-    traces are synthesized once and shared across every cell that scans
-    them; the batch is padded to a multiple of 8 cells (and SB rings to
-    the widest cell, rounded to a multiple of 8) so sweeps of similar
-    size reuse one compiled program.
+    Results come back in ``specs`` order (one :class:`SimResult` per
+    spec; times in ns, log sizes in bytes, bandwidths in GB/s). Unique
+    ``(workload, seed)`` traces are synthesized once and shared across
+    every cell that scans them; the batch is padded to a multiple of 8
+    cells (and SB rings to the widest cell, rounded to a multiple of 8)
+    so sweeps of similar size reuse one compiled program.
+
+    ``chunk_size`` selects the engine: ``>= 1`` runs the blocked scan
+    with that many stores per block (default
+    :data:`DEFAULT_CHUNK_SIZE`; clamped to ``n_stores`` and to the
+    narrowest ``sb_size`` in the batch, since a block may not look back
+    past the carried commit history), ``0`` runs the PR-1 per-step
+    scan. Both engines are bit-identical to each other and to the
+    serial :func:`simulate` oracle; the blocked one is several times
+    faster on CPU (see ``fig10/sweep/*`` bench rows).
     """
     if not specs:
         return []
+    if chunk_size < 0:
+        raise ValueError(f"chunk_size must be >= 0, got {chunk_size}")
     for s in specs:
         s.validate(cluster)
 
-    traces: Dict[Tuple[str, int], Dict[str, np.ndarray]] = {}
-    for s in specs:
-        key = (s.workload, s.seed)
-        if key not in traces:
-            traces[key] = synthesize_trace(WORKLOADS[s.workload], n_stores,
-                                           s.seed, cluster)
-    cells = [_prepare_cell(s, traces[(s.workload, s.seed)], n_stores, cluster)
-             for s in specs]
-
-    n_real = len(cells)
-    n_pad = _pad_len(n_real)
-    padded = cells + [cells[0]] * (n_pad - n_real)
-    sb_max = _pad_len(max(c.sb_size for c in padded))
-
+    cells, args, sb_max, sb_min, sb_uniform = _batch_inputs(
+        tuple(specs), n_stores, cluster)
     costs = _commit_cost_ns("proactive", cluster)   # t_l1/t_wt are shared
-    exec_ns, at_head, sb_full = _timeline_batch(
-        jnp.asarray(np.stack([c.gaps for c in padded])),
-        jnp.asarray(np.stack([c.coalesce for c in padded])),
-        jnp.asarray(np.stack([c.exposed for c in padded])),
-        jnp.asarray(np.stack([c.t_repl_i for c in padded])),
-        jnp.asarray(np.stack([c.svc_i for c in padded])),
-        jnp.asarray([c.config_idx for c in padded], jnp.int32),
-        jnp.asarray([c.sb_size for c in padded], jnp.int32),
-        sb_max, costs["t_l1"], costs["t_wt"])
+    if chunk_size:
+        # a block may not reach past the carried history: the SB depth
+        # bounds the lookback (c_{i-sb}), so clamp to the narrowest cell
+        chunk = min(chunk_size, n_stores, sb_min)
+        exec_ns, at_head, sb_full = _timeline_batch_blocked(
+            *args, sb_max, chunk, sb_uniform, costs["t_l1"], costs["t_wt"])
+    else:
+        exec_ns, at_head, sb_full = _timeline_batch(
+            *args, sb_max, costs["t_l1"], costs["t_wt"])
     exec_ns = np.asarray(exec_ns)
     at_head = np.asarray(at_head)
     sb_full = np.asarray(sb_full)
@@ -615,6 +933,8 @@ def slowdown_table(configs: Tuple[str, ...] = CONFIGS,
 
 
 def geomean_slowdowns(table: Dict[str, Dict[str, float]]) -> Dict[str, float]:
+    """Per-config geometric mean over the workloads of a slowdown table
+    (the paper's headline aggregation; dimensionless ratios)."""
     out: Dict[str, float] = {}
     for c in next(iter(table.values())):
         vals = [table[w][c] for w in table]

@@ -1,10 +1,13 @@
 """Differential tests: ``simulate_batch`` vs the serial ``simulate()``
 oracle, over a grid spanning every config and every sensitivity knob.
 
-The batched-vs-serial contract (simulator.py module docstring) promises
-<= 1e-5 relative error on every SimResult field; in practice the two
-paths share trace synthesis + cost derivation and apply identical
-arithmetic, so they agree bit-for-bit.
+The contract (simulator.py module docstring): both batched engines --
+the blocked scan (default; uniform-SB fast path and general mixed-SB
+path) and the PR-1 per-step scan (``chunk_size=0``) -- share trace
+synthesis + cost derivation with the serial oracle and apply identical
+f32 arithmetic, so all paths agree **bit-for-bit**, for every chunk
+size including ragged tails. The exactness tests below assert ``==``;
+the older grid tests keep the (looser) documented 1e-5 band.
 """
 
 import numpy as np
@@ -12,6 +15,7 @@ import pytest
 
 from repro.core.simulator import (
     CONFIGS,
+    DEFAULT_CHUNK_SIZE,
     ScenarioSpec,
     geomean_slowdowns,
     simulate,
@@ -117,6 +121,87 @@ def test_invalid_specs_rejected():
     with pytest.raises(ValueError):
         simulate_batch([ScenarioSpec("ycsb", "wb", link_bw_gbps=0.0)],
                        n_stores=N)
+
+
+# ---------------------------------------------------------------------------
+# Blocked-scan differential tests: blocked vs per-step vs serial oracle,
+# bit-identical across chunk sizes (ragged tails included)
+# ---------------------------------------------------------------------------
+
+# uniform SB -> tuple-history fast path; N % 72 != 0 exercises the tail
+UNIFORM_GRID = [ScenarioSpec(w, c)
+                for w in ("ycsb", "raytrace", "ocean_ncp")
+                for c in CONFIGS] + [ScenarioSpec("canneal", "proactive",
+                                                  seed=3)]
+# mixed SB depths -> general gather path (chunk clamps to min sb = 16)
+MIXED_GRID = UNIFORM_GRID[:6] + [
+    ScenarioSpec("ycsb", "parallel", sb_size=16),
+    ScenarioSpec("barnes", "proactive", sb_size=24),
+    ScenarioSpec("bodytrack", "proactive", n_replicas=4),
+]
+
+
+@pytest.fixture(scope="module")
+def serial_by_spec():
+    cache = {}
+
+    def get(spec, n=N):
+        key = (spec, n)
+        if key not in cache:
+            cache[key] = simulate(
+                spec.workload, spec.config, n_stores=n, seed=spec.seed,
+                n_replicas=spec.n_replicas, link_bw_gbps=spec.link_bw_gbps,
+                n_cns=spec.n_cns, sb_size=spec.sb_size,
+                coalescing=spec.coalescing)
+        return cache[key]
+
+    return get
+
+
+def _assert_bit_identical(specs, batch, oracle, ctx):
+    for spec, rb in zip(specs, batch):
+        rs = oracle(spec)
+        assert rb.n_repl_msgs == rs.n_repl_msgs, (ctx, spec)
+        for f in FLOAT_FIELDS:
+            assert getattr(rb, f) == getattr(rs, f), (ctx, spec, f)
+
+
+@pytest.mark.parametrize("chunk", [0, 1, 7, 72, 4 * DEFAULT_CHUNK_SIZE])
+def test_uniform_sb_engines_bit_identical(chunk, serial_by_spec):
+    """Fast path (and per-step engine at chunk=0) vs serial, ``==``.
+
+    chunk=72 divides nothing evenly at N=6000 (83 blocks + 24-store
+    tail); chunk > sb clamps to the SB depth; chunk=1 degenerates to
+    per-store blocks.
+    """
+    out = simulate_batch(UNIFORM_GRID, n_stores=N, chunk_size=chunk)
+    _assert_bit_identical(UNIFORM_GRID, out, serial_by_spec, f"chunk={chunk}")
+
+
+@pytest.mark.parametrize("chunk", [0, 1, 7, 64])
+def test_mixed_sb_engines_bit_identical(chunk, serial_by_spec):
+    """General gather path (per-cell SB depths) vs serial, ``==``."""
+    out = simulate_batch(MIXED_GRID, n_stores=N, chunk_size=chunk)
+    _assert_bit_identical(MIXED_GRID, out, serial_by_spec, f"chunk={chunk}")
+
+
+def test_short_trace_edge_cases(serial_by_spec):
+    """n_stores below / barely above the SB depth: the block clamp and
+    the tail-only path must still be exact."""
+    specs = [ScenarioSpec("ycsb", "proactive"),
+             ScenarioSpec("raytrace", "baseline")]
+    for n in (50, 100):
+        out = simulate_batch(specs, n_stores=n)
+        for spec, rb in zip(specs, out):
+            rs = serial_by_spec(spec, n)
+            for f in FLOAT_FIELDS:
+                assert getattr(rb, f) == getattr(rs, f), (n, spec, f)
+
+
+def test_blocked_chunk_size_validation():
+    with pytest.raises(ValueError):
+        simulate_batch([ScenarioSpec("ycsb", "wb")], n_stores=N,
+                       chunk_size=-1)
 
 
 def test_slowdown_table_batched_matches_serial():

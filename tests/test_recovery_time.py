@@ -1,0 +1,197 @@
+"""Property tests for the SS VII-E recovery-time (downtime) model.
+
+The model's contract: estimated downtime is strictly monotone
+*increasing* in the log-replay volume (owned lines and undumped log
+bytes) and strictly monotone *decreasing* in the CXL link bandwidth;
+the batched sweep applies the same arithmetic as the scalar model; and
+fault-scenario outcomes carry per-event estimates fed by the volumes the
+replay actually moved.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.recxl_paper import PAPER_CLUSTER, WORKLOADS
+from repro.core.failures import FailureEvent
+from repro.core.recovery import (
+    DEFAULT_RECOVERY_PARAMS,
+    estimate_recovery_time,
+    recovery_time_batch,
+    workload_recovery_inputs,
+)
+from repro.core.scenarios import (
+    DEFAULT_FAIL_FRACS,
+    FaultScenario,
+    recovery_sweep,
+    run_fault_scenario,
+)
+
+needs_devices = pytest.mark.skipif(jax.device_count() < 4,
+                                   reason="needs >= 4 devices")
+
+owned_st = st.floats(min_value=1.0, max_value=1e7)
+bytes_st = st.floats(min_value=0.0, max_value=1e9)
+bw_st = st.floats(min_value=1.0, max_value=512.0)
+factor_st = st.floats(min_value=1.1, max_value=16.0)
+
+
+# ---------------------------------------------------------------------------
+# Scalar model properties
+# ---------------------------------------------------------------------------
+
+@given(owned_st, bytes_st, bw_st, factor_st)
+@settings(max_examples=20, deadline=None)
+def test_downtime_monotone_in_replay_volume(owned, undumped, bw, factor):
+    base = estimate_recovery_time(owned, undumped, link_bw_gbps=bw)
+    more_log = estimate_recovery_time(owned, undumped * factor + 1.0,
+                                      link_bw_gbps=bw)
+    more_owned = estimate_recovery_time(owned * factor, undumped,
+                                        link_bw_gbps=bw)
+    assert more_log.total_ns > base.total_ns
+    assert more_log.replay_bytes > base.replay_bytes
+    assert more_owned.total_ns > base.total_ns
+    assert more_owned.replay_bytes > base.replay_bytes
+
+
+@given(owned_st, bytes_st, bw_st, factor_st)
+@settings(max_examples=20, deadline=None)
+def test_downtime_inverse_monotone_in_bandwidth(owned, undumped, bw, factor):
+    slow = estimate_recovery_time(owned, undumped, link_bw_gbps=bw)
+    fast = estimate_recovery_time(owned, undumped, link_bw_gbps=bw * factor)
+    assert fast.total_ns < slow.total_ns
+    # bandwidth only affects the transfer phases
+    assert fast.log_scan_ns == slow.log_scan_ns
+    assert fast.directory_ns == slow.directory_ns
+    assert fast.replay_bytes == slow.replay_bytes
+
+
+def test_estimate_phases_sum_and_validation():
+    est = estimate_recovery_time(1000.0, 1e6)
+    total = (est.detect_ns + est.quiesce_ns + est.directory_ns +
+             est.log_scan_ns + est.fetch_ns + est.writeback_ns +
+             est.resume_ns)
+    assert est.total_ns == total
+    assert est.total_ms == est.total_ns / 1e6
+    with pytest.raises(ValueError):
+        estimate_recovery_time(1000.0, 1e6, link_bw_gbps=0.0)
+    with pytest.raises(ValueError):
+        estimate_recovery_time(-1.0, 1e6)
+
+
+def test_workload_inputs_periodic_in_dump_interval():
+    """The dump resets the pending log: undumped volume is periodic in
+    the dump period and grows within it; owned lines do not depend on
+    the failure time."""
+    period = PAPER_CLUSTER.dump_period_ms
+    o_early, u_early = workload_recovery_inputs("ycsb", 0.1 * period)
+    o_late, u_late = workload_recovery_inputs("ycsb", 0.9 * period)
+    o_wrap, u_wrap = workload_recovery_inputs("ycsb", 2.1 * period)
+    assert o_early == o_late == o_wrap
+    assert u_late > u_early
+    np.testing.assert_allclose(u_wrap, u_early, rtol=1e-9)
+
+
+def test_workload_inputs_scale_with_cluster_shrink():
+    """Weak scaling: 4 CNs run 4x the per-node work of 16 CNs, so both
+    the owned census and the pending log quadruple."""
+    o16, u16 = workload_recovery_inputs("barnes", 1.0, n_cns=16)
+    o4, u4 = workload_recovery_inputs("barnes", 1.0, n_cns=4)
+    np.testing.assert_allclose(o4, 4.0 * o16, rtol=1e-9)
+    np.testing.assert_allclose(u4, 4.0 * u16, rtol=1e-9)
+    with pytest.raises(ValueError):
+        workload_recovery_inputs("barnes", 1.0, n_cns=0)
+
+
+# ---------------------------------------------------------------------------
+# Batched model vs scalar model
+# ---------------------------------------------------------------------------
+
+def test_batched_matches_scalar():
+    rng = np.random.default_rng(0)
+    owned = rng.uniform(1.0, 1e6, (4, 3))
+    undumped = rng.uniform(0.0, 1e8, (4, 3))
+    bw = rng.uniform(10.0, 160.0, (4, 3))
+    out = recovery_time_batch(owned, undumped, bw)
+    assert out["total_ns"].shape == (4, 3)
+    for i in range(4):
+        for j in range(3):
+            est = estimate_recovery_time(owned[i, j], undumped[i, j],
+                                         link_bw_gbps=bw[i, j])
+            np.testing.assert_allclose(float(out["total_ns"][i, j]),
+                                       est.total_ns, rtol=1e-5)
+            np.testing.assert_allclose(float(out["replay_bytes"][i, j]),
+                                       est.replay_bytes, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Failure-time x node sweep
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sweep():
+    return recovery_sweep(workloads=("ycsb", "canneal", "streamcluster"),
+                          cn_counts=(4, 8, 16))
+
+
+def test_sweep_shape_and_axes(sweep):
+    assert sweep.total_ns.shape == (3, len(DEFAULT_FAIL_FRACS), 3)
+    assert set(sweep.components) >= {"fetch_ns", "log_scan_ns",
+                                     "replay_bytes"}
+    assert all(v.shape == sweep.total_ns.shape
+               for v in sweep.components.values())
+
+
+def test_sweep_monotone_axes(sweep):
+    """Downtime grows within the dump interval (failure-time axis) and
+    as the cluster shrinks (node axis, larger per-node shards)."""
+    t = sweep.total_ns
+    assert (np.diff(t, axis=1) > 0).all()       # later failure -> worse
+    assert (np.diff(t, axis=2) < 0).all()       # more CNs -> better
+    mid = sweep.fail_times_ms[1]
+    assert sweep.total_ms("ycsb", mid, 4) > sweep.total_ms("ycsb", mid, 16)
+
+
+def test_sweep_bandwidth_sensitivity():
+    base = recovery_sweep(workloads=("ycsb",), cn_counts=(16,))
+    slow = recovery_sweep(workloads=("ycsb",), cn_counts=(16,),
+                          link_bw_gbps=PAPER_CLUSTER.cxl_link_bw_gbps / 4)
+    assert (slow.total_ns > base.total_ns).all()
+    with pytest.raises(ValueError):
+        recovery_sweep(workloads=("ycsb",), link_bw_gbps=0.0)
+
+
+def test_recovery_bench_rows():
+    """The fig9/recovery/* rows the CI smoke run publishes."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.protocol_benches import bench_recovery
+    rows = bench_recovery()
+    names = [r["name"] for r in rows]
+    assert all(n.startswith("fig9/recovery/") for n in names)
+    for w in WORKLOADS:
+        assert f"fig9/recovery/{w}/downtime_ms" in names
+    by = {r["name"]: r["derived"] for r in rows}
+    assert by["fig9/recovery/ycsb/late_over_early_fail"] > 1.0
+    assert by["fig9/recovery/ycsb/cn4_over_cn16"] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# Fault-scenario integration
+# ---------------------------------------------------------------------------
+
+@needs_devices
+def test_fault_scenario_reports_downtime():
+    scn = FaultScenario(name="dt", events=(FailureEvent(step=1, node=0),
+                                           FailureEvent(step=3, node=2)),
+                        n_steps=5)
+    out = run_fault_scenario(scn)
+    assert out.all_invariants_hold
+    assert len(out.checks) == 2
+    for c in out.checks:
+        assert c.downtime is not None
+        assert c.downtime_ns == c.downtime.total_ns > 0
+        assert c.downtime.replay_bytes > 0
+    assert out.total_downtime_ns == sum(c.downtime_ns for c in out.checks)

@@ -126,8 +126,10 @@ def test_recovery_invariants_under_arbitrary_schedules(events, variant):
         assert c.directory_consistent, c
         assert c.exact, c
         assert c.newest_ts == c.step       # newest validated version wins
+        assert c.downtime_ns > 0, c        # SS VII-E estimate attached
     assert not directory_references(out.directory, set(out.failed_nodes))
     assert out.resumed
+    assert out.total_downtime_ns > 0
 
 
 @needs_devices
