@@ -3,13 +3,16 @@
 Every function returns a list of row dicts with at least
 (name, us_per_call, derived); run.py renders them as CSV.
 
-All grids run through the batched sweep engine (``simulate_batch`` /
-``core.scenarios`` grid builders): one jitted call per figure instead of
-a serial Python loop per cell. ``bench_batch_speedup`` keeps the serial
-oracle and both batched engines (blocked default vs PR-1 per-step)
-honest by timing all paths on the full Fig. 10 grid and reporting the
-wall-clock ratios, so the speedups are tracked in the ``BENCH_*.json``
-history. ``bench_recovery`` adds the SS VII-E downtime model rows
+All grids run through the engine tier selector (``scenarios.run_sweep``
+-> ``repro.core.engine``): one call per figure instead of a serial
+Python loop per cell. ``bench_batch_speedup`` keeps the serial oracle
+and both batched engines (blocked default vs PR-1 per-step) honest by
+timing all paths on the full Fig. 10 grid; ``bench_megagrid`` times the
+streaming sharded tier against the one-shot blocked paths on the
+>=10^4-cell sensitivity cross-product. ``clear_sim_caches()`` runs
+between engines so no path's timing rides on caches another warmed; all
+speedups land in the ``BENCH_protocol.json`` trajectory.
+``bench_recovery`` adds the SS VII-E downtime model rows
 (``fig9/recovery/*``) from one batched failure-time x node sweep.
 
 See README.md (in this directory) for the bench-row schema.
@@ -26,11 +29,12 @@ import time
 from typing import Dict, List, Sequence
 
 from repro.configs.recxl_paper import PAPER_CLAIMS, WORKLOADS
-from repro.core.scenarios import fig16_grid, fig17_grid, fig18_grid
+from repro.core.scenarios import fig16_grid, fig17_grid, fig18_grid, run_sweep
 from repro.core.simulator import (
     CONFIGS,
     ScenarioSpec,
     SimResult,
+    clear_sim_caches,
     geomean_slowdowns,
     simulate,
     simulate_batch,
@@ -40,11 +44,29 @@ from repro.core.simulator import (
 QUICK = os.environ.get("RECXL_BENCH_QUICK", "") not in ("", "0")
 N_STORES = int(os.environ.get("RECXL_BENCH_STORES",
                               "5000" if QUICK else "30000"))
+#: Store count for the mega-grid rows (paper-scale traces by default;
+#: the quick smoke shrinks them so CI still exercises the tier).
+MEGA_STORES = int(os.environ.get("RECXL_BENCH_MEGA_STORES",
+                                 "2000" if QUICK else "30000"))
+
+
+def _available_memory_bytes():
+    """MemAvailable from /proc/meminfo, or None where unavailable."""
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemAvailable:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return None
 
 
 def _run(specs: Sequence[ScenarioSpec]) -> Dict[tuple, SimResult]:
-    """One batched call; results keyed by the spec itself."""
-    res = simulate_batch(specs, n_stores=N_STORES)
+    """One sweep through the engine tier selector; results keyed by the
+    spec itself (figure grids are small, so this resolves to the
+    one-shot blocked batch)."""
+    res = run_sweep(specs, n_stores=N_STORES)
     return {s: r for s, r in zip(specs, res)}
 
 
@@ -93,16 +115,17 @@ def bench_batch_speedup() -> List[Dict]:
 
     Four paths: the serial per-cell oracle loop; the PR-1 batched path
     (per-step scan, host prep re-done every call -- exactly what PR 1
-    shipped, reproduced by clearing the input caches); the per-step
-    engine with cached inputs; and the blocked engine (the
+    shipped, reproduced by clearing every simulator cache); the
+    per-step engine with cached inputs; and the blocked engine (the
     ``simulate_batch`` default). Steady-state rows are warmed so they
     track sweep throughput, not XLA compile time; the cold blocked time
-    is its own row since a CI smoke run pays it.
+    is its own row since a CI smoke run pays it. ``clear_sim_caches``
+    runs between engines so no path's timing rides on caches another
+    path warmed.
     """
-    from repro.core.simulator import _batch_inputs, _trace_cached
-
     specs = [ScenarioSpec(w, c) for w in WORKLOADS for c in CONFIGS]
 
+    clear_sim_caches()
     t0 = time.perf_counter()
     simulate_batch(specs, n_stores=N_STORES)
     cold_s = time.perf_counter() - t0
@@ -116,8 +139,7 @@ def bench_batch_speedup() -> List[Dict]:
     perstep_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()                                 # PR-1 path
-    _batch_inputs.cache_clear()
-    _trace_cached.cache_clear()
+    clear_sim_caches()
     simulate_batch(specs, n_stores=N_STORES, chunk_size=0)
     pr1_s = time.perf_counter() - t0
 
@@ -150,6 +172,124 @@ def bench_batch_speedup() -> List[Dict]:
          "us_per_call": 0.0,
          "derived": round(perstep_s / max(blocked_s, 1e-9), 2)},
     ]
+
+
+def bench_megagrid() -> List[Dict]:
+    """``fig10/megagrid/*``: the streaming sharded engine tier vs the
+    one-shot blocked path on the full sensitivity cross-product
+    (``scenarios.mega_grid``: 12 960 cells full mode, a shrunken smoke
+    under ``--quick``).
+
+    Three cold end-to-end runs, with ``clear_sim_caches()`` before each
+    so every path pays its own prep/compile:
+
+    * ``engine_s``    -- :func:`repro.core.engine.run_grid` (tiled,
+      cell-sharded over the local devices, double-buffered host prep);
+    * ``blocked_s``   -- the current one-shot blocked batch (auto
+      chunk, shared cell-array memo);
+    * ``pr2_blocked_s`` -- the PR-2 path faithfully: one-shot batch at
+      the old default ``chunk_size=128`` with the reduced-key
+      cell-array sharing disabled (PR 2 derived every cell's arrays
+      from scratch).
+
+    ``oracle_bitident`` re-runs a handful of sampled cells through the
+    serial oracle and checks ``==``, so the speedup rows can never
+    quietly come from drifting arithmetic.
+    """
+    import jax
+
+    from repro.core import engine as E
+    from repro.core.simulator import _CELL_ARRAY_CACHE, DEFAULT_CHUNK_SIZE
+    from repro.core.scenarios import mega_grid
+
+    if QUICK:
+        specs = mega_grid(seeds=(0,), replicas=(1, 3),
+                          bandwidths=(160.0, 40.0), cn_counts=(16,),
+                          sb_sizes=(72, 48))
+    else:
+        specs = mega_grid()
+    n = len(specs)
+
+    clear_sim_caches()
+    traces0 = E.trace_count()
+    t0 = time.perf_counter()
+    res_e = E.run_grid(specs, n_stores=MEGA_STORES)
+    engine_s = time.perf_counter() - t0
+    compiles = E.trace_count() - traces0
+    shards = res_e[0].meta["n_shards"]
+
+    # the one-shot comparison rows materialize the WHOLE grid as one
+    # batch (the wall the streaming tier exists to avoid): ~17 bytes
+    # per cell-store on device plus a host staging copy. Skip them --
+    # engine rows still stand -- rather than swap/OOM a small machine.
+    oneshot_bytes = 2 * 17 * MEGA_STORES * (n + 8)
+    budget = _available_memory_bytes()
+    oneshot_ok = budget is None or oneshot_bytes < 0.6 * budget
+
+    blocked_s = pr2_s = None
+    res_b = None
+    if oneshot_ok:
+        clear_sim_caches()
+        t0 = time.perf_counter()
+        res_b = simulate_batch(specs, n_stores=MEGA_STORES)
+        blocked_s = time.perf_counter() - t0
+
+        clear_sim_caches()
+        old_bound = _CELL_ARRAY_CACHE.maxsize
+        _CELL_ARRAY_CACHE.maxsize = 0    # PR 2: no cross-cell sharing
+        try:
+            t0 = time.perf_counter()
+            simulate_batch(specs, n_stores=MEGA_STORES,
+                           chunk_size=DEFAULT_CHUNK_SIZE)
+            pr2_s = time.perf_counter() - t0
+        finally:
+            _CELL_ARRAY_CACHE.maxsize = old_bound
+            clear_sim_caches()
+
+    ident = res_b is None or all(a.exec_time_ns == b.exec_time_ns
+                                 and a.sb_full_frac == b.sb_full_frac
+                                 for a, b in zip(res_e, res_b))
+    for i in list(range(0, n, max(1, n // 5)))[:6]:     # sampled cells
+        s = specs[i]
+        rs = simulate(s.workload, s.config, n_stores=MEGA_STORES,
+                      seed=s.seed, n_replicas=s.n_replicas,
+                      link_bw_gbps=s.link_bw_gbps, n_cns=s.n_cns,
+                      sb_size=s.sb_size, coalescing=s.coalescing)
+        ident = ident and (res_e[i].exec_time_ns == rs.exec_time_ns
+                           and res_e[i].repl_at_head_frac ==
+                           rs.repl_at_head_frac)
+
+    skipped = f"skipped(needs~{oneshot_bytes >> 30}GiB)"
+    rows = [
+        {"name": "fig10/megagrid/cells", "us_per_call": 0.0, "derived": n},
+        {"name": "fig10/megagrid/stores_per_cell", "us_per_call": 0.0,
+         "derived": MEGA_STORES},
+        {"name": "fig10/megagrid/engine_s",
+         "us_per_call": engine_s * 1e6 / n, "derived": round(engine_s, 2)},
+        {"name": "fig10/megagrid/engine_cells_per_s", "us_per_call": 0.0,
+         "derived": round(n / engine_s, 1)},
+        {"name": "fig10/megagrid/engine_compiles", "us_per_call": 0.0,
+         "derived": compiles},
+        {"name": "fig10/megagrid/engine_shards", "us_per_call": 0.0,
+         "derived": f"{shards}/{len(jax.devices())}dev"},
+        {"name": "fig10/megagrid/blocked_s",
+         "us_per_call": (blocked_s or 0.0) * 1e6 / n,
+         "derived": round(blocked_s, 2) if blocked_s else skipped},
+        {"name": "fig10/megagrid/pr2_blocked_s",
+         "us_per_call": (pr2_s or 0.0) * 1e6 / n,
+         "derived": round(pr2_s, 2) if pr2_s else skipped},
+        {"name": "fig10/megagrid/oracle_bitident", "us_per_call": 0.0,
+         "derived": int(ident)},
+    ]
+    if blocked_s:
+        rows.insert(-1, {"name": "fig10/megagrid/speedup_engine_over_blocked",
+                         "us_per_call": 0.0,
+                         "derived": round(blocked_s / max(engine_s, 1e-9), 2)})
+    if pr2_s:
+        rows.insert(-1, {"name": "fig10/megagrid/speedup_engine_over_pr2",
+                         "us_per_call": 0.0,
+                         "derived": round(pr2_s / max(engine_s, 1e-9), 2)})
+    return rows
 
 
 def bench_repl_timing() -> List[Dict]:
@@ -316,8 +456,8 @@ def bench_recovery() -> List[Dict]:
 
 
 ALL_PROTOCOL_BENCHES = [
-    bench_wb_wt, bench_protocols, bench_batch_speedup, bench_repl_timing,
-    bench_coalescing, bench_log_size, bench_bandwidth, bench_owned_lines,
-    bench_link_bw, bench_replication_factor, bench_num_nodes,
-    bench_recovery,
+    bench_wb_wt, bench_protocols, bench_batch_speedup, bench_megagrid,
+    bench_repl_timing, bench_coalescing, bench_log_size, bench_bandwidth,
+    bench_owned_lines, bench_link_bw, bench_replication_factor,
+    bench_num_nodes, bench_recovery,
 ]

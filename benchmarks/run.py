@@ -1,11 +1,14 @@
 """Benchmark driver: one function per paper table/figure + the framework
-and roofline benches. Prints ``name,us_per_call,derived`` CSV.
+and roofline benches. Prints ``name,us_per_call,derived`` CSV and
+appends the run to the ``BENCH_protocol.json`` trajectory.
 
 Sections:
   fig2/*        WB vs WT (paper Fig. 2)
   fig10/*       five configurations + geomeans vs paper claims (Fig. 10),
                 plus fig10/sweep/* engine wall-clock tracking (serial
-                oracle vs PR-1 per-step scan vs blocked scan)
+                oracle vs PR-1 per-step scan vs blocked scan) and
+                fig10/megagrid/* (streaming sharded tier vs one-shot
+                blocked on the full sensitivity cross-product)
   fig9/recovery/*  SS VII-E downtime estimates from the batched
                 failure-time x node recovery sweep
   fig11..18/*   characterization + sensitivity (Figs. 11-18)
@@ -17,14 +20,59 @@ Sections:
                 benchmarks/artifacts/)
 
 ``--quick`` (or RECXL_BENCH_QUICK=1) is the CI smoke mode: protocol
-benches only, at a reduced store count.
+benches only, at a reduced store count (including a shrunken megagrid
+smoke so the shard_map tier cannot rot).
+
+Perf history: every run appends ``{ts, quick, argv, rows}`` to
+``benchmarks/BENCH_protocol.json`` (override the path with
+``RECXL_BENCH_HISTORY=<path>``, disable with ``RECXL_BENCH_HISTORY=off``),
+so engine speedups are comparable across PRs. Row schema in
+benchmarks/README.md.
 """
 
+import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+HISTORY_DEFAULT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               "BENCH_protocol.json")
+
+
+def append_history(rows, quick: bool) -> str:
+    """Append one run's rows to the JSON trajectory; returns the path
+    ('' when disabled or unwritable). The file is a list of run
+    entries, oldest first. History is best-effort telemetry: an
+    unreadable/corrupt file is restarted and an unwritable path is
+    reported on stderr -- neither may fail a bench run that already
+    completed."""
+    path = os.environ.get("RECXL_BENCH_HISTORY", HISTORY_DEFAULT)
+    if path.lower() in ("", "0", "off", "none"):
+        return ""
+    try:
+        with open(path) as f:
+            hist = json.load(f)
+        if not isinstance(hist, list):
+            hist = []
+    except (OSError, ValueError):
+        hist = []
+    hist.append({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "quick": quick,
+        "argv": sys.argv[1:],
+        "rows": rows,
+    })
+    try:
+        with open(path, "w") as f:
+            json.dump(hist, f, indent=1, sort_keys=True, default=str)
+            f.write("\n")
+    except OSError as e:
+        print(f"# bench history not written ({path}: {e})", file=sys.stderr)
+        return ""
+    return path
 
 
 def main() -> None:
@@ -60,6 +108,10 @@ def main() -> None:
         extra = f",paper={r['paper_claim']}" if "paper_claim" in r else ""
         derived = str(r["derived"]).replace(",", ";")
         print(f"{r['name']},{r['us_per_call']},{derived}{extra}")
+
+    path = append_history(rows, quick)
+    if path:
+        print(f"# appended {len(rows)} rows to {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,473 @@
+"""Sharded streaming mega-grid engine (the tier above ``simulate_batch``).
+
+``simulate_batch`` runs a whole grid as ONE blocked-scan call: perfect
+up to a few thousand cells, but a mega-grid (>10^4 cells -- the full
+(workload x config x N_r x bw x CN x SB) sensitivity space of Figs.
+10/16-18, times seeds) hits three walls:
+
+* **one device** -- the time-major ``(n_stores, B)`` layout makes the
+  cell axis embarrassingly parallel, yet the whole batch scans on a
+  single device;
+* **one giant allocation + one compile per batch shape** -- every grid
+  size stacks fresh ``(n_stores, B)`` arrays and jits a program for
+  that exact ``B``;
+* **serialized host prep** -- trace synthesis / per-cell cost
+  derivation for the *whole* grid completes before the first scan step
+  runs.
+
+This module is the streaming tier that removes all three:
+
+1. **Tile scheduler** (:func:`plan_tiles`). The grid is split into
+   tiles of at most :data:`DEFAULT_TILE_CELLS` cells, grouped by
+   store-buffer depth first, so every tile is SB-uniform and runs the
+   tuple-history fast path of the blocked scan -- a mixed-SB mega-grid
+   never falls back to the gather path the way a one-shot batch must.
+   Every tile is padded to a small set of canonical cell counts
+   (:func:`_canonical_sizes`), so an entire mega-grid executes with a
+   handful of compiled programs (:class:`TileSignature` ->
+   :func:`_tile_fn` cache), not one compile per ragged tail.
+
+2. **``shard_map`` over a ``cells`` mesh axis.** Each tile's arrays are
+   ``device_put`` with the cell axis sharded over all local devices
+   (``repro.distributed.context.cells_mesh`` /
+   ``repro.distributed.sharding.tile_shardings``) and the blocked scan
+   runs per shard with ZERO cross-device communication -- cells are
+   independent timelines, sharding is a pure partition. Elementwise
+   lane arithmetic is unchanged, so results stay bit-identical to the
+   single-device path and the serial oracle (tests/test_engine.py
+   asserts ``==``).
+
+3. **Double-buffered streaming.** A single worker thread prepares tile
+   k+1 (``_prepare_cell`` + cell-major ``_stack_tile`` host numpy --
+   a row memcpy per cell, transposed to time-major on device) while the
+   devices compute tile k; dispatch is async and runs ahead of the
+   devices by at most :data:`MAX_IN_FLIGHT_TILES` tiles before the
+   oldest is drained, bounding live memory. Host prep cost
+   is further collapsed by the reduced-key ``_cell_arrays`` memo
+   (cells differing only in config class / SB / CN share one
+   derivation), and everything is dropped by
+   ``repro.core.simulator.clear_sim_caches()`` -- including this
+   module's compiled-tile cache, registered via
+   ``register_cache_clearer``.
+
+:func:`simulate_grid` is the tier selector: grids below
+:data:`STREAM_THRESHOLD` cells go to the blocked one-shot batch, larger
+grids stream; ``engine=`` forces a tier. ``SimResult.meta`` records
+which tier ran, the chunk used, and the tile/shard geometry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.recxl_paper import ClusterConfig, PAPER_CLUSTER
+from repro.core.simulator import (
+    ScenarioSpec,
+    SimResult,
+    _CellInputs,
+    _commit_cost_ns,
+    _finish_result,
+    _pad_len,
+    _prepare_cell,
+    _timeline_batch_blocked,
+    _trace_cached,
+    auto_chunk,
+    register_cache_clearer,
+    simulate,
+    simulate_batch,
+)
+from repro.distributed.context import cells_mesh, shard_map
+from repro.distributed.sharding import tile_shardings, tile_specs
+
+#: Cells per tile (before canonical padding) at the default byte
+#: budget. Large enough that one scan amortizes dispatch overhead,
+#: small enough that a tile's five (B_tile, n_stores) arrays stream
+#: through cache instead of RAM.
+DEFAULT_TILE_CELLS = 1024
+
+#: Byte budget for one tile's five per-store input arrays (~4+1+4+4+4
+#: bytes per cell-store). Long traces shrink the tile cell count so the
+#: double-buffered ring (tile k on device, tile k+1 on the prep thread)
+#: stays at ~2x this footprint regardless of ``n_stores``. 128 MB
+#: measured fastest end-to-end at paper-scale store counts (the sweet
+#: spot between per-tile dispatch overhead and cache-resident scans).
+DEFAULT_TILE_BYTES = 128 << 20
+
+
+def _default_tile_cells(n_stores: int) -> int:
+    per_cell = max(1, 17 * n_stores)
+    return int(min(DEFAULT_TILE_CELLS,
+                   max(64, DEFAULT_TILE_BYTES // per_cell)))
+
+
+#: Grid size at which ``simulate_grid(engine="auto")`` switches from the
+#: one-shot blocked batch to the streaming sharded tier.
+STREAM_THRESHOLD = 2048
+
+#: Dispatched-but-undrained tile bound. Dispatch runs ahead of device
+#: compute, so this -- together with the prep thread's one-tile
+#: lookahead -- is what actually caps the engine's live memory at a few
+#: tile footprints regardless of grid size.
+MAX_IN_FLIGHT_TILES = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSignature:
+    """Everything that selects a compiled tile program.
+
+    Two tiles with equal signatures reuse one XLA executable: ``b_pad``
+    is the canonical padded cell count, ``chunk`` the blocked-scan block
+    length, ``sb_uniform`` the tile's (uniform, by scheduling) SB depth,
+    ``sb_max`` its padded ring width, ``n_shards`` the ``cells`` mesh
+    size. A whole mega-grid runs with a handful of distinct signatures.
+    """
+    b_pad: int
+    n_stores: int
+    chunk: int
+    sb_max: int
+    sb_uniform: int
+    n_shards: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Tile:
+    """One scheduled slice of a grid: original positions + specs + sig."""
+    indices: Tuple[int, ...]
+    specs: Tuple[ScenarioSpec, ...]
+    sig: TileSignature
+
+
+def _align(n_shards: int) -> int:
+    """Cell-count alignment: a multiple of 8 (batch padding contract of
+    ``_stack_cells``) and of the shard count (shard_map divisibility)."""
+    return 8 * n_shards // math.gcd(8, n_shards)
+
+
+def _canonical_sizes(tile_cells: int, align: int) -> List[int]:
+    """The canonical padded cell counts: the full tile and a 1/8 tile
+    (rounded up to ``align``). Ragged last tiles pad UP to the smallest
+    canonical size that fits, so at most two batch shapes -- and
+    therefore compiled programs -- exist per SB signature of a
+    mega-grid. The set is deliberately tiny: a compile costs ~50x more
+    than scanning the padding cells it would avoid, so only genuinely
+    small groups (<= tile/8 cells) get their own shape."""
+    small = -(-max(1, tile_cells // 8) // align) * align
+    return sorted({small, tile_cells})
+
+
+def plan_tiles(specs: Sequence[ScenarioSpec],
+               cluster: ClusterConfig = PAPER_CLUSTER,
+               n_stores: int = 50_000,
+               chunk_size: Optional[int] = None,
+               tile_cells: int = DEFAULT_TILE_CELLS,
+               n_shards: int = 1) -> List[Tile]:
+    """Schedule a grid into canonically-shaped, SB-uniform tiles.
+
+    Cells are grouped by resolved store-buffer depth (preserving order
+    within a group -- results are scattered back to original positions
+    by :func:`run_grid`), so every tile runs the tuple-history fast
+    path with its chunk clamped only by its OWN depth, not the
+    narrowest cell of the whole grid. Each group is cut into
+    ``tile_cells``-sized tiles padded to canonical sizes.
+    """
+    align = _align(n_shards)
+    tile_cells = max(align, -(-tile_cells // align) * align)
+    sizes = _canonical_sizes(tile_cells, align)
+
+    groups: Dict[int, List[Tuple[int, ScenarioSpec]]] = {}
+    for i, s in enumerate(specs):
+        sb = s.sb_size if s.sb_size is not None else cluster.store_buffer
+        groups.setdefault(sb, []).append((i, s))
+
+    tiles: List[Tile] = []
+    for sb, members in groups.items():
+        chunk = auto_chunk(n_stores, sb, tile_cells) if chunk_size is None \
+            else max(1, min(chunk_size, n_stores, sb))
+        for off in range(0, len(members), tile_cells):
+            part = members[off:off + tile_cells]
+            b_pad = next(c for c in sizes if c >= len(part))
+            sig = TileSignature(b_pad=b_pad, n_stores=n_stores, chunk=chunk,
+                                sb_max=_pad_len(sb), sb_uniform=sb,
+                                n_shards=n_shards)
+            tiles.append(Tile(indices=tuple(i for i, _ in part),
+                              specs=tuple(s for _, s in part), sig=sig))
+    return tiles
+
+
+# ---------------------------------------------------------------------------
+# Signature-keyed compile cache
+# ---------------------------------------------------------------------------
+
+_TILE_FNS: Dict[TileSignature, Callable] = {}
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    """Tile-program traces since import (monotone; compile-cache
+    diagnostics -- tests assert it does NOT grow across same-signature
+    tiles, benchmarks report the per-run delta)."""
+    return _TRACE_COUNT
+
+
+def _build_tile_fn(sig: TileSignature) -> Callable:
+    def run(arrivals, coalesce, exposed, t_repl_i, svc_i,
+            config_idx, sb_size, t_l1, t_wt):
+        global _TRACE_COUNT
+        _TRACE_COUNT += 1          # runs once per trace, not per call
+        # tiles arrive cell-major (host stacking is then a row memcpy
+        # per cell); the transpose to the scan's time-major layout is a
+        # cheap local device op, fused ahead of the block reshapes
+        return _timeline_batch_blocked(
+            arrivals.T, coalesce.T, exposed.T, t_repl_i.T, svc_i.T,
+            config_idx, sb_size, sig.sb_max, sig.chunk, sig.sb_uniform,
+            t_l1, t_wt)
+
+    if sig.n_shards > 1:
+        # every op in the blocked scan is lane-wise over the cell axis,
+        # so partitioning cells over the mesh needs no collectives and
+        # cannot change a single lane's arithmetic
+        run = shard_map(run, cells_mesh(sig.n_shards),
+                        in_specs=tile_specs() + (P(), P()),
+                        out_specs=(P("cells"),) * 3)
+    return jax.jit(run)
+
+
+def _tile_fn(sig: TileSignature) -> Callable:
+    fn = _TILE_FNS.get(sig)
+    if fn is None:
+        fn = _TILE_FNS.setdefault(sig, _build_tile_fn(sig))
+    return fn
+
+
+@register_cache_clearer
+def _clear_engine_caches() -> None:
+    _TILE_FNS.clear()
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered streaming executor
+# ---------------------------------------------------------------------------
+
+def _stack_tile(cells: List[_CellInputs], b_pad: int) -> tuple:
+    """Stack one tile's cells **cell-major** ``(B, n_stores)``.
+
+    Unlike the one-shot batch's time-major stacking (a strided scatter
+    per cell), cell-major stacking is a contiguous row memcpy per cell;
+    the device transposes to time-major inside the tile program, where
+    it costs a fraction of the host scatter. Padding repeats cell 0.
+    """
+    padded = cells + [cells[0]] * (b_pad - len(cells))
+    return (
+        np.stack([c.arrivals for c in padded], axis=0),
+        np.stack([c.coalesce for c in padded], axis=0),
+        np.stack([c.exposed for c in padded], axis=0),
+        np.stack([c.t_repl_i for c in padded], axis=0),
+        np.stack([c.svc_i for c in padded], axis=0),
+        np.asarray([c.config_idx for c in padded], np.int32),
+        np.asarray([c.sb_size for c in padded], np.int32),
+    )
+
+
+def _prep_tile(tile: Tile, n_stores: int, cluster: ClusterConfig
+               ) -> Tuple[List[_CellInputs], tuple]:
+    """Host-side prep for one tile (runs on the prefetch thread)."""
+    cells = [_prepare_cell(s, _trace_cached(s.workload, n_stores, s.seed,
+                                            cluster), n_stores, cluster)
+             for s in tile.specs]
+    return cells, _stack_tile(cells, tile.sig.b_pad)
+
+
+def _place_tile(np_args: tuple, sig: TileSignature) -> tuple:
+    """Put one tile's host arrays on the mesh, cell axis sharded.
+
+    All callers (the streaming loop AND the compile-warming thread) go
+    through here so every call of a tile program sees identically
+    committed/sharded inputs -- jit specializes on input shardings, so
+    a mismatch would silently compile each program twice."""
+    if sig.n_shards == 1:
+        return np_args
+    return jax.device_put(np_args, tile_shardings(cells_mesh(sig.n_shards)))
+
+
+def _warm_signatures(sigs: List[TileSignature], t_l1, t_wt) -> None:
+    """Compile every distinct tile program with zero inputs (runs on the
+    compile thread, so XLA compilation -- which releases the GIL --
+    overlaps the first tiles' host prep and device compute; jax's
+    per-program lock keeps a racing main-thread call from compiling the
+    same program twice).
+
+    Warming MUST go through a real call: on the jax versions this repo
+    targets (0.4.x), AOT ``jit(f).lower(shapes).compile()`` does not
+    populate the jit call cache (measured -- the first real call pays
+    the compile again), so shape-only warming would double every
+    compile. The zeros are calloc'd and one discarded tile execution
+    per signature (a handful per mega-grid) is the price of the
+    overlap."""
+    for sig in sigs:
+        args = (np.zeros((sig.b_pad, sig.n_stores), np.float32),
+                np.zeros((sig.b_pad, sig.n_stores), bool),
+                np.zeros((sig.b_pad, sig.n_stores), np.float32),
+                np.zeros((sig.b_pad, sig.n_stores), np.float32),
+                np.zeros((sig.b_pad, sig.n_stores), np.float32),
+                np.zeros((sig.b_pad,), np.int32),
+                np.full((sig.b_pad,), sig.sb_uniform, np.int32))
+        _tile_fn(sig)(*_place_tile(args, sig), t_l1, t_wt)
+
+
+def run_grid(specs: Sequence[ScenarioSpec],
+             cluster: ClusterConfig = PAPER_CLUSTER,
+             n_stores: int = 50_000,
+             chunk_size: Optional[int] = None,
+             tile_cells: Optional[int] = None,
+             n_shards: Optional[int] = None) -> List[SimResult]:
+    """Stream a (mega-)grid through the sharded tile engine.
+
+    Results come back in ``specs`` order, bit-identical to
+    ``simulate_batch`` and the serial oracle. ``chunk_size=None`` uses
+    the :func:`auto_chunk` heuristic per SB group; ``tile_cells``
+    defaults to the :data:`DEFAULT_TILE_BYTES` budget (capped at
+    :data:`DEFAULT_TILE_CELLS`); ``n_shards`` defaults to every local
+    device (1 falls back to single-device streaming -- still tiled,
+    cached and double-buffered).
+
+    The loop overlaps three stages: the prefetch thread derives tile
+    k+1's host arrays while tile k's arrays are placed cell-sharded on
+    the mesh and its (asynchronously dispatched) scan runs. Dispatch
+    runs ahead of the devices by at most :data:`MAX_IN_FLIGHT_TILES`
+    tiles: past that the loop drains the oldest tile (blocking until
+    its compute finishes and releasing its input buffers), which is
+    what caps live memory at a few tile footprints however large the
+    grid is.
+    """
+    if not specs:
+        return []
+    if chunk_size is not None and chunk_size < 1:
+        raise ValueError(
+            f"chunk_size must be >= 1 (or None for auto), got {chunk_size}")
+    n_dev = len(jax.devices())
+    if n_shards is None:
+        # all local devices: even oversubscribed virtual CPU devices
+        # measured faster than matching the physical core count (each
+        # shard's scan body is single-threaded in XLA; more shards =
+        # more concurrent executions for the host threadpool to fill)
+        n_shards = n_dev
+    if not 1 <= n_shards <= n_dev:
+        raise ValueError(f"n_shards must be in [1, {n_dev}], got {n_shards}")
+    for s in specs:
+        s.validate(cluster)
+
+    tiles = plan_tiles(specs, cluster=cluster, n_stores=n_stores,
+                       chunk_size=chunk_size,
+                       tile_cells=tile_cells or _default_tile_cells(n_stores),
+                       n_shards=n_shards)
+    costs = _commit_cost_ns("proactive", cluster)
+    t_l1 = np.float32(costs["t_l1"])
+    t_wt = np.float32(costs["t_wt"])
+
+    results: List[Optional[SimResult]] = [None] * len(specs)
+
+    def finish(entry) -> None:
+        """Drain one dispatched tile: blocks until its device compute is
+        done, releasing its input buffers, and scatters the per-cell
+        results back to original grid positions."""
+        tile, cells, (exec_ns, at_head, sb_full) = entry
+        exec_ns = np.asarray(exec_ns)
+        at_head = np.asarray(at_head)
+        sb_full = np.asarray(sb_full)
+        for j, (i, cell) in enumerate(zip(tile.indices, cells)):
+            meta = {"engine": ("sharded" if tile.sig.n_shards > 1
+                               else "streamed"),
+                    "chunk": tile.sig.chunk, "auto_chunk": chunk_size is None,
+                    "tile_cells": tile.sig.b_pad,
+                    "n_shards": tile.sig.n_shards}
+            results[i] = _finish_result(cell, exec_ns[j], int(at_head[j]),
+                                        int(sb_full[j]), meta=meta)
+
+    in_flight = []
+    prep_pool = ThreadPoolExecutor(max_workers=1)
+    compile_pool = ThreadPoolExecutor(max_workers=1)
+    try:
+        sigs = list(dict.fromkeys(t.sig for t in tiles))
+        warm = compile_pool.submit(_warm_signatures, sigs, t_l1, t_wt)
+        fut = prep_pool.submit(_prep_tile, tiles[0], n_stores, cluster)
+        for k, tile in enumerate(tiles):
+            cells, np_args = fut.result()
+            if k + 1 < len(tiles):
+                fut = prep_pool.submit(_prep_tile, tiles[k + 1], n_stores,
+                                       cluster)
+            out = _tile_fn(tile.sig)(*_place_tile(np_args, tile.sig),
+                                     t_l1, t_wt)
+            in_flight.append((tile, cells, out))
+            # backpressure: dispatch runs ahead of the devices, so
+            # without a bound every dispatched tile's input buffers
+            # stay alive at once; draining the oldest keeps at most
+            # MAX_IN_FLIGHT_TILES tiles of device memory pinned while
+            # still overlapping prep/compute/drain
+            if len(in_flight) >= MAX_IN_FLIGHT_TILES:
+                finish(in_flight.pop(0))
+        warm.result()      # surface compile-thread exceptions
+    finally:
+        prep_pool.shutdown(wait=True)
+        compile_pool.shutdown(wait=True)
+
+    for entry in in_flight:
+        finish(entry)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Tier selection
+# ---------------------------------------------------------------------------
+
+def simulate_grid(specs: Sequence[ScenarioSpec],
+                  cluster: ClusterConfig = PAPER_CLUSTER,
+                  n_stores: int = 50_000,
+                  engine: str = "auto",
+                  chunk_size: Optional[int] = None,
+                  tile_cells: Optional[int] = None,
+                  n_shards: Optional[int] = None) -> List[SimResult]:
+    """Run a scenario grid on the right engine tier.
+
+    ``engine``:
+
+    * ``"auto"`` (default) -- blocked one-shot batch below
+      :data:`STREAM_THRESHOLD` cells, streaming sharded tier at or
+      above it;
+    * ``"serial"`` -- the per-cell oracle loop (differential testing);
+    * ``"perstep"`` -- the PR-1 per-step batched scan;
+    * ``"blocked"`` -- one-shot blocked batch (``simulate_batch``);
+    * ``"stream"`` -- the tiled sharded/streaming engine
+      (:func:`run_grid`).
+
+    All tiers return bit-identical results in ``specs`` order;
+    ``SimResult.meta['engine']`` records what actually ran.
+    """
+    if engine == "auto":
+        engine = "stream" if len(specs) >= STREAM_THRESHOLD else "blocked"
+    if engine == "serial":
+        for s in specs:
+            s.validate(cluster)
+        return [simulate(s.workload, s.config, cluster=cluster,
+                         n_stores=n_stores, seed=s.seed,
+                         n_replicas=s.n_replicas,
+                         link_bw_gbps=s.link_bw_gbps, n_cns=s.n_cns,
+                         sb_size=s.sb_size, coalescing=s.coalescing)
+                for s in specs]
+    if engine == "perstep":
+        return simulate_batch(specs, cluster=cluster, n_stores=n_stores,
+                              chunk_size=0)
+    if engine == "blocked":
+        return simulate_batch(specs, cluster=cluster, n_stores=n_stores,
+                              chunk_size=chunk_size)
+    if engine == "stream":
+        return run_grid(specs, cluster=cluster, n_stores=n_stores,
+                        chunk_size=chunk_size, tile_cells=tile_cells,
+                        n_shards=n_shards)
+    raise ValueError(f"unknown engine {engine!r}")

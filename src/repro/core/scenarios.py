@@ -54,7 +54,7 @@ from repro.core.recovery import (
     workload_recovery_inputs,
 )
 from repro.core.replication import ReplicationEngine
-from repro.core.simulator import CONFIGS, ScenarioSpec
+from repro.core.simulator import CONFIGS, ScenarioSpec, SimResult
 from repro.distributed.context import make_context, make_mesh, mesh_context
 
 # ---------------------------------------------------------------------------
@@ -104,6 +104,40 @@ def fig18_grid(cn_counts: Sequence[int] = (4, 8, 16),
     """CN-count weak scaling (WB vs proactive)."""
     return sweep_grid(workloads=workloads, configs=("wb", "proactive"),
                       n_cns=cn_counts)
+
+
+def mega_grid(seeds: Sequence[int] = (0, 1, 2),
+              replicas: Sequence[int] = (1, 2, 3, 4),
+              bandwidths: Sequence[float] = (160.0, 80.0, 40.0, 20.0),
+              cn_counts: Sequence[int] = (16, 8, 4),
+              sb_sizes: Sequence[int] = (72, 48)) -> List[ScenarioSpec]:
+    """The full cross-product sensitivity space of Figs. 10/16-18 as one
+    grid: (workload x config x seed x N_r x bw x CN x SB). At the
+    defaults this is 12 960 cells -- the mega-grid scale the streaming
+    engine tier exists for (``fig10/megagrid/*`` bench rows run it)."""
+    return sweep_grid(seeds=seeds, n_replicas=replicas,
+                      link_bw_gbps=bandwidths, n_cns=cn_counts,
+                      sb_sizes=sb_sizes)
+
+
+def run_sweep(specs: Sequence[ScenarioSpec],
+              cluster: ClusterConfig = PAPER_CLUSTER,
+              n_stores: int = 50_000,
+              engine: str = "auto",
+              **engine_kw) -> List[SimResult]:
+    """Run a sweep grid on the right engine tier.
+
+    The canonical entry point for every grid this module builds:
+    delegates to :func:`repro.core.engine.simulate_grid`, which picks
+    the one-shot blocked batch for ordinary figure grids and the
+    sharded streaming tier for mega-grids (>=
+    ``repro.core.engine.STREAM_THRESHOLD`` cells); ``engine=`` forces a
+    tier and ``engine_kw`` passes tile/shard knobs through. Results are
+    in ``specs`` order and bit-identical across tiers.
+    """
+    from repro.core.engine import simulate_grid
+    return simulate_grid(specs, cluster=cluster, n_stores=n_stores,
+                         engine=engine, **engine_kw)
 
 
 # ---------------------------------------------------------------------------

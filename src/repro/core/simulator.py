@@ -53,10 +53,10 @@ The blocked scan
 The per-step batched scan (PR 1) is CPU-bound on ``lax.scan`` step
 overhead: every store is one scan step of a handful of tiny ``(B,)``
 ops. ``simulate_batch`` therefore defaults to a **blocked** formulation
-(``chunk_size`` stores per block, clamped to the narrowest SB in the
-batch -- the SB depth bounds how far back the retire recurrence can
-look, so within a block every ``c_{i-sb}`` read refers to a *previous*
-block):
+(``chunk_size`` stores per block -- the :func:`auto_chunk` heuristic
+when ``None``, always clamped to the narrowest SB in the batch: the SB
+depth bounds how far back the retire recurrence can look, so within a
+block every ``c_{i-sb}`` read refers to a *previous* block):
 
 * everything that does not feed back into the commit recurrence is
   precomputed **vectorized over the whole (B, n_stores) arrays** before
@@ -95,9 +95,11 @@ build on this API in ``repro.core.scenarios`` / ``repro.core.recovery``.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+import hashlib
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -135,6 +137,12 @@ class SimResult:
     cxl_mem_bw_gbps: float           # Fig. 14: memory traffic (GB/s)
     log_dump_bw_gbps: float          # Fig. 14: log dump traffic (GB/s)
     sb_full_frac: float              # stores that stalled on a full SB
+    #: Engine metadata (not part of the simulated physics): which engine
+    #: produced the cell, the blocked-scan ``chunk`` actually used (the
+    #: auto heuristic's pick when ``chunk_size=None``), tile/shard info
+    #: from the streaming tier. Excluded from equality comparisons.
+    meta: Optional[Dict[str, object]] = dataclasses.field(
+        default=None, compare=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -282,6 +290,80 @@ def _trace_cached(workload: str, n_stores: int, seed: int,
 
 
 # ---------------------------------------------------------------------------
+# Host-side memoization (bounded, hash-keyed, centrally clearable)
+# ---------------------------------------------------------------------------
+
+class _BoundedCache:
+    """Hash-keyed LRU memo with a hard entry bound.
+
+    Unlike ``functools.lru_cache`` over the raw arguments, callers pass
+    a small *key* (a digest tuple for batches, a scalar-knob tuple for
+    cell arrays), so a 10^4-spec batch key costs bytes instead of
+    pinning a copy of the spec tuple; ``maxsize`` bounds how many
+    values (which may hold large host/device arrays) stay alive."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_put(self, key, make: Callable[[], object]):
+        try:
+            val = self._data[key]
+            self._data.move_to_end(key)
+            self.hits += 1
+            return val
+        except KeyError:
+            self.misses += 1
+        val = make()
+        self._data[key] = val
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+        return val
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def clear(self) -> None:
+        self._data.clear()
+        self.hits = self.misses = 0
+
+
+#: Reduced-key per-store array derivations (see :func:`_cell_arrays`).
+_CELL_ARRAY_CACHE = _BoundedCache(maxsize=512)
+#: Whole-batch stacked device inputs (see :func:`_batch_inputs`). One
+#: entry holds five ``(n_stores, B)`` f32 arrays plus the host cells
+#: (~50 MB for the Fig. 10 grid at the default store count), so the
+#: bound stays small.
+_BATCH_INPUT_CACHE = _BoundedCache(maxsize=4)
+
+_CACHE_CLEARERS: List[Callable[[], None]] = []
+
+
+def register_cache_clearer(fn: Callable[[], None]) -> Callable[[], None]:
+    """Register a cache-dropping callback with :func:`clear_sim_caches`
+    (the streaming engine registers its compiled-tile cache here, so one
+    call resets every layer without import cycles)."""
+    _CACHE_CLEARERS.append(fn)
+    return fn
+
+
+def clear_sim_caches() -> None:
+    """Drop every host-side simulator memo: synthesized traces, reduced-
+    key cell arrays, stacked batch inputs, and any registered engine
+    caches (compiled tile programs, tile rings). Benchmarks call this
+    between engines so no engine's timing rides on caches another
+    engine warmed; long-lived processes can call it to release pinned
+    memory after a mega-grid sweep."""
+    _trace_cached.cache_clear()
+    _CELL_ARRAY_CACHE.clear()
+    _BATCH_INPUT_CACHE.clear()
+    for fn in list(_CACHE_CLEARERS):
+        fn()
+
+
+# ---------------------------------------------------------------------------
 # Per-cell cost derivation (shared by the serial and batched paths)
 # ---------------------------------------------------------------------------
 
@@ -319,19 +401,24 @@ class _CellInputs:
     log_dump_bw_gbps: float
 
 
-def _prepare_cell(spec: ScenarioSpec, trace: Dict[str, np.ndarray],
-                  n_stores: int, cluster: ClusterConfig) -> _CellInputs:
-    """Resolve a ScenarioSpec against a synthesized trace into the exact
-    per-store arrays the timeline consumes. Pure host-side numpy; used
-    verbatim by both ``simulate`` and ``simulate_batch`` (which validate
-    the specs up front) so the two paths cannot drift."""
-    wl = WORKLOADS[spec.workload]
-    config = spec.config
-    nr = cluster.n_replicas if spec.n_replicas is None else spec.n_replicas
-    bw = cluster.cxl_link_bw_gbps if spec.link_bw_gbps is None else spec.link_bw_gbps
-    ncn = cluster.n_cns if spec.n_cns is None else spec.n_cns
-    sb = cluster.store_buffer if spec.sb_size is None else spec.sb_size
-    costs = _commit_cost_ns(config, cluster)
+@dataclasses.dataclass(frozen=True)
+class _CellArrays:
+    """Heavy per-store derivations shared across grid cells (read-only)."""
+    coalesce: np.ndarray             # (n_stores,) bool
+    exposed: np.ndarray              # (n_stores,) f32 ns
+    t_repl_i: np.ndarray             # (n_stores,) f32 ns
+    svc_i: np.ndarray                # (n_stores,) f32 ns
+    n_coalesced: int
+    store_rate_per_core: float       # stores/s/core
+    mem_demand: float                # GB/s per CN
+
+
+def _make_cell_arrays(workload: str, n_stores: int, seed: int,
+                      cluster: ClusterConfig, nr: int, bw: float,
+                      replicating: bool, coalesce_on: bool) -> _CellArrays:
+    wl = WORKLOADS[workload]
+    trace = _trace_cached(workload, n_stores, seed, cluster)
+    costs = _commit_cost_ns("proactive", cluster)   # config-independent
 
     # --- replication fan-out cost scaling -------------------------------
     # N_r REPLs leave in parallel but share the CN's CXL port: serialization
@@ -345,11 +432,11 @@ def _prepare_cell(spec: ScenarioSpec, trace: Dict[str, np.ndarray],
     mem_bytes = 64 + 16
     read_rate = (wl.remote_read_rate / wl.remote_store_rate) * store_rate_per_core
     mem_demand = (store_rate_per_core + read_rate) * cores * mem_bytes / 1e9
-    total_demand = mem_demand + (repl_demand if config in _REPLICATING else 0.0)
+    total_demand = mem_demand + (repl_demand if replicating else 0.0)
     congestion = max(1.0, total_demand / bw)
     port_serial = 1.0 + 0.08 * (nr - 1)
 
-    coalesce = trace["coalesce"] if (spec.coalescing and config != "wt") else \
+    coalesce = trace["coalesce"] if coalesce_on else \
         np.zeros_like(trace["coalesce"])
     exposed = trace["exposed_coh"] * congestion
 
@@ -376,15 +463,62 @@ def _prepare_cell(spec: ScenarioSpec, trace: Dict[str, np.ndarray],
     svc_i = np.where(trace["in_burst"], svc_floor,
                      costs["t_drain"]).astype(np.float32)
 
+    return _CellArrays(
+        coalesce=np.asarray(coalesce, bool),
+        exposed=np.asarray(exposed, np.float32),
+        t_repl_i=np.asarray(t_repl_i, np.float32),
+        svc_i=svc_i,
+        n_coalesced=int(coalesce.sum()),
+        store_rate_per_core=store_rate_per_core,
+        mem_demand=mem_demand,
+    )
+
+
+def _cell_arrays(workload: str, n_stores: int, seed: int,
+                 cluster: ClusterConfig, nr: int, bw: float,
+                 replicating: bool, coalesce_on: bool) -> _CellArrays:
+    """Memoized :func:`_make_cell_arrays` on the *reduced* key.
+
+    The per-store arrays depend on the spec only through ``(workload,
+    seed, n_replicas, link_bw, replicating-config?, coalescing
+    effective?)`` -- NOT on ``config`` itself (beyond the replicating /
+    wt-coalescing classes), ``sb_size`` or ``n_cns``. On a mega-grid
+    whose axes include config/SB/CN sweeps, one derivation therefore
+    serves many cells; the bound (:data:`_CELL_ARRAY_CACHE`) keeps
+    pinned host memory at ~16 bytes x n_stores per entry."""
+    key = (workload, n_stores, seed, cluster, nr, bw, replicating,
+           coalesce_on)
+    return _CELL_ARRAY_CACHE.get_or_put(
+        key, lambda: _make_cell_arrays(*key))
+
+
+def _prepare_cell(spec: ScenarioSpec, trace: Dict[str, np.ndarray],
+                  n_stores: int, cluster: ClusterConfig) -> _CellInputs:
+    """Resolve a ScenarioSpec against a synthesized trace into the exact
+    per-store arrays the timeline consumes. Pure host-side numpy; used
+    verbatim by ``simulate``, ``simulate_batch`` and the streaming
+    engine (which validate the specs up front) so the paths cannot
+    drift. The heavy array work lives in :func:`_cell_arrays` and is
+    shared across every cell with the same reduced key."""
+    config = spec.config
+    nr = cluster.n_replicas if spec.n_replicas is None else spec.n_replicas
+    bw = cluster.cxl_link_bw_gbps if spec.link_bw_gbps is None else spec.link_bw_gbps
+    ncn = cluster.n_cns if spec.n_cns is None else spec.n_cns
+    sb = cluster.store_buffer if spec.sb_size is None else spec.sb_size
+    replicating = config in _REPLICATING
+
+    arr = _cell_arrays(spec.workload, n_stores, spec.seed, cluster, nr, bw,
+                       replicating, spec.coalescing and config != "wt")
+
     # --- scaling with CN count: fewer CNs -> each runs more of the fixed
     # total work (weak scaling of the cluster as in Fig. 18).
     work_scale = cluster.n_cns / ncn
 
-    n_repl = int(n_stores - coalesce.sum()) if config in _REPLICATING else 0
+    n_repl = int(n_stores - arr.n_coalesced) if replicating else 0
 
     # --- log sizing (Fig. 13): entries accumulated per dump period ------
     entry_bytes = 12                       # Fig. 5: ~97 bits
-    stores_per_s = store_rate_per_core * cores * nr  # logged at N_r peers / N_r srcs
+    stores_per_s = arr.store_rate_per_core * cluster.cores_per_cn * nr
     log_bytes = stores_per_s * (cluster.dump_period_ms * 1e-3) * entry_bytes
     dump_bw = (log_bytes / cluster.gzip_factor) / (cluster.dump_period_ms * 1e-3) / 1e9
 
@@ -392,19 +526,20 @@ def _prepare_cell(spec: ScenarioSpec, trace: Dict[str, np.ndarray],
         spec=spec, n_stores=n_stores, sb_size=sb,
         config_idx=_CONFIG_IDX[config], work_scale=work_scale,
         arrivals=trace["arrivals"],
-        coalesce=np.asarray(coalesce, bool),
-        exposed=np.asarray(exposed, np.float32),
-        t_repl_i=np.asarray(t_repl_i, np.float32),
-        svc_i=svc_i,
+        coalesce=arr.coalesce,
+        exposed=arr.exposed,
+        t_repl_i=arr.t_repl_i,
+        svc_i=arr.svc_i,
         n_repl_msgs=n_repl,
         max_log_bytes=log_bytes,
-        cxl_mem_bw_gbps=mem_demand * ncn,
-        log_dump_bw_gbps=(dump_bw * ncn if config in _REPLICATING else 0.0),
+        cxl_mem_bw_gbps=arr.mem_demand * ncn,
+        log_dump_bw_gbps=(dump_bw * ncn if replicating else 0.0),
     )
 
 
 def _finish_result(cell: _CellInputs, exec_ns: float, at_head: int,
-                   sb_full: int) -> SimResult:
+                   sb_full: int,
+                   meta: Optional[Dict[str, object]] = None) -> SimResult:
     n = cell.n_stores
     return SimResult(
         workload=cell.spec.workload,
@@ -417,6 +552,7 @@ def _finish_result(cell: _CellInputs, exec_ns: float, at_head: int,
         cxl_mem_bw_gbps=cell.cxl_mem_bw_gbps,
         log_dump_bw_gbps=cell.log_dump_bw_gbps,
         sb_full_frac=float(sb_full) / max(n, 1),
+        meta=meta,
     )
 
 
@@ -556,6 +692,11 @@ def _timeline_batch(arrivals: jax.Array, coalesce: jax.Array,
 # chunk boundaries, vectorized intra-chunk precomputation)
 # ---------------------------------------------------------------------------
 
+#: Hard ceiling on explicit chunk requests' sanity and the PR-2 era
+#: default block length (the auto heuristic now caps at
+#: :data:`AUTO_CHUNK_CAP`, which measures faster on every axis; the
+#: ``fig10/megagrid/pr2_blocked_s`` bench row still runs this value to
+#: keep the old path comparable).
 DEFAULT_CHUNK_SIZE = 128
 
 
@@ -796,48 +937,132 @@ def simulate(workload: str, config: str,
         jnp.asarray(cell.exposed), jnp.asarray(cell.t_repl_i),
         jnp.asarray(cell.svc_i), config, cell.sb_size,
         costs["t_l1"], costs["t_wt"], costs["t_drain"])
-    return _finish_result(cell, exec_ns, int(at_head), int(sb_full))
+    return _finish_result(cell, exec_ns, int(at_head), int(sb_full),
+                          meta={"engine": "serial"})
 
 
 def _pad_len(n: int, mult: int = 8) -> int:
     return max(((n + mult - 1) // mult) * mult, mult)
 
 
-@functools.lru_cache(maxsize=4)
+def _stack_cells(cells: List[_CellInputs]):
+    """Stack prepared cells into time-major batch arrays (host numpy).
+
+    The batch is padded to the next multiple of 8 cells by repeating
+    cell 0, and SB rings to the widest cell (multiple of 8). Per-store
+    arrays are stacked time-major ``(n_stores, B)``: the natural layout
+    for both one-shot scans (xs slices and block reshapes are
+    contiguous). The streaming engine does NOT use this -- its tiles
+    stack cell-major (``engine._stack_tile``) and transpose on device.
+
+    Returns ``(args, sb_max, sb_min, sb_uniform)`` where ``args`` is
+    the 7-tuple the batched timelines consume.
+    """
+    n_pad = _pad_len(len(cells))
+    padded = cells + [cells[0]] * (n_pad - len(cells))
+    sb_max = _pad_len(max(c.sb_size for c in padded))
+    args = (
+        np.stack([c.arrivals for c in padded], axis=1),
+        np.stack([c.coalesce for c in padded], axis=1),
+        np.stack([c.exposed for c in padded], axis=1),
+        np.stack([c.t_repl_i for c in padded], axis=1),
+        np.stack([c.svc_i for c in padded], axis=1),
+        np.asarray([c.config_idx for c in padded], np.int32),
+        np.asarray([c.sb_size for c in padded], np.int32),
+    )
+    sb_min = min(c.sb_size for c in padded)
+    sb_uniform = sb_min if sb_min == max(c.sb_size for c in padded) else None
+    return args, sb_max, sb_min, sb_uniform
+
+
+def _make_batch_inputs(specs: Tuple[ScenarioSpec, ...], n_stores: int,
+                       cluster: ClusterConfig):
+    cells = [_prepare_cell(s, _trace_cached(s.workload, n_stores, s.seed,
+                                            cluster), n_stores, cluster)
+             for s in specs]
+    np_args, sb_max, sb_min, sb_uniform = _stack_cells(cells)
+    args = tuple(jnp.asarray(a) for a in np_args)
+    return cells, args, sb_max, sb_min, sb_uniform
+
+
 def _batch_inputs(specs: Tuple[ScenarioSpec, ...], n_stores: int,
                   cluster: ClusterConfig):
     """Memoized host-side prep for one batch: synthesizes/derives every
     cell and stacks the padded device arrays. Sweeps that re-run the
     same grid (benchmarks, repeated scenario evaluation) skip straight
-    to the timeline. The small maxsize bounds pinned memory: one entry
-    holds five (n_stores, B) f32 arrays plus the host cells (~50 MB for
-    the Fig. 10 grid at the default store count)."""
-    cells = [_prepare_cell(s, _trace_cached(s.workload, n_stores, s.seed,
-                                            cluster), n_stores, cluster)
-             for s in specs]
-    n_pad = _pad_len(len(cells))
-    padded = cells + [cells[0]] * (n_pad - len(cells))
-    sb_max = _pad_len(max(c.sb_size for c in padded))
-    # per-store arrays are stacked time-major (n_stores, B): the natural
-    # layout for both scans (xs slices and block reshapes are contiguous)
-    args = (
-        jnp.asarray(np.stack([c.arrivals for c in padded], axis=1)),
-        jnp.asarray(np.stack([c.coalesce for c in padded], axis=1)),
-        jnp.asarray(np.stack([c.exposed for c in padded], axis=1)),
-        jnp.asarray(np.stack([c.t_repl_i for c in padded], axis=1)),
-        jnp.asarray(np.stack([c.svc_i for c in padded], axis=1)),
-        jnp.asarray([c.config_idx for c in padded], jnp.int32),
-        jnp.asarray([c.sb_size for c in padded], jnp.int32),
-    )
-    sb_min = min(c.sb_size for c in padded)
-    sb_uniform = sb_min if sb_min == max(c.sb_size for c in padded) else None
-    return cells, args, sb_max, sb_min, sb_uniform
+    to the timeline.
+
+    The memo is digest-keyed (:func:`_specs_key`) and size-bounded
+    (:data:`_BATCH_INPUT_CACHE`): a mega-grid's 10^4-spec tuple never
+    becomes a dictionary key, and at most ``maxsize`` batches' device
+    arrays stay pinned. :func:`clear_sim_caches` drops it."""
+    key = _specs_key(specs, n_stores, cluster)
+    return _BATCH_INPUT_CACHE.get_or_put(
+        key, lambda: _make_batch_inputs(specs, n_stores, cluster))
+
+
+def _specs_key(specs: Sequence[ScenarioSpec], n_stores: int,
+               cluster: ClusterConfig) -> Tuple[int, int, str]:
+    """Constant-size digest key for a (specs, n_stores, cluster) batch."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((n_stores, cluster)).encode())
+    for s in specs:
+        h.update(repr(s).encode())
+    return (len(specs), n_stores, h.hexdigest())
+
+
+_batch_inputs.cache_clear = _BATCH_INPUT_CACHE.clear   # lru_cache-compat
+
+
+#: Cap for the auto-chunk heuristic on *wide* batches. The per-block
+#: unroll is ``chunk`` steps of ~7 row ops and a ``chunk``-long carried
+#: history, so past a few dozen stores per block wide batches (rows of
+#: hundreds+ cells) lose throughput to carry traffic and compile time;
+#: measured fastest around 32-48 at tile widths, vs the full SB depth
+#: for narrow batches. Explicit ``chunk_size`` callers can pick
+#: anything.
+AUTO_CHUNK_CAP = 48
+
+#: Batch width (padded cell count) at which the auto heuristic switches
+#: from the deep narrow-batch chunk to the capped wide-batch chunk.
+AUTO_CHUNK_WIDE_CELLS = 256
+
+
+def auto_chunk(n_stores: int, sb_min: int,
+               n_cells: Optional[int] = None) -> int:
+    """Blocked-scan chunk heuristic (used when ``chunk_size=None``).
+
+    The SB depth bounds how far back the retire recurrence can look
+    (``c_{i-sb}``), so a block may never exceed the narrowest SB in the
+    batch. Beyond that, two measured regimes (CPU):
+
+    * **narrow** batches (``n_cells`` < :data:`AUTO_CHUNK_WIDE_CELLS`,
+      e.g. the 45-cell Fig. 10 grid): ``lax.scan`` step overhead
+      dominates the tiny per-store row ops, so the deepest legal block
+      wins -- ``min(sb, n_stores, DEFAULT_CHUNK_SIZE)``;
+    * **wide** batches (mega-grid tiles, one-shot mega-batches, or
+      ``n_cells=None``): the unrolled block body and its carried
+      history dominate, so the cap is :data:`AUTO_CHUNK_CAP` -- and a
+      chunk that divides ``n_stores`` exactly is preferred, because a
+      ragged tail duplicates the whole unrolled block body in the
+      compiled program.
+
+    The pick lands in ``SimResult.meta['chunk']``.
+    """
+    hi = min(sb_min, n_stores)
+    if n_cells is not None and n_cells < AUTO_CHUNK_WIDE_CELLS:
+        return max(1, min(hi, DEFAULT_CHUNK_SIZE))
+    cap = min(hi, AUTO_CHUNK_CAP)
+    for c in range(cap, 15, -1):         # largest exact divisor, if any
+        if n_stores % c == 0:
+            return c
+    return max(1, cap)
 
 
 def simulate_batch(specs: Sequence[ScenarioSpec],
                    cluster: ClusterConfig = PAPER_CLUSTER,
                    n_stores: int = 50_000,
-                   chunk_size: int = DEFAULT_CHUNK_SIZE) -> List[SimResult]:
+                   chunk_size: Optional[int] = None) -> List[SimResult]:
     """Simulate a whole scenario grid in one jitted call.
 
     Results come back in ``specs`` order (one :class:`SimResult` per
@@ -847,18 +1072,22 @@ def simulate_batch(specs: Sequence[ScenarioSpec],
     cells (and SB rings to the widest cell, rounded to a multiple of 8)
     so sweeps of similar size reuse one compiled program.
 
-    ``chunk_size`` selects the engine: ``>= 1`` runs the blocked scan
-    with that many stores per block (default
-    :data:`DEFAULT_CHUNK_SIZE`; clamped to ``n_stores`` and to the
-    narrowest ``sb_size`` in the batch, since a block may not look back
-    past the carried commit history), ``0`` runs the PR-1 per-step
-    scan. Both engines are bit-identical to each other and to the
-    serial :func:`simulate` oracle; the blocked one is several times
-    faster on CPU (see ``fig10/sweep/*`` bench rows).
+    ``chunk_size`` selects the engine: ``None`` (default) runs the
+    blocked scan with the :func:`auto_chunk` heuristic deriving the
+    block from the narrowest ``sb_size`` in the batch; an explicit
+    ``>= 1`` value requests that many stores per block (still clamped
+    to ``n_stores`` and the narrowest SB, since a block may not look
+    back past the carried commit history); ``0`` runs the PR-1 per-step
+    scan. All engines are bit-identical to each other and to the serial
+    :func:`simulate` oracle; the blocked one is several times faster on
+    CPU (see ``fig10/sweep/*`` bench rows). The engine and chunk
+    actually used are reported in ``SimResult.meta``. Grids much larger
+    than a few thousand cells should go through the streaming tier
+    (``repro.core.engine.simulate_grid``) instead.
     """
     if not specs:
         return []
-    if chunk_size < 0:
+    if chunk_size is not None and chunk_size < 0:
         raise ValueError(f"chunk_size must be >= 0, got {chunk_size}")
     for s in specs:
         s.validate(cluster)
@@ -866,20 +1095,27 @@ def simulate_batch(specs: Sequence[ScenarioSpec],
     cells, args, sb_max, sb_min, sb_uniform = _batch_inputs(
         tuple(specs), n_stores, cluster)
     costs = _commit_cost_ns("proactive", cluster)   # t_l1/t_wt are shared
-    if chunk_size:
+    if chunk_size is None or chunk_size:
         # a block may not reach past the carried history: the SB depth
         # bounds the lookback (c_{i-sb}), so clamp to the narrowest cell
-        chunk = min(chunk_size, n_stores, sb_min)
+        chunk = auto_chunk(n_stores, sb_min, _pad_len(len(specs))) \
+            if chunk_size is None else min(chunk_size, n_stores, sb_min)
+        meta = {"engine": "blocked", "chunk": chunk,
+                "auto_chunk": chunk_size is None}
         exec_ns, at_head, sb_full = _timeline_batch_blocked(
             *args, sb_max, chunk, sb_uniform, costs["t_l1"], costs["t_wt"])
     else:
+        meta = {"engine": "perstep", "chunk": 0, "auto_chunk": False}
         exec_ns, at_head, sb_full = _timeline_batch(
             *args, sb_max, costs["t_l1"], costs["t_wt"])
     exec_ns = np.asarray(exec_ns)
     at_head = np.asarray(at_head)
     sb_full = np.asarray(sb_full)
 
-    return [_finish_result(c, exec_ns[i], int(at_head[i]), int(sb_full[i]))
+    # fresh meta per result: SimResult is frozen but a shared dict would
+    # alias annotations across the whole batch
+    return [_finish_result(c, exec_ns[i], int(at_head[i]), int(sb_full[i]),
+                           meta=dict(meta))
             for i, c in enumerate(cells)]
 
 

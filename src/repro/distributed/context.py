@@ -10,6 +10,7 @@ single-shard path -- same math, no collectives.
 from __future__ import annotations
 
 import contextlib
+import functools
 from dataclasses import dataclass
 from typing import Iterator, Optional, Tuple
 
@@ -96,6 +97,23 @@ def shard_map(f, mesh: jax.sharding.Mesh, in_specs, out_specs):
     from jax.experimental.shard_map import shard_map as _shard_map
     return _shard_map(f, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, check_rep=False)
+
+
+@functools.lru_cache(maxsize=8)
+def cells_mesh(n_shards: int) -> jax.sharding.Mesh:
+    """1-D mesh over the first ``n_shards`` local devices, axis ``cells``.
+
+    The protocol simulator's streaming tier shards the *cell* (grid
+    batch) axis of its time-major ``(n_stores, B)`` tiles over it --
+    each device scans its own slice of cells with zero cross-device
+    communication. Cached per shard count: tiles of every signature
+    share one mesh, so ``jit`` cache keys stay stable across tiles.
+    """
+    if not 1 <= n_shards <= len(jax.devices()):
+        raise ValueError(
+            f"n_shards must be in [1, {len(jax.devices())}], got {n_shards}")
+    return make_mesh((n_shards,), ("cells",),
+                     devices=jax.devices()[:n_shards])
 
 
 def make_context(mesh: jax.sharding.Mesh) -> MeshContext:
