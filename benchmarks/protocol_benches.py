@@ -180,17 +180,26 @@ def bench_megagrid() -> List[Dict]:
     (``scenarios.mega_grid``: 12 960 cells full mode, a shrunken smoke
     under ``--quick``).
 
-    Three cold end-to-end runs, with ``clear_sim_caches()`` before each
+    Four cold end-to-end runs, with ``clear_sim_caches()`` before each
     so every path pays its own prep/compile:
 
     * ``engine_s``    -- :func:`repro.core.engine.run_grid` (tiled,
-      cell-sharded over the local devices, double-buffered host prep);
+      cell-sharded over the local devices, double-buffered host prep,
+      columnar **bank** data plane: one device-resident dedup'd bank,
+      tiles ship int32 row indices, the kernel gathers);
+    * ``pr3_stacked_s`` -- the same engine on the PR-3 **stacked**
+      plane (full per-cell array copies per tile);
     * ``blocked_s``   -- the current one-shot blocked batch (auto
-      chunk, shared cell-array memo);
+      chunk, banked plane);
     * ``pr2_blocked_s`` -- the PR-2 path faithfully: one-shot batch at
-      the old default ``chunk_size=128`` with the reduced-key
-      cell-array sharing disabled (PR 2 derived every cell's arrays
-      from scratch).
+      the old default ``chunk_size=128``, stacked plane, with the
+      reduced-key cell-array sharing disabled (PR 2 derived every
+      cell's arrays from scratch).
+
+    Data-plane rows (from ``engine.bank_stats()``) record each engine
+    run's H2D bytes, bank rows, dedup ratio and the engine-accounted
+    device-memory high-water mark, so the ``BENCH_protocol.json``
+    trajectory captures the bank win across PRs.
 
     ``oracle_bitident`` re-runs a handful of sampled cells through the
     serial oracle and checks ``==``, so the speedup rows can never
@@ -217,6 +226,18 @@ def bench_megagrid() -> List[Dict]:
     engine_s = time.perf_counter() - t0
     compiles = E.trace_count() - traces0
     shards = res_e[0].meta["n_shards"]
+    bank = E.bank_stats()
+
+    clear_sim_caches()
+    t0 = time.perf_counter()
+    res_p3 = E.run_grid(specs, n_stores=MEGA_STORES, data_plane="stacked")
+    pr3_s = time.perf_counter() - t0
+    stacked = E.bank_stats()
+    plane_ident = all(a.exec_time_ns == b.exec_time_ns
+                      and a.sb_full_frac == b.sb_full_frac
+                      for a, b in zip(res_e, res_p3))
+    del res_p3
+    clear_sim_caches()
 
     # the one-shot comparison rows materialize the WHOLE grid as one
     # batch (the wall the streaming tier exists to avoid): ~17 bytes
@@ -240,15 +261,17 @@ def bench_megagrid() -> List[Dict]:
         try:
             t0 = time.perf_counter()
             simulate_batch(specs, n_stores=MEGA_STORES,
-                           chunk_size=DEFAULT_CHUNK_SIZE)
+                           chunk_size=DEFAULT_CHUNK_SIZE,
+                           data_plane="stacked")   # PR 2 predates the bank
             pr2_s = time.perf_counter() - t0
         finally:
             _CELL_ARRAY_CACHE.maxsize = old_bound
             clear_sim_caches()
 
-    ident = res_b is None or all(a.exec_time_ns == b.exec_time_ns
-                                 and a.sb_full_frac == b.sb_full_frac
-                                 for a, b in zip(res_e, res_b))
+    ident = plane_ident and (res_b is None or all(
+        a.exec_time_ns == b.exec_time_ns
+        and a.sb_full_frac == b.sb_full_frac
+        for a, b in zip(res_e, res_b)))
     for i in list(range(0, n, max(1, n // 5)))[:6]:     # sampled cells
         s = specs[i]
         rs = simulate(s.workload, s.config, n_stores=MEGA_STORES,
@@ -260,6 +283,7 @@ def bench_megagrid() -> List[Dict]:
                            rs.repl_at_head_frac)
 
     skipped = f"skipped(needs~{oneshot_bytes >> 30}GiB)"
+    mb = 1.0 / (1 << 20)
     rows = [
         {"name": "fig10/megagrid/cells", "us_per_call": 0.0, "derived": n},
         {"name": "fig10/megagrid/stores_per_cell", "us_per_call": 0.0,
@@ -272,6 +296,29 @@ def bench_megagrid() -> List[Dict]:
          "derived": compiles},
         {"name": "fig10/megagrid/engine_shards", "us_per_call": 0.0,
          "derived": f"{shards}/{len(jax.devices())}dev"},
+        # data-plane rows: the columnar bank vs the PR-3 stacked copies
+        {"name": "fig10/megagrid/bank_rows", "us_per_call": 0.0,
+         "derived": f"{bank['trace_rows']}trace+{bank['wv_rows']}wv"},
+        {"name": "fig10/megagrid/h2d_bank_mb", "us_per_call": 0.0,
+         "derived": round(bank["h2d_bytes"] * mb, 1)},
+        {"name": "fig10/megagrid/h2d_stacked_mb", "us_per_call": 0.0,
+         "derived": round(stacked["h2d_bytes"] * mb, 1)},
+        {"name": "fig10/megagrid/h2d_ratio", "us_per_call": 0.0,
+         "derived": round(stacked["h2d_bytes"]
+                          / max(bank["h2d_bytes"], 1), 2)},
+        # replication of the staged bank to the other shards is
+        # device-to-device traffic, not host bandwidth (engine._place_bank)
+        {"name": "fig10/megagrid/bank_fabric_mb", "us_per_call": 0.0,
+         "derived": round(bank["bank_fabric_bytes"] * mb, 1)},
+        {"name": "fig10/megagrid/dedup_ratio", "us_per_call": 0.0,
+         "derived": round(bank["dedup_ratio"], 2)},
+        {"name": "fig10/megagrid/dev_mem_hwm_mb", "us_per_call": 0.0,
+         "derived": round(bank["dev_mem_hwm_bytes"] * mb, 1)},
+        {"name": "fig10/megagrid/pr3_stacked_s",
+         "us_per_call": pr3_s * 1e6 / n, "derived": round(pr3_s, 2)},
+        {"name": "fig10/megagrid/speedup_bank_over_stacked",
+         "us_per_call": 0.0,
+         "derived": round(pr3_s / max(engine_s, 1e-9), 2)},
         {"name": "fig10/megagrid/blocked_s",
          "us_per_call": (blocked_s or 0.0) * 1e6 / n,
          "derived": round(blocked_s, 2) if blocked_s else skipped},

@@ -38,11 +38,9 @@ This module is the streaming tier that removes all three:
    asserts ``==``).
 
 3. **Double-buffered streaming.** A single worker thread prepares tile
-   k+1 (``_prepare_cell`` + cell-major ``_stack_tile`` host numpy --
-   a row memcpy per cell, transposed to time-major on device) while the
-   devices compute tile k; dispatch is async and runs ahead of the
-   devices by at most :data:`MAX_IN_FLIGHT_TILES` tiles before the
-   oldest is drained, bounding live memory. Host prep cost
+   k+1 while the devices compute tile k; dispatch is async and runs
+   ahead of the devices by at most :data:`MAX_IN_FLIGHT_TILES` tiles
+   before the oldest is drained, bounding live memory. Host prep cost
    is further collapsed by the reduced-key ``_cell_arrays`` memo
    (cells differing only in config class / SB / CN share one
    derivation), and everything is dropped by
@@ -50,10 +48,33 @@ This module is the streaming tier that removes all three:
    module's compiled-tile cache, registered via
    ``register_cache_clearer``.
 
+4. **The columnar bank data plane** (``data_plane="bank"``, the
+   default). Host prep materializes each unique trace / max-plus
+   column exactly once in a :class:`~repro.core.simulator.TraceBank`,
+   uploads it ONCE per mega-grid as a device-resident bank (columns
+   replicated across the ``cells`` mesh -- any shard's cells may
+   gather any row, and a replicated bank keeps the gather local and
+   communication-free), and tiles carry only two ``int32`` row-index
+   vectors. The tile program gathers its columns *inside* the jitted /
+   ``shard_map``'d kernel -- through the fused Pallas kernel
+   (``repro.kernels.bank_scan``) on TPU, through an XLA gather
+   everywhere else -- so H2D bytes and host stacking scale with
+   ``unique_rows`` instead of ``cells``. And because a timeline
+   consumes nothing but (arrivals row, max-plus row, SB depth), cells
+   sharing that triple are one **scan lane**: the engine scans each
+   unique lane once and scatters the outputs to member cells, so
+   device compute too scales with unique lanes (the 12 960-cell
+   mega-grid scans ~2 700). ``data_plane="stacked"``
+   keeps the PR-3 plane (full per-cell copies, ``_stack_tile``) as the
+   measured baseline; both planes are bit-identical.
+   :func:`bank_stats` reports the last run's data-plane accounting
+   (H2D bytes, bank rows, dedup ratio, device-memory high-water mark).
+
 :func:`simulate_grid` is the tier selector: grids below
 :data:`STREAM_THRESHOLD` cells go to the blocked one-shot batch, larger
 grids stream; ``engine=`` forces a tier. ``SimResult.meta`` records
-which tier ran, the chunk used, and the tile/shard geometry.
+which tier ran, the chunk used, the tile/shard geometry and the data
+plane.
 """
 
 from __future__ import annotations
@@ -71,20 +92,31 @@ from repro.configs.recxl_paper import ClusterConfig, PAPER_CLUSTER
 from repro.core.simulator import (
     ScenarioSpec,
     SimResult,
+    TraceBank,
+    _bank_gather,
     _CellInputs,
     _commit_cost_ns,
     _finish_result,
     _pad_len,
     _prepare_cell,
+    _scan_wv,
     _timeline_batch_blocked,
     _trace_cached,
     auto_chunk,
+    get_trace_bank,
     register_cache_clearer,
     simulate,
     simulate_batch,
 )
 from repro.distributed.context import cells_mesh, shard_map
-from repro.distributed.sharding import tile_shardings, tile_specs
+from repro.distributed.sharding import (
+    bank_shardings,
+    bank_tile_specs,
+    index_shardings,
+    tile_shardings,
+    tile_specs,
+)
+from repro.kernels.bank_scan import bank_scan, bank_scan_backend
 
 #: Cells per tile (before canonical padding) at the default byte
 #: budget. Large enough that one scan amortizes dispatch overhead,
@@ -126,7 +158,11 @@ class TileSignature:
     is the canonical padded cell count, ``chunk`` the blocked-scan block
     length, ``sb_uniform`` the tile's (uniform, by scheduling) SB depth,
     ``sb_max`` its padded ring width, ``n_shards`` the ``cells`` mesh
-    size. A whole mega-grid runs with a handful of distinct signatures.
+    size, ``data_plane`` which input plane the program consumes, and
+    ``bank_shape`` the ``(trace_rows, wv_rows)`` of the grid's bank
+    (``(0, 0)`` on the stacked plane) -- jit specializes on the bank's
+    shape, so it is part of the program key. A whole mega-grid runs
+    with a handful of distinct signatures.
     """
     b_pad: int
     n_stores: int
@@ -134,6 +170,8 @@ class TileSignature:
     sb_max: int
     sb_uniform: int
     n_shards: int
+    data_plane: str = "stacked"
+    bank_shape: Tuple[int, int] = (0, 0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,7 +205,8 @@ def plan_tiles(specs: Sequence[ScenarioSpec],
                n_stores: int = 50_000,
                chunk_size: Optional[int] = None,
                tile_cells: int = DEFAULT_TILE_CELLS,
-               n_shards: int = 1) -> List[Tile]:
+               n_shards: int = 1,
+               small_pad: bool = True) -> List[Tile]:
     """Schedule a grid into canonically-shaped, SB-uniform tiles.
 
     Cells are grouped by resolved store-buffer depth (preserving order
@@ -176,10 +215,16 @@ def plan_tiles(specs: Sequence[ScenarioSpec],
     path with its chunk clamped only by its OWN depth, not the
     narrowest cell of the whole grid. Each group is cut into
     ``tile_cells``-sized tiles padded to canonical sizes.
+    ``small_pad=False`` drops the 1/8-tile canonical size, so every
+    tile pads to the FULL tile: one compiled program per SB group --
+    the banked plane uses this, because its deduplicated scan lanes
+    leave few tiles per group and a ragged tail's own program costs
+    ~50x the padding lanes it would avoid.
     """
     align = _align(n_shards)
     tile_cells = max(align, -(-tile_cells // align) * align)
-    sizes = _canonical_sizes(tile_cells, align)
+    sizes = _canonical_sizes(tile_cells, align) if small_pad \
+        else [tile_cells]
 
     groups: Dict[int, List[Tuple[int, ScenarioSpec]]] = {}
     for i, s in enumerate(specs):
@@ -216,7 +261,40 @@ def trace_count() -> int:
     return _TRACE_COUNT
 
 
+_BANK_STATS: Dict[str, object] = {}
+
+
+def bank_stats() -> Dict[str, object]:
+    """Data-plane accounting of the most recent :func:`run_grid` call
+    (``trace_count()``-style observability; benchmarks turn it into the
+    ``fig10/megagrid/*`` data-plane rows). Keys:
+
+    * ``data_plane`` -- ``"bank"`` or ``"stacked"``; ``cells`` /
+      ``n_shards`` -- run geometry; ``scan_lanes`` -- unique timelines
+      actually scanned (== ``cells`` on the stacked plane);
+    * ``trace_rows`` / ``wv_rows`` / ``bank_rows`` -- deduplicated bank
+      columns (0 on the stacked plane); ``bank_bytes`` -- host bytes of
+      one bank copy;
+    * ``h2d_bytes`` -- bytes that actually crossed host->device this
+      run (one bank upload iff it was not already device-resident,
+      plus every tile's payload); ``bank_fabric_bytes`` -- the
+      device-to-device bytes of replicating the staged bank to the
+      other shards (NOT host bandwidth; see ``_place_bank``);
+      ``stacked_h2d_bytes`` -- what the stacked plane would have
+      shipped host->device for the same grid; ``dedup_ratio`` -- their
+      ratio (>= 1; 1.0 on the stacked plane);
+    * ``dev_mem_hwm_bytes`` -- engine-accounted device-memory
+      high-water mark: resident bank copies (one per shard) plus the
+      in-flight tiles' input payloads at their peak.
+
+    Empty until the first ``run_grid`` of the process."""
+    return dict(_BANK_STATS)
+
+
 def _build_tile_fn(sig: TileSignature) -> Callable:
+    if sig.data_plane == "bank":
+        return _build_bank_tile_fn(sig)
+
     def run(arrivals, coalesce, exposed, t_repl_i, svc_i,
             config_idx, sb_size, t_l1, t_wt):
         global _TRACE_COUNT
@@ -235,6 +313,41 @@ def _build_tile_fn(sig: TileSignature) -> Callable:
         # cannot change a single lane's arithmetic
         run = shard_map(run, cells_mesh(sig.n_shards),
                         in_specs=tile_specs() + (P(), P()),
+                        out_specs=(P("cells"),) * 3)
+    return jax.jit(run)
+
+
+def _build_bank_tile_fn(sig: TileSignature) -> Callable:
+    """Banked tile program: in-kernel gather from the device-resident
+    bank columns, then the blocked scan -- fused into one Pallas kernel
+    on TPU, an XLA gather + the shared ``_scan_wv`` core elsewhere.
+    Tiles ship only the two ``int32`` row-index vectors."""
+    fused = bank_scan_backend() == "pallas"
+
+    def run(a_bank, w_bank, v_bank, p_bank, trace_idx, wv_idx):
+        global _TRACE_COUNT
+        _TRACE_COUNT += 1          # runs once per trace, not per call
+        if fused:
+            # gathered rows stream HBM->VMEM inside the kernel; no
+            # stacked (B, n_stores) intermediate ever exists in HBM
+            return bank_scan(a_bank, w_bank, v_bank, p_bank,
+                             trace_idx, wv_idx,
+                             chunk=sig.chunk, sb=sig.sb_uniform,
+                             force="pallas")
+        # the shared gather (one row memcpy per cell + the same cheap
+        # device transpose as the stacked plane) -- and NO per-tile
+        # precompute: w/v were collapsed on the host, once per unique
+        # row
+        a, w, v, p = _bank_gather(a_bank, w_bank, v_bank, p_bank,
+                                  trace_idx, wv_idx)
+        return _scan_wv(a, w, v, p, None, sig.sb_max, sig.chunk,
+                        sig.sb_uniform)
+
+    if sig.n_shards > 1:
+        # banks replicated (gathers stay local), indices cell-sharded:
+        # still zero cross-device communication
+        run = shard_map(run, cells_mesh(sig.n_shards),
+                        in_specs=bank_tile_specs(),
                         out_specs=(P("cells"),) * 3)
     return jax.jit(run)
 
@@ -277,7 +390,10 @@ def _stack_tile(cells: List[_CellInputs], b_pad: int) -> tuple:
 
 def _prep_tile(tile: Tile, n_stores: int, cluster: ClusterConfig
                ) -> Tuple[List[_CellInputs], tuple]:
-    """Host-side prep for one tile (runs on the prefetch thread)."""
+    """Host-side prep for one stacked-plane tile (runs on the prefetch
+    thread): ``_prepare_cell`` per cell + the PR-3 cell-major array
+    stacking. The banked plane's prep lives in :func:`run_grid` (it
+    needs the lane->cells map) and ships only index vectors."""
     cells = [_prepare_cell(s, _trace_cached(s.workload, n_stores, s.seed,
                                             cluster), n_stores, cluster)
              for s in tile.specs]
@@ -285,7 +401,9 @@ def _prep_tile(tile: Tile, n_stores: int, cluster: ClusterConfig
 
 
 def _place_tile(np_args: tuple, sig: TileSignature) -> tuple:
-    """Put one tile's host arrays on the mesh, cell axis sharded.
+    """Put one tile's per-tile host arrays on the mesh, cell axis
+    sharded (index vectors on the banked plane, the five stacked arrays
+    plus per-cell vectors on the stacked plane).
 
     All callers (the streaming loop AND the compile-warming thread) go
     through here so every call of a tile program sees identically
@@ -293,10 +411,36 @@ def _place_tile(np_args: tuple, sig: TileSignature) -> tuple:
     a mismatch would silently compile each program twice."""
     if sig.n_shards == 1:
         return np_args
-    return jax.device_put(np_args, tile_shardings(cells_mesh(sig.n_shards)))
+    mesh = cells_mesh(sig.n_shards)
+    shardings = index_shardings(mesh) if sig.data_plane == "bank" \
+        else tile_shardings(mesh)
+    return jax.device_put(np_args, shardings)
 
 
-def _warm_signatures(sigs: List[TileSignature], t_l1, t_wt) -> None:
+def _place_bank(bank: TraceBank, n_shards: int) -> Tuple[int, tuple]:
+    """Device-resident bank columns for one mesh size: replicated over
+    the ``cells`` mesh (gathers stay shard-local), plain committed
+    arrays on a single device. Memoized on the bank -- one upload per
+    (bank, mesh), shared by every tile and engine that sweeps the grid.
+
+    Replication is staged: the host arrays cross to device 0 ONCE (the
+    only host->device transfer -- what ``h2d_bytes`` counts), and the
+    other shards' copies are made from that committed buffer, i.e.
+    device-fabric traffic (``bank_stats()['bank_fabric_bytes']``), not
+    host bandwidth. Returns ``(bytes_uploaded_now, device_arrays)``."""
+    if n_shards == 1:
+        return bank.device_args(1)
+    mesh = cells_mesh(n_shards)
+
+    def place(host: tuple) -> tuple:
+        staged = jax.device_put(host, jax.devices()[0])   # host -> dev0
+        return jax.device_put(staged, bank_shardings(mesh))  # dev -> dev
+
+    return bank.device_args(("cells", n_shards), place)
+
+
+def _warm_signatures(sigs: List[TileSignature], t_l1, t_wt,
+                     bank_dev: Optional[tuple] = None) -> None:
     """Compile every distinct tile program with zero inputs (runs on the
     compile thread, so XLA compilation -- which releases the GIL --
     overlaps the first tiles' host prep and device compute; jax's
@@ -307,10 +451,19 @@ def _warm_signatures(sigs: List[TileSignature], t_l1, t_wt) -> None:
     targets (0.4.x), AOT ``jit(f).lower(shapes).compile()`` does not
     populate the jit call cache (measured -- the first real call pays
     the compile again), so shape-only warming would double every
-    compile. The zeros are calloc'd and one discarded tile execution
-    per signature (a handful per mega-grid) is the price of the
-    overlap."""
+    compile. Banked programs warm against the REAL device-resident
+    bank (placed on the main thread before this runs -- a zero bank of
+    the right shape would hit the same program but duplicating the
+    replicated placement measured slower than the compile it hides)
+    with zero index vectors: row 0 is a valid gather everywhere, and
+    the warm call sees exactly the shardings of the streaming loop's
+    calls."""
     for sig in sigs:
+        if sig.data_plane == "bank":
+            idx = (np.zeros((sig.b_pad,), np.int32),
+                   np.zeros((sig.b_pad,), np.int32))
+            _tile_fn(sig)(*bank_dev, *_place_tile(idx, sig))
+            continue
         args = (np.zeros((sig.b_pad, sig.n_stores), np.float32),
                 np.zeros((sig.b_pad, sig.n_stores), bool),
                 np.zeros((sig.b_pad, sig.n_stores), np.float32),
@@ -321,12 +474,43 @@ def _warm_signatures(sigs: List[TileSignature], t_l1, t_wt) -> None:
         _tile_fn(sig)(*_place_tile(args, sig), t_l1, t_wt)
 
 
+def _stacked_tile_bytes(sig: TileSignature) -> int:
+    """Host bytes of one stacked tile's payload (5 per-store arrays at
+    ~17 B per cell-store + the two per-cell i32 vectors)."""
+    return sig.b_pad * (17 * sig.n_stores + 8)
+
+
+def _stacked_plane_h2d(specs: Sequence[ScenarioSpec],
+                       cluster: ClusterConfig, n_stores: int,
+                       tile_cells: int, n_shards: int) -> int:
+    """Bytes the stacked plane would ship for this grid: the cell-tiling
+    byte sum of :func:`plan_tiles`, computed from the per-SB group
+    sizes alone (same alignment + canonical-pad rules, no Tile
+    objects). The banked plane's accounting baseline."""
+    align = _align(n_shards)
+    tile_cells = max(align, -(-tile_cells // align) * align)
+    sizes = _canonical_sizes(tile_cells, align)
+    groups: Dict[int, int] = {}
+    for s in specs:
+        sb = s.sb_size if s.sb_size is not None else cluster.store_buffer
+        groups[sb] = groups.get(sb, 0) + 1
+    per_cell = 17 * n_stores + 8
+    total = 0
+    for m in groups.values():
+        full, rem = divmod(m, tile_cells)
+        total += full * tile_cells * per_cell
+        if rem:
+            total += next(c for c in sizes if c >= rem) * per_cell
+    return total
+
+
 def run_grid(specs: Sequence[ScenarioSpec],
              cluster: ClusterConfig = PAPER_CLUSTER,
              n_stores: int = 50_000,
              chunk_size: Optional[int] = None,
              tile_cells: Optional[int] = None,
-             n_shards: Optional[int] = None) -> List[SimResult]:
+             n_shards: Optional[int] = None,
+             data_plane: Optional[str] = None) -> List[SimResult]:
     """Stream a (mega-)grid through the sharded tile engine.
 
     Results come back in ``specs`` order, bit-identical to
@@ -335,22 +519,33 @@ def run_grid(specs: Sequence[ScenarioSpec],
     defaults to the :data:`DEFAULT_TILE_BYTES` budget (capped at
     :data:`DEFAULT_TILE_CELLS`); ``n_shards`` defaults to every local
     device (1 falls back to single-device streaming -- still tiled,
-    cached and double-buffered).
+    cached and double-buffered). ``data_plane`` is ``"bank"`` by
+    default -- one device-resident columnar bank per grid, tiles ship
+    index vectors, the kernel gathers, and only unique *scan lanes*
+    (cells with distinct ``(SB, trace, max-plus row)`` triples -- the
+    only inputs a timeline consumes) are scanned, with lane outputs
+    scattered to member cells -- or ``"stacked"`` for the PR-3
+    per-cell-copies plane (the measured baseline); results are
+    bit-identical either way.
 
     The loop overlaps three stages: the prefetch thread derives tile
-    k+1's host arrays while tile k's arrays are placed cell-sharded on
-    the mesh and its (asynchronously dispatched) scan runs. Dispatch
-    runs ahead of the devices by at most :data:`MAX_IN_FLIGHT_TILES`
-    tiles: past that the loop drains the oldest tile (blocking until
-    its compute finishes and releasing its input buffers), which is
-    what caps live memory at a few tile footprints however large the
-    grid is.
+    k+1's host payload while tile k's is placed cell-sharded on the
+    mesh and its (asynchronously dispatched) scan runs. Dispatch runs
+    ahead of the devices by at most :data:`MAX_IN_FLIGHT_TILES` tiles:
+    past that the loop drains the oldest tile (blocking until its
+    compute finishes and releasing its input buffers), which -- with
+    the bank resident -- caps live memory at the bank plus a few tile
+    payloads however large the grid is. :func:`bank_stats` reports the
+    run's H2D / memory accounting.
     """
     if not specs:
         return []
     if chunk_size is not None and chunk_size < 1:
         raise ValueError(
             f"chunk_size must be >= 1 (or None for auto), got {chunk_size}")
+    plane = data_plane or "bank"
+    if plane not in ("bank", "stacked"):
+        raise ValueError(f"unknown data_plane {data_plane!r}")
     n_dev = len(jax.devices())
     if n_shards is None:
         # all local devices: even oversubscribed virtual CPU devices
@@ -363,53 +558,148 @@ def run_grid(specs: Sequence[ScenarioSpec],
     for s in specs:
         s.validate(cluster)
 
-    tiles = plan_tiles(specs, cluster=cluster, n_stores=n_stores,
-                       chunk_size=chunk_size,
-                       tile_cells=tile_cells or _default_tile_cells(n_stores),
-                       n_shards=n_shards)
+    from repro.core.simulator import _plane_keys, bank_row_maps
+
+    plan_kw = dict(cluster=cluster, n_stores=n_stores, chunk_size=chunk_size,
+                   tile_cells=tile_cells or _default_tile_cells(n_stores),
+                   n_shards=n_shards)
+    bank = bank_dev = None
+    bank_fresh = 0
+    lane_members: List[List[int]] = []
+    if plane == "bank":
+        # --- scan-lane dedup -------------------------------------------
+        # A cell's timeline consumes exactly (arrivals row, max-plus
+        # row, SB depth) -- nothing else. Cells sharing that triple
+        # (e.g. the whole CN axis of a sweep, or WB/WT cells across
+        # replication knobs) therefore have bit-identical timelines:
+        # the engine scans each unique LANE once and scatters the lane
+        # outputs to every member cell (work_scale and the bandwidth /
+        # log metrics are per-cell host math in ``_finish_result``, as
+        # on every other tier). The mega-grid's 12 960 cells collapse
+        # to ~2 700 scanned lanes.
+        lane_of: Dict[tuple, int] = {}
+        lane_specs: List[ScenarioSpec] = []
+        for i, s in enumerate(specs):
+            sb = s.sb_size if s.sb_size is not None else cluster.store_buffer
+            key = (sb,) + _plane_keys(s, cluster)
+            j = lane_of.setdefault(key, len(lane_specs))
+            if j == len(lane_specs):
+                lane_specs.append(s)
+                lane_members.append([i])
+            else:
+                lane_members[j].append(i)
+        # the bank's SHAPE comes from a cheap key pass, so the tile
+        # signatures -- and therefore compile warming -- do not wait
+        # for the heavy row materialization below
+        trace_map, wv_map = bank_row_maps(specs, cluster)
+        shape = (len(trace_map), len(wv_map))
+        tiles = [dataclasses.replace(
+            t, sig=dataclasses.replace(t.sig, data_plane="bank",
+                                       bank_shape=shape))
+            for t in plan_tiles(lane_specs, small_pad=False, **plan_kw)]
+    else:
+        tiles = plan_tiles(specs, **plan_kw)
     costs = _commit_cost_ns("proactive", cluster)
     t_l1 = np.float32(costs["t_l1"])
     t_wt = np.float32(costs["t_wt"])
 
     results: List[Optional[SimResult]] = [None] * len(specs)
 
+    # --- data-plane accounting (bank_stats / SimResult.meta) -----------
+    def tile_payload_bytes(sig: TileSignature) -> int:
+        return 8 * sig.b_pad if plane == "bank" else _stacked_tile_bytes(sig)
+
+    # what the stacked plane would ship for the SAME grid (it tiles
+    # cells, not lanes) -- the dedup_ratio baseline, counted from the
+    # per-SB group sizes without materializing a throwaway tiling
+    if plane == "bank":
+        stacked_h2d = _stacked_plane_h2d(specs, cluster, n_stores,
+                                         plan_kw["tile_cells"], n_shards)
+    else:
+        stacked_h2d = sum(_stacked_tile_bytes(t.sig) for t in tiles)
+    h2d_bytes = sum(tile_payload_bytes(t.sig) for t in tiles)
+    live_bytes = 0
+    hwm_bytes = 0
+
+    def prep_banked(tile: Tile):
+        """Banked tile prep (prefetch thread): the two padded int32
+        row-index vectors, plus per-MEMBER-cell result metadata grouped
+        by lane (the scatter targets -- ``_prepare_cell``'s array
+        fields are memo references, not copies, so this stays cheap)."""
+        rows = [bank.rows_for(s) for s in tile.specs]
+        rows += [rows[0]] * (tile.sig.b_pad - len(rows))
+        idx = (np.asarray([r[0] for r in rows], np.int32),
+               np.asarray([r[1] for r in rows], np.int32))
+        groups = [[(i, _prepare_cell(
+            specs[i], _trace_cached(specs[i].workload, n_stores,
+                                    specs[i].seed, cluster),
+            n_stores, cluster)) for i in lane_members[lane]]
+            for lane in tile.indices]
+        return groups, idx
+
+    def prep_stacked(tile: Tile):
+        cells, np_args = _prep_tile(tile, n_stores, cluster)
+        return [[(i, c)] for i, c in zip(tile.indices, cells)], np_args
+
+    prep = prep_banked if plane == "bank" else prep_stacked
+
     def finish(entry) -> None:
         """Drain one dispatched tile: blocks until its device compute is
-        done, releasing its input buffers, and scatters the per-cell
-        results back to original grid positions."""
-        tile, cells, (exec_ns, at_head, sb_full) = entry
+        done, releasing its input buffers, and scatters each lane's
+        outputs back to its member cells' original grid positions."""
+        nonlocal live_bytes
+        tile, groups, (exec_ns, at_head, sb_full) = entry
         exec_ns = np.asarray(exec_ns)
         at_head = np.asarray(at_head)
         sb_full = np.asarray(sb_full)
-        for j, (i, cell) in enumerate(zip(tile.indices, cells)):
-            meta = {"engine": ("sharded" if tile.sig.n_shards > 1
-                               else "streamed"),
-                    "chunk": tile.sig.chunk, "auto_chunk": chunk_size is None,
-                    "tile_cells": tile.sig.b_pad,
-                    "n_shards": tile.sig.n_shards}
-            results[i] = _finish_result(cell, exec_ns[j], int(at_head[j]),
-                                        int(sb_full[j]), meta=meta)
+        live_bytes -= tile_payload_bytes(tile.sig)
+        for j, group in enumerate(groups):
+            for i, cell in group:
+                meta = {"engine": ("sharded" if tile.sig.n_shards > 1
+                                   else "streamed"),
+                        "chunk": tile.sig.chunk,
+                        "auto_chunk": chunk_size is None,
+                        "tile_cells": tile.sig.b_pad,
+                        "n_shards": tile.sig.n_shards,
+                        "data_plane": plane,
+                        "bank_rows": bank.n_rows if bank is not None else 0,
+                        "h2d_bytes": h2d_bytes}
+                results[i] = _finish_result(cell, exec_ns[j],
+                                            int(at_head[j]),
+                                            int(sb_full[j]), meta=meta)
 
     in_flight = []
     prep_pool = ThreadPoolExecutor(max_workers=1)
     compile_pool = ThreadPoolExecutor(max_workers=1)
     try:
+        if plane == "bank":
+            # materialize + upload the bank before warming: the warm
+            # calls (and every tile call) gather from the one resident
+            # copy, and compilation overlaps the first tiles' loop
+            bank = get_trace_bank(specs, n_stores, cluster)
+            bank_fresh, bank_dev = _place_bank(bank, n_shards)
+            h2d_bytes += bank_fresh
+            live_bytes = hwm_bytes = bank.nbytes * n_shards
         sigs = list(dict.fromkeys(t.sig for t in tiles))
-        warm = compile_pool.submit(_warm_signatures, sigs, t_l1, t_wt)
-        fut = prep_pool.submit(_prep_tile, tiles[0], n_stores, cluster)
+        warm = compile_pool.submit(_warm_signatures, sigs, t_l1, t_wt,
+                                   bank_dev)
+        fut = prep_pool.submit(prep, tiles[0])
         for k, tile in enumerate(tiles):
-            cells, np_args = fut.result()
+            groups, np_args = fut.result()
             if k + 1 < len(tiles):
-                fut = prep_pool.submit(_prep_tile, tiles[k + 1], n_stores,
-                                       cluster)
-            out = _tile_fn(tile.sig)(*_place_tile(np_args, tile.sig),
-                                     t_l1, t_wt)
-            in_flight.append((tile, cells, out))
+                fut = prep_pool.submit(prep, tiles[k + 1])
+            placed = _place_tile(np_args, tile.sig)
+            out = _tile_fn(tile.sig)(*bank_dev, *placed) if bank is not None \
+                else _tile_fn(tile.sig)(*placed, t_l1, t_wt)
+            in_flight.append((tile, groups, out))
+            live_bytes += tile_payload_bytes(tile.sig)
+            hwm_bytes = max(hwm_bytes, live_bytes)
             # backpressure: dispatch runs ahead of the devices, so
             # without a bound every dispatched tile's input buffers
             # stay alive at once; draining the oldest keeps at most
-            # MAX_IN_FLIGHT_TILES tiles of device memory pinned while
-            # still overlapping prep/compute/drain
+            # MAX_IN_FLIGHT_TILES tiles of device memory pinned (plus
+            # the resident bank) while still overlapping
+            # prep/compute/drain
             if len(in_flight) >= MAX_IN_FLIGHT_TILES:
                 finish(in_flight.pop(0))
         warm.result()      # surface compile-thread exceptions
@@ -419,6 +709,21 @@ def run_grid(specs: Sequence[ScenarioSpec],
 
     for entry in in_flight:
         finish(entry)
+    _BANK_STATS.clear()
+    _BANK_STATS.update({
+        "data_plane": plane, "cells": len(specs), "n_shards": n_shards,
+        "scan_lanes": len(lane_members) if plane == "bank" else len(specs),
+        "trace_rows": bank.trace_rows if bank is not None else 0,
+        "wv_rows": bank.wv_rows if bank is not None else 0,
+        "bank_rows": bank.n_rows if bank is not None else 0,
+        "bank_bytes": bank.nbytes if bank is not None else 0,
+        "h2d_bytes": h2d_bytes,
+        "bank_fabric_bytes": (bank.nbytes * (n_shards - 1) * (bank_fresh > 0)
+                              if bank is not None else 0),
+        "stacked_h2d_bytes": stacked_h2d,
+        "dedup_ratio": stacked_h2d / max(h2d_bytes, 1),
+        "dev_mem_hwm_bytes": hwm_bytes,
+    })
     return results
 
 
@@ -432,7 +737,8 @@ def simulate_grid(specs: Sequence[ScenarioSpec],
                   engine: str = "auto",
                   chunk_size: Optional[int] = None,
                   tile_cells: Optional[int] = None,
-                  n_shards: Optional[int] = None) -> List[SimResult]:
+                  n_shards: Optional[int] = None,
+                  data_plane: Optional[str] = None) -> List[SimResult]:
     """Run a scenario grid on the right engine tier.
 
     ``engine``:
@@ -446,8 +752,10 @@ def simulate_grid(specs: Sequence[ScenarioSpec],
     * ``"stream"`` -- the tiled sharded/streaming engine
       (:func:`run_grid`).
 
-    All tiers return bit-identical results in ``specs`` order;
-    ``SimResult.meta['engine']`` records what actually ran.
+    ``data_plane`` (blocked and stream tiers) selects the columnar bank
+    (default) or the stacked per-cell-copies baseline. All tiers and
+    planes return bit-identical results in ``specs`` order;
+    ``SimResult.meta`` records what actually ran.
     """
     if engine == "auto":
         engine = "stream" if len(specs) >= STREAM_THRESHOLD else "blocked"
@@ -461,13 +769,16 @@ def simulate_grid(specs: Sequence[ScenarioSpec],
                          sb_size=s.sb_size, coalescing=s.coalescing)
                 for s in specs]
     if engine == "perstep":
+        # forwarded so an explicit data_plane="bank" raises (the
+        # per-step engine has no banked plane) instead of silently
+        # running stacked
         return simulate_batch(specs, cluster=cluster, n_stores=n_stores,
-                              chunk_size=0)
+                              chunk_size=0, data_plane=data_plane)
     if engine == "blocked":
         return simulate_batch(specs, cluster=cluster, n_stores=n_stores,
-                              chunk_size=chunk_size)
+                              chunk_size=chunk_size, data_plane=data_plane)
     if engine == "stream":
         return run_grid(specs, cluster=cluster, n_stores=n_stores,
                         chunk_size=chunk_size, tile_cells=tile_cells,
-                        n_shards=n_shards)
+                        n_shards=n_shards, data_plane=data_plane)
     raise ValueError(f"unknown engine {engine!r}")

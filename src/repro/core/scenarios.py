@@ -132,12 +132,33 @@ def run_sweep(specs: Sequence[ScenarioSpec],
     the one-shot blocked batch for ordinary figure grids and the
     sharded streaming tier for mega-grids (>=
     ``repro.core.engine.STREAM_THRESHOLD`` cells); ``engine=`` forces a
-    tier and ``engine_kw`` passes tile/shard knobs through. Results are
-    in ``specs`` order and bit-identical across tiers.
+    tier and ``engine_kw`` passes tile/shard/data-plane knobs through.
+    Results are in ``specs`` order and bit-identical across tiers.
+
+    Data plane: both banked tiers resolve the grid's columnar
+    :class:`~repro.core.simulator.TraceBank` through one digest-keyed
+    memo, so sweeping the same grid through several engines (or
+    repeatedly) builds and uploads the bank ONCE -- use
+    :func:`grid_bank` to pre-build it (or inspect its dedup) explicitly.
     """
     from repro.core.engine import simulate_grid
     return simulate_grid(specs, cluster=cluster, n_stores=n_stores,
                          engine=engine, **engine_kw)
+
+
+def grid_bank(specs: Sequence[ScenarioSpec],
+              cluster: ClusterConfig = PAPER_CLUSTER,
+              n_stores: int = 50_000):
+    """The memoized columnar trace bank of a sweep grid.
+
+    Thin alias of :func:`repro.core.simulator.get_trace_bank` at the
+    sweep-builder level: pre-building the bank before a timed or
+    latency-sensitive sweep moves the one-off column materialization
+    out of the measured path, and the returned handle is the SAME
+    object every banked engine tier will use (``clear_sim_caches``
+    drops it)."""
+    from repro.core.simulator import get_trace_bank
+    return get_trace_bank(specs, n_stores, cluster)
 
 
 # ---------------------------------------------------------------------------

@@ -334,6 +334,35 @@ def tile_shardings(mesh: jax.sharding.Mesh) -> Tuple[NamedSharding, ...]:
     return tuple(NamedSharding(mesh, s) for s in tile_specs())
 
 
+#: Banked data plane (the default): the four store-contiguous
+#: ``(rows, n_stores)`` trace-bank arrays are REPLICATED across the
+#: ``cells`` mesh -- any shard's cells may gather any row, and a
+#: replicated bank keeps the in-kernel gather local (sharding the row
+#: axis would force collectives and break the engine's
+#: zero-communication contract). The per-cell ``int32`` row-index
+#: vectors are the only sharded tile inputs.
+BANK_COLUMN_SPEC = P(None, None)
+TILE_INDEX_SPEC = P("cells")
+
+
+def bank_tile_specs() -> Tuple[P, ...]:
+    """In PartitionSpecs for a banked tile program: 4 replicated bank
+    columns, then the 2 cell-sharded row-index vectors."""
+    return (BANK_COLUMN_SPEC,) * 4 + (TILE_INDEX_SPEC,) * 2
+
+
+def bank_shardings(mesh: jax.sharding.Mesh) -> Tuple[NamedSharding, ...]:
+    """NamedShardings replicating the 4 bank columns over ``mesh`` (one
+    explicit ``device_put`` per mega-grid -- the bank is device-resident
+    across every tile that gathers from it)."""
+    return (NamedSharding(mesh, BANK_COLUMN_SPEC),) * 4
+
+
+def index_shardings(mesh: jax.sharding.Mesh) -> Tuple[NamedSharding, ...]:
+    """NamedShardings for one banked tile's (trace_idx, wv_idx)."""
+    return (NamedSharding(mesh, TILE_INDEX_SPEC),) * 2
+
+
 def batch_specs(batch: Any, ctx: Optional[MeshContext] = None) -> Any:
     ctx = ctx or get_mesh_context()
     return jax.tree.map(

@@ -1,0 +1,4 @@
+from repro.kernels.bank_scan.ops import bank_scan, bank_scan_backend
+from repro.kernels.bank_scan.ref import bank_scan_ref
+
+__all__ = ["bank_scan", "bank_scan_backend", "bank_scan_ref"]

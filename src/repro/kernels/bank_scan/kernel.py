@@ -1,0 +1,131 @@
+"""Pallas TPU kernel fusing the trace-bank gather with the max-plus scan.
+
+One program per (cell, chunk) grid point, the chunk axis sequential.
+The *gather* is done by the BlockSpec index maps: the two scalar-
+prefetched ``int32`` row-index vectors select which bank row each
+cell's ``(1, chunk)`` blocks stream from, so gathered rows go straight
+HBM -> VMEM per chunk and never exist as stacked ``(B, n_stores)``
+intermediates in HBM -- the whole point of the banked data plane.
+
+Carried state per cell lives in scratch across the sequential chunk
+steps: the last ``sb`` commit times (VMEM ``(1, sb)`` ring, oldest
+first -- ``hist[0, k]`` is exactly the serial oracle's ``c_{i-sb}`` for
+store ``k`` of the chunk, since ``chunk <= sb``), the running commit
+time, and both census counters (SMEM scalars). The per-store max-plus
+core ``c = max(r + w, c + v)`` is the same irreducible 2-op chain as
+the simulator's blocked scan, applied in the same order, so results are
+bit-identical to ``ref.py`` and the serial oracle.
+
+The store axis is padded to a chunk multiple by the ops wrapper; padded
+positions are masked by the static ``length`` (they update nothing --
+the history slots they touch are never read again).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bank_scan_kernel(tr_ref, wv_ref, a_ref, w_ref, v_ref, p_ref,
+                      c_ref, ah_ref, sf_ref, hist_scr, last_scr, cnt_scr,
+                      *, chunk: int, sb: int, n_chunks: int, length: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        hist_scr[...] = jnp.zeros_like(hist_scr)
+        last_scr[0] = jnp.float32(0.0)
+        cnt_scr[0] = jnp.int32(0)
+        cnt_scr[1] = jnp.int32(0)
+
+    a = a_ref[0, :]                     # (chunk,) this cell's gathered rows
+    w = w_ref[0, :]
+    v = v_ref[0, :]
+    p = p_ref[0, :]
+    last = last_scr[0]
+    at_head, sb_full = cnt_scr[0], cnt_scr[1]
+    base = ci * chunk
+
+    # read every c_{i-sb} this block needs BEFORE the ring is shifted
+    olds = [hist_scr[0, k] for k in range(chunk)]
+    cs = []
+    for k in range(chunk):
+        valid = base + k < length
+        r_k = jnp.maximum(a[k], olds[k])
+        sb_full = sb_full + jnp.where(valid & (olds[k] > a[k]), 1, 0)
+        at_head = at_head + jnp.where(valid & p[k] & (r_k >= last), 1, 0)
+        c_k = jnp.maximum(r_k + w[k], last + v[k])
+        last = jnp.where(valid, c_k, last)
+        cs.append(last)
+    cvec = jnp.stack(cs)
+
+    if chunk == sb:
+        hist_scr[0, :] = cvec
+    else:
+        tail = hist_scr[0, chunk:]      # materialize before overwriting
+        hist_scr[0, :sb - chunk] = tail
+        hist_scr[0, sb - chunk:] = cvec
+    last_scr[0] = last
+    cnt_scr[0] = at_head
+    cnt_scr[1] = sb_full
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        c_ref[0, 0] = last
+        ah_ref[0, 0] = at_head
+        sf_ref[0, 0] = sb_full
+
+
+def bank_scan_pallas(a_bank: jax.Array, w_bank: jax.Array,
+                     v_bank: jax.Array, p_bank: jax.Array,
+                     trace_idx: jax.Array, wv_idx: jax.Array, *,
+                     chunk: int, sb: int, interpret: bool = True
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Banks: store-contiguous ``(T, n)`` / ``(P, n)``; indices: ``(B,)``
+    i32. Returns per-cell ``(exec_time_ns, at_head, sb_full)`` -- (B,)
+    each.
+    """
+    n = a_bank.shape[1]
+    n_b = trace_idx.shape[0]
+    chunk = max(1, min(chunk, sb, n))
+    n_chunks = pl.cdiv(n, chunk)
+    pad = n_chunks * chunk - n
+    if pad:
+        a_bank, w_bank, v_bank, p_bank = (
+            jnp.pad(x, ((0, 0), (0, pad))) for x in
+            (a_bank, w_bank, v_bank, p_bank))
+
+    def row_block(idx_pos):
+        # the in-kernel gather: block (1, chunk) of bank row idx[b]
+        return pl.BlockSpec(
+            (1, chunk), lambda b, c, tr, wv: ((tr, wv)[idx_pos][b], c))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_b, n_chunks),
+        in_specs=[row_block(0), row_block(1), row_block(1), row_block(1)],
+        out_specs=[pl.BlockSpec((1, 1), lambda b, c, tr, wv: (b, 0))] * 3,
+        scratch_shapes=[
+            pltpu.VMEM((1, sb), jnp.float32),      # commit-history ring
+            pltpu.SMEM((1,), jnp.float32),         # c_{i-1}
+            pltpu.SMEM((2,), jnp.int32),           # at_head, sb_full
+        ],
+    )
+    out_c, out_ah, out_sf = pl.pallas_call(
+        functools.partial(_bank_scan_kernel, chunk=chunk, sb=sb,
+                          n_chunks=int(n_chunks), length=n),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(trace_idx, wv_idx, a_bank, w_bank, v_bank, p_bank)
+    return out_c[:, 0], out_ah[:, 0], out_sf[:, 0]

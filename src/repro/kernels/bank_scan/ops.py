@@ -1,0 +1,72 @@
+"""Jit'd public wrapper + backend selection for the fused bank scan.
+
+TPU -> compiled Pallas kernel (the streaming engine's banked tile
+programs route through here, so gathered rows never round-trip through
+HBM-resident stacked intermediates); everywhere else -> the pure-jax
+``ref.py`` path, which is gather + the same blocked recurrence (this is
+the automatic fallback -- identical bits, no Pallas requirement).
+``RECXL_BANK_SCAN=pallas|jax`` overrides the choice; tests run the
+kernel in interpreter mode on CPU against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.bank_scan import kernel
+from repro.kernels.bank_scan.ref import bank_scan_ref
+
+
+def bank_scan_backend() -> str:
+    """``"pallas"`` iff the fused kernel should run (TPU backend, or
+    forced via ``RECXL_BANK_SCAN``), else ``"jax"``.
+
+    Re-read on every :func:`bank_scan` call, so flipping the env var
+    takes effect immediately there. The streaming engine, by contrast,
+    captures the backend when it BUILDS a tile program and caches the
+    program until ``clear_sim_caches()`` -- flip the var, then clear,
+    to re-route an engine that has already compiled tiles."""
+    force = os.environ.get("RECXL_BANK_SCAN", "").lower()
+    if force in ("pallas", "jax"):
+        return force
+    return "pallas" if jax.default_backend() == "tpu" else "jax"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "sb", "path"))
+def _bank_scan_jit(a_bank, w_bank, v_bank, p_bank, trace_idx, wv_idx,
+                   *, chunk: int, sb: int, path: str):
+    if path == "pallas":
+        return kernel.bank_scan_pallas(
+            a_bank, w_bank, v_bank, p_bank, trace_idx, wv_idx,
+            chunk=chunk, sb=sb, interpret=jax.default_backend() != "tpu")
+    if path == "pallas_interpret":
+        return kernel.bank_scan_pallas(
+            a_bank, w_bank, v_bank, p_bank, trace_idx, wv_idx,
+            chunk=chunk, sb=sb, interpret=True)
+    return bank_scan_ref(a_bank, w_bank, v_bank, p_bank, trace_idx, wv_idx,
+                         chunk=chunk, sb=sb)
+
+
+def bank_scan(a_bank: jax.Array, w_bank: jax.Array, v_bank: jax.Array,
+              p_bank: jax.Array, trace_idx: jax.Array, wv_idx: jax.Array,
+              *, chunk: int, sb: int, force: Optional[str] = None
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused gather + blocked max-plus scan over a columnar trace bank.
+
+    Banks are store-contiguous (``a_bank (T, n)``; ``w/v/p_bank
+    (P, n)``); ``trace_idx`` / ``wv_idx`` are ``(B,)`` i32 row
+    indices. ``sb`` is the (uniform) store-buffer depth, ``chunk`` the
+    block length (clamped to ``sb`` and the trace). The backend is
+    resolved OUTSIDE the jitted body (a static of the inner jit), so
+    an env-var override applies on the next call instead of being
+    frozen into the first compiled program. Returns per-cell
+    ``(exec_time_ns, at_head_count, sb_full_count)``, bit-identical
+    across backends.
+    """
+    path = force or bank_scan_backend()
+    return _bank_scan_jit(a_bank, w_bank, v_bank, p_bank, trace_idx,
+                          wv_idx, chunk=chunk, sb=sb, path=path)

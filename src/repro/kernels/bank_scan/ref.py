@@ -1,0 +1,79 @@
+"""Pure-jax oracle for the fused bank-gather + max-plus scan.
+
+Deliberately self-contained: it re-states the uniform-SB blocked
+recurrence of ``repro.core.simulator`` (``_blocked_steps_uniform``)
+instead of importing it, so kernel tests differentially pin BOTH
+implementations -- a drift in either shows up as a bit mismatch.
+
+Inputs are the store-contiguous :class:`~repro.core.simulator.TraceBank`
+rows: ``a_bank (T, n)`` arrivals, ``w_bank / v_bank (P, n)`` the
+precollapsed max-plus terms, ``p_bank (P, n)`` the proactive
+non-coalesced (Fig. 11 REPL-at-head candidate) mask, plus per-cell
+``int32`` row indices. The recurrence per store ``i`` of cell ``b``::
+
+    r_i = max(a_i, c_{i-sb})          # retire waits for a free SB slot
+    c_i = max(r_i + w_i, c_{i-1} + v_i)
+
+with the SB-full census counting ``c_{i-sb} > a_i`` and the
+REPL-at-head census counting ``pr_nc_i and r_i >= c_{i-1}``.
+
+Returns per-cell ``(exec_time_ns, at_head_count, sb_full_count)`` --
+(B,) f32 / i32 / i32 -- bit-identical to the simulator's blocked scan
+and to the serial oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _steps(carry, a_b, w_b, v_b, p_b):
+    """One block of K <= sb stores (the tuple-history fast path)."""
+    hist, last, at_head, sb_full = carry
+    cs = []
+    for k in range(a_b.shape[0]):
+        old = hist[k]                      # c_{i-sb}: committed K<=sb ago
+        r_k = jnp.maximum(a_b[k], old)
+        sb_full = sb_full + (old > a_b[k])
+        at_head = at_head + (p_b[k] & (r_k >= last))
+        last = jnp.maximum(r_k + w_b[k], last + v_b[k])
+        cs.append(last)
+    return (hist[a_b.shape[0]:] + tuple(cs), last, at_head, sb_full)
+
+
+def bank_scan_ref(a_bank: jax.Array, w_bank: jax.Array, v_bank: jax.Array,
+                  p_bank: jax.Array, trace_idx: jax.Array,
+                  wv_idx: jax.Array, *, chunk: int, sb: int
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather each cell's columns, then run the blocked recurrence.
+
+    ``chunk`` must not exceed ``sb`` (a block may not look past the
+    carried history) nor the trace length. Call under ``jax.jit`` (the
+    ops wrapper does) -- the block loop unrolls ``chunk`` tiny row ops.
+    """
+    a = jnp.take(a_bank, trace_idx, axis=0).T         # (n, B)
+    w = jnp.take(w_bank, wv_idx, axis=0).T
+    v = jnp.take(v_bank, wv_idx, axis=0).T
+    p = jnp.take(p_bank, wv_idx, axis=0).T
+
+    n, n_b = a.shape
+    chunk = max(1, min(chunk, sb, n))
+    carry = (tuple(jnp.zeros((n_b,), jnp.float32) for _ in range(sb)),
+             jnp.zeros((n_b,), jnp.float32),
+             jnp.zeros((n_b,), jnp.int32),
+             jnp.zeros((n_b,), jnp.int32))
+    n_main = (n // chunk) * chunk
+    if n_main:
+        xs = tuple(x[:n_main].reshape(-1, chunk, n_b) for x in (a, w, v, p))
+
+        def body(c, blk):
+            return _steps(c, *blk), None
+
+        carry, _ = jax.lax.scan(body, carry, xs)
+    if n - n_main:
+        carry = _steps(carry, *(x[n_main:] for x in (a, w, v, p)))
+    _, last, at_head, sb_full = carry
+    return last, at_head, sb_full

@@ -161,12 +161,16 @@ def test_auto_chunk_heuristic_and_meta():
 
     specs = [ScenarioSpec("ycsb", "proactive")]
     (r,) = simulate_batch(specs, n_stores=N)
-    assert r.meta == {"engine": "blocked", "chunk": auto_chunk(N, 72, 8),
-                      "auto_chunk": True}
+    want = {"engine": "blocked", "chunk": auto_chunk(N, 72, 8),
+            "auto_chunk": True, "data_plane": "bank"}
+    assert want.items() <= r.meta.items()
+    assert r.meta["bank_rows"] == 2 and r.meta["h2d_bytes"] > 0
     (r,) = simulate_batch(specs, n_stores=N, chunk_size=7)
-    assert r.meta == {"engine": "blocked", "chunk": 7, "auto_chunk": False}
+    assert {"engine": "blocked", "chunk": 7,
+            "auto_chunk": False}.items() <= r.meta.items()
     (r,) = simulate_batch(specs, n_stores=N, chunk_size=0)
     assert r.meta["engine"] == "perstep"
+    assert r.meta["data_plane"] == "stacked"
     assert simulate("ycsb", "proactive", n_stores=N).meta == {
         "engine": "serial"}
     # the narrow-SB cell bounds the auto chunk of the whole batch
@@ -209,6 +213,53 @@ def test_run_sweep_routes_through_engine():
     _assert_bit_identical(specs, got, want, "run_sweep")
     got = run_sweep(specs, n_stores=N, engine="stream", tile_cells=16)
     _assert_bit_identical(specs, got, want, "run_sweep-stream")
+
+
+def test_stacked_plane_bit_identical_and_observable(blocked_results):
+    """The PR-3 stacked plane stays available (``data_plane="stacked"``)
+    and bit-identical to the banked default, for both the streaming and
+    one-shot tiers; meta + bank_stats() record which plane ran."""
+    out = E.run_grid(RAGGED_GRID, n_stores=N, tile_cells=16,
+                     data_plane="stacked")
+    _assert_bit_identical(RAGGED_GRID, out, blocked_results,
+                          "stacked-vs-banked")
+    assert out[0].meta["data_plane"] == "stacked"
+    assert out[0].meta["bank_rows"] == 0
+    stats = E.bank_stats()
+    assert stats["data_plane"] == "stacked"
+    assert stats["dedup_ratio"] == 1.0
+    assert stats["h2d_bytes"] == stats["stacked_h2d_bytes"]
+
+    one_shot = simulate_batch(RAGGED_GRID, n_stores=N, data_plane="stacked")
+    _assert_bit_identical(RAGGED_GRID, one_shot, blocked_results,
+                          "oneshot-stacked-vs-banked")
+    assert one_shot[0].meta["data_plane"] == "stacked"
+
+    with pytest.raises(ValueError):
+        E.run_grid(RAGGED_GRID[:2], n_stores=N, data_plane="nosuch")
+    with pytest.raises(ValueError):
+        simulate_batch(RAGGED_GRID[:2], n_stores=N, data_plane="nosuch")
+    with pytest.raises(ValueError):    # the per-step engine has no bank
+        simulate_batch(RAGGED_GRID[:2], n_stores=N, chunk_size=0,
+                       data_plane="bank")
+
+
+def test_bank_stats_and_meta_on_banked_run():
+    """bank_stats() reports the last run's data-plane accounting and the
+    banked plane ships measurably fewer H2D bytes than stacking."""
+    out = E.run_grid(RAGGED_GRID, n_stores=N, tile_cells=16)
+    meta = out[0].meta
+    assert meta["data_plane"] == "bank"
+    stats = E.bank_stats()
+    assert stats["cells"] == len(RAGGED_GRID)
+    assert stats["bank_rows"] == stats["trace_rows"] + stats["wv_rows"]
+    assert meta["bank_rows"] == stats["bank_rows"] > 0
+    assert meta["h2d_bytes"] == stats["h2d_bytes"] > 0
+    # dedup: 37 cells share 12 traces / far fewer wv rows than cells
+    assert stats["h2d_bytes"] < stats["stacked_h2d_bytes"]
+    assert stats["dedup_ratio"] > 1.0
+    # the resident bank is part of the device-memory high-water mark
+    assert stats["dev_mem_hwm_bytes"] >= stats["bank_bytes"]
 
 
 def test_stream_threshold_routes_large_grids():

@@ -1,0 +1,142 @@
+"""Property tests for the columnar trace-bank data plane.
+
+The bank contract (simulator.py "columnar trace-bank data plane"):
+gathering a cell's columns out of the bank must reconstruct the stacked
+per-cell inputs **bit-exactly** -- arrivals verbatim, and the host-
+precollapsed ``(w, v, pr_nc)`` columns equal to the device
+``_blocked_precompute`` of the stacked arrays -- for arbitrary ragged
+mixed-SB grids; and ``clear_sim_caches()`` must drop the bank cache
+including its device placements (no leaked device buffers across
+engine switches).
+"""
+
+import gc
+import weakref
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import engine as E
+from repro.core import simulator as S
+from repro.core.simulator import (
+    CONFIGS,
+    PAPER_CLUSTER,
+    ScenarioSpec,
+    clear_sim_caches,
+    get_trace_bank,
+    simulate_batch,
+)
+
+N = 700                                 # N % 72 != 0: ragged store tail
+WORKLOAD_POOL = ("ycsb", "canneal", "barnes", "raytrace", "ocean_ncp")
+FLOAT_FIELDS = ("exec_time_ns", "repl_at_head_frac", "sb_full_frac",
+                "max_log_bytes", "cxl_mem_bw_gbps", "log_dump_bw_gbps")
+
+
+@st.composite
+def ragged_grids(draw):
+    """Random mixed-SB grids spanning every dedup axis of the bank."""
+    n = draw(st.integers(min_value=1, max_value=24))
+    specs = []
+    for _ in range(n):
+        specs.append(ScenarioSpec(
+            draw(st.sampled_from(WORKLOAD_POOL)),
+            draw(st.sampled_from(CONFIGS)),
+            seed=draw(st.integers(min_value=0, max_value=2)),
+            n_replicas=draw(st.sampled_from((None, 2, 4))),
+            link_bw_gbps=draw(st.sampled_from((None, 40.0))),
+            n_cns=draw(st.sampled_from((None, 8))),
+            sb_size=draw(st.sampled_from((None, 16, 24))),
+            coalescing=draw(st.booleans())))
+    return specs
+
+
+@settings(max_examples=10, deadline=None)
+@given(ragged_grids())
+def test_bank_gather_reconstructs_stacked_inputs(specs):
+    cells = [S._prepare_cell(
+        s, S._trace_cached(s.workload, N, s.seed, PAPER_CLUSTER), N,
+        PAPER_CLUSTER) for s in specs]
+    np_args, _, _, _ = S._stack_cells(cells)
+    arrivals, coalesce, exposed, t_repl_i, svc_i, config_idx, _ = np_args
+    costs = S._commit_cost_ns("proactive", PAPER_CLUSTER)
+    w_dev, v_dev, p_dev = S._blocked_precompute(
+        jnp.asarray(coalesce), jnp.asarray(exposed), jnp.asarray(t_repl_i),
+        jnp.asarray(svc_i), jnp.asarray(config_idx),
+        costs["t_l1"], costs["t_wt"])
+
+    bank = get_trace_bank(specs, N)
+    n_pad = S._pad_len(len(cells))
+    padded = cells + [cells[0]] * (n_pad - len(cells))
+    rows = [bank.rows_for(c.spec) for c in padded]
+    tr = np.asarray([r[0] for r in rows])
+    wv = np.asarray([r[1] for r in rows])
+
+    # arrivals verbatim; w/v/pr_nc: host precollapse == device precompute
+    # (stacked arrays are time-major (n, B); bank rows store-contiguous)
+    assert np.array_equal(bank.arrivals[tr], arrivals.T)
+    assert np.array_equal(bank.w[wv], np.asarray(w_dev).T)
+    assert np.array_equal(bank.v[wv], np.asarray(v_dev).T)
+    assert np.array_equal(bank.pr_nc[wv], np.asarray(p_dev).T)
+    # dedup is real: never more columns than cells, usually far fewer
+    assert bank.trace_rows <= len(specs)
+    assert bank.wv_rows <= len(specs)
+
+
+@settings(max_examples=6, deadline=None)
+@given(ragged_grids())
+def test_banked_engines_match_stacked_on_random_grids(specs):
+    want = simulate_batch(specs, n_stores=N, data_plane="stacked")
+    got_batch = simulate_batch(specs, n_stores=N)            # banked
+    got_stream = E.run_grid(specs, n_stores=N, tile_cells=16)  # banked
+    for a, b, c in zip(got_batch, got_stream, want):
+        for f in FLOAT_FIELDS:
+            assert getattr(a, f) == getattr(c, f), (a.meta, f)
+            assert getattr(b, f) == getattr(c, f), (b.meta, f)
+
+
+def test_clear_sim_caches_drops_bank_device_buffers():
+    specs = [ScenarioSpec(w, c) for w in WORKLOAD_POOL for c in CONFIGS]
+    E.run_grid(specs, n_stores=N, tile_cells=16)      # uploads the bank
+    assert len(S._BANK_CACHE) > 0
+    bank = get_trace_bank(specs, N)                   # cache hit
+    assert bank._device, "engine run should leave the bank device-resident"
+    key = next(iter(bank._device))
+    buf_ref = weakref.ref(bank._device[key][0])
+    host_ref = weakref.ref(bank)
+    del bank
+    clear_sim_caches()
+    gc.collect()
+    assert len(S._BANK_CACHE) == 0
+    assert len(S._BANKED_INPUT_CACHE) == 0
+    assert len(S._WV_ROW_CACHE) == 0
+    assert buf_ref() is None, "bank device buffer leaked past cache clear"
+    assert host_ref() is None, "bank host columns leaked past cache clear"
+
+
+def test_bank_rows_are_shared_across_engines():
+    """simulate_batch and run_grid on the same grid must resolve ONE
+    bank object (the digest-keyed memo -- one upload per placement)."""
+    specs = [ScenarioSpec("ycsb", c, seed=s) for c in CONFIGS
+             for s in (0, 1)]
+    simulate_batch(specs, n_stores=N)
+    bank_a = get_trace_bank(specs, N)
+    E.run_grid(specs, n_stores=N, tile_cells=16)
+    assert get_trace_bank(specs, N) is bank_a
+
+
+def test_wb_wt_rows_collapse_to_constants():
+    """Every WB (and WT) cell of a grid shares one constant column."""
+    specs = [ScenarioSpec(w, c, seed=s, n_replicas=nr)
+             for w in WORKLOAD_POOL for c in ("wb", "wt")
+             for s in (0, 1) for nr in (None, 4)]
+    bank = get_trace_bank(specs, N)
+    assert bank.wv_rows == 2
+    rows = {bank.rows_for(s)[1] for s in specs}
+    assert len(rows) == 2
+    with pytest.raises(KeyError):      # cells outside the build grid
+        bank.rows_for(ScenarioSpec("ycsb", "proactive"))
