@@ -12,6 +12,9 @@ Sections:
   fig9/recovery/*  SS VII-E downtime estimates from the batched
                 failure-time x node recovery sweep
   fig11..18/*   characterization + sensitivity (Figs. 11-18)
+  fig17/contention/*  contention & crash-consistency axes on the
+                streaming banked tier (scenarios.contention_mega_grid;
+                see benchmarks/bench_contention.py + docs/contention.md)
   framework/*   jitted step wall times per ReCXL variant, Logging-Unit op
                 latencies, log-compressor throughput
   roofline/*    per (arch x shape) single-pod roofline terms from the
@@ -80,9 +83,10 @@ def main() -> None:
         os.environ["RECXL_BENCH_QUICK"] = "1"
     quick = os.environ.get("RECXL_BENCH_QUICK", "") not in ("", "0")
 
+    from benchmarks.bench_contention import bench_contention
     from benchmarks.protocol_benches import ALL_PROTOCOL_BENCHES
 
-    benches = list(ALL_PROTOCOL_BENCHES)
+    benches = list(ALL_PROTOCOL_BENCHES) + [bench_contention]
     if not quick:
         from benchmarks.framework_benches import ALL_FRAMEWORK_BENCHES
         benches += ALL_FRAMEWORK_BENCHES

@@ -12,6 +12,8 @@
 * :mod:`repro.core.failures`      -- failure detection + injection.
 * :mod:`repro.core.simulator`     -- trace-driven protocol simulator that
   reproduces the paper's own evaluation (Figs. 2, 10-18).
+* :mod:`repro.core.contention`    -- directory-contention & crash-
+  consistency scenario axes (beyond-paper; docs/contention.md).
 """
 
 from repro.core.replica_groups import replica_targets, replica_sources  # noqa: F401

@@ -105,8 +105,8 @@ from repro.core.simulator import (
     auto_chunk,
     get_trace_bank,
     register_cache_clearer,
-    simulate,
     simulate_batch,
+    simulate_spec,
 )
 from repro.distributed.context import cells_mesh, shard_map
 from repro.distributed.sharding import (
@@ -274,7 +274,10 @@ def bank_stats() -> Dict[str, object]:
       actually scanned (== ``cells`` on the stacked plane);
     * ``trace_rows`` / ``wv_rows`` / ``bank_rows`` -- deduplicated bank
       columns (0 on the stacked plane); ``bank_bytes`` -- host bytes of
-      one bank copy;
+      one bank copy; ``bank_dev_bytes_per_shard`` / ``bank_dev_bytes``
+      -- resident device bytes of the replicated bank, per shard and
+      total (``bank x n_shards`` -- the cost a per-shard sub-bank
+      layout with local indices would cut; see ROADMAP);
     * ``h2d_bytes`` -- bytes that actually crossed host->device this
       run (one bank upload iff it was not already device-resident,
       plus every tile's payload); ``bank_fabric_bytes`` -- the
@@ -717,6 +720,8 @@ def run_grid(specs: Sequence[ScenarioSpec],
         "wv_rows": bank.wv_rows if bank is not None else 0,
         "bank_rows": bank.n_rows if bank is not None else 0,
         "bank_bytes": bank.nbytes if bank is not None else 0,
+        "bank_dev_bytes_per_shard": bank.nbytes if bank is not None else 0,
+        "bank_dev_bytes": bank.nbytes * n_shards if bank is not None else 0,
         "h2d_bytes": h2d_bytes,
         "bank_fabric_bytes": (bank.nbytes * (n_shards - 1) * (bank_fresh > 0)
                               if bank is not None else 0),
@@ -762,11 +767,7 @@ def simulate_grid(specs: Sequence[ScenarioSpec],
     if engine == "serial":
         for s in specs:
             s.validate(cluster)
-        return [simulate(s.workload, s.config, cluster=cluster,
-                         n_stores=n_stores, seed=s.seed,
-                         n_replicas=s.n_replicas,
-                         link_bw_gbps=s.link_bw_gbps, n_cns=s.n_cns,
-                         sb_size=s.sb_size, coalescing=s.coalescing)
+        return [simulate_spec(s, cluster=cluster, n_stores=n_stores)
                 for s in specs]
     if engine == "perstep":
         # forwarded so an explicit data_plane="bank" raises (the

@@ -1,0 +1,49 @@
+"""Bounded, hash-keyed host-side memo (shared cache primitive).
+
+One tiny LRU used by every host-side memo layer (``repro.core.
+simulator`` and ``repro.core.contention``). Lives in its own module so
+``contention`` -- which ``simulator`` imports -- can use the same
+implementation without an import cycle.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Callable
+
+
+class BoundedCache:
+    """Hash-keyed LRU memo with a hard entry bound.
+
+    Unlike ``functools.lru_cache`` over the raw arguments, callers pass
+    a small *key* (a digest tuple for batches, a scalar-knob tuple for
+    cell arrays), so a 10^4-spec batch key costs bytes instead of
+    pinning a copy of the spec tuple; ``maxsize`` bounds how many
+    values (which may hold large host/device arrays) stay alive."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_put(self, key, make: Callable[[], object]):
+        try:
+            val = self._data[key]
+            self._data.move_to_end(key)
+            self.hits += 1
+            return val
+        except KeyError:
+            self.misses += 1
+        val = make()
+        self._data[key] = val
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+        return val
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def clear(self) -> None:
+        self._data.clear()
+        self.hits = self.misses = 0

@@ -33,6 +33,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.recxl_paper import PAPER_CLUSTER, WORKLOADS, ClusterConfig
+from repro.core.contention import (
+    ContentionParams,
+    dirty_line_scale,
+    undumped_log_scale,
+)
 from repro.core.directory import ShardDirectory, ShardState
 from repro.core.protocol import (
     FetchLatestVers,
@@ -394,7 +399,8 @@ def workload_recovery_inputs(workload: str, fail_time_ms: float,
                              n_cns: Optional[int] = None,
                              n_replicas: Optional[int] = None,
                              params: RecoveryTimeParams =
-                             DEFAULT_RECOVERY_PARAMS
+                             DEFAULT_RECOVERY_PARAMS,
+                             contention: Optional[ContentionParams] = None
                              ) -> Tuple[float, float]:
     """Derive ``(owned_lines, undumped_log_bytes)`` for a workload at a
     given failure time.
@@ -406,6 +412,13 @@ def workload_recovery_inputs(workload: str, fail_time_ms: float,
     the fixed total work (weak scaling, Fig. 18), so both the owned-line
     census (Fig. 15) and the per-node store rate scale by
     ``cluster.n_cns / n_cns``. Coalesced stores never reach the log.
+
+    ``contention`` (``repro.core.contention``) scales what a crash can
+    expose: conflicted ownership churn inflates the owned-line census
+    and leaves superseded log entries (``dirty_line_scale`` /
+    ``undumped_log_scale``), read-heavy mixes keep lines clean, and
+    persist-ordering schedules shrink both volumes -- so downtime now
+    varies with the contention regime (docs/contention.md).
     """
     wl = WORKLOADS[workload]
     ncn = cluster.n_cns if n_cns is None else n_cns
@@ -420,6 +433,9 @@ def workload_recovery_inputs(workload: str, fail_time_ms: float,
     entries_per_s = stores_per_s * (1.0 - wl.coalesce_rate)
     phase_ms = fail_time_ms % cluster.dump_period_ms
     undumped = entries_per_s * (phase_ms * 1e-3) * params.log_entry_bytes
+    if contention is not None:
+        owned *= dirty_line_scale(contention)
+        undumped *= undumped_log_scale(contention)
     return owned, undumped
 
 

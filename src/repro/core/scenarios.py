@@ -69,13 +69,26 @@ def sweep_grid(workloads: Sequence[str] = tuple(WORKLOADS),
                link_bw_gbps: Sequence[Optional[float]] = (None,),
                n_cns: Sequence[Optional[int]] = (None,),
                sb_sizes: Sequence[Optional[int]] = (None,),
-               coalescing: Sequence[bool] = (True,)) -> List[ScenarioSpec]:
-    """Cartesian product of sensitivity knobs as a flat spec list."""
+               coalescing: Sequence[bool] = (True,),
+               read_share: Sequence[Optional[float]] = (None,),
+               conflict_rate: Sequence[Optional[float]] = (None,),
+               consistency_schedule: Sequence[Optional[str]] = (None,),
+               ) -> List[ScenarioSpec]:
+    """Cartesian product of sensitivity knobs as a flat spec list.
+
+    The contention / crash-consistency axes (``read_share``,
+    ``conflict_rate``, ``consistency_schedule`` -- see
+    docs/contention.md) default to a single ``None`` value, so every
+    pre-existing grid is unchanged cell-for-cell."""
     return [ScenarioSpec(w, c, seed=s, n_replicas=nr, link_bw_gbps=bw,
-                         n_cns=ncn, sb_size=sb, coalescing=co)
-            for w, c, s, nr, bw, ncn, sb, co in itertools.product(
+                         n_cns=ncn, sb_size=sb, coalescing=co,
+                         read_share=rs, conflict_rate=cr,
+                         consistency_schedule=cs)
+            for w, c, s, nr, bw, ncn, sb, co, rs, cr, cs
+            in itertools.product(
                 workloads, configs, seeds, n_replicas, link_bw_gbps,
-                n_cns, sb_sizes, coalescing)]
+                n_cns, sb_sizes, coalescing, read_share, conflict_rate,
+                consistency_schedule)]
 
 
 def fig10_grid(seeds: Sequence[int] = (0,)) -> List[ScenarioSpec]:
@@ -118,6 +131,49 @@ def mega_grid(seeds: Sequence[int] = (0, 1, 2),
     return sweep_grid(seeds=seeds, n_replicas=replicas,
                       link_bw_gbps=bandwidths, n_cns=cn_counts,
                       sb_sizes=sb_sizes)
+
+
+def contention_grid(workloads: Sequence[str] = ("ycsb", "canneal",
+                                                "streamcluster"),
+                    configs: Sequence[str] = ("wb", "proactive"),
+                    conflict_rates: Sequence[Optional[float]] =
+                    (None, 0.2, 0.5),
+                    read_shares: Sequence[Optional[float]] = (None, 0.6),
+                    schedules: Sequence[Optional[str]] =
+                    (None, "epoch", "eager")) -> List[ScenarioSpec]:
+    """Figure-sized contention sweep (the Fig. 17-style sensitivity
+    grid for the new axes): contended proactive cells against the
+    unchanged WB baseline, with ``None`` axis values mixing legacy
+    (axes-off) cells into the same grid for normalization."""
+    return sweep_grid(workloads=workloads, configs=configs,
+                      conflict_rate=conflict_rates, read_share=read_shares,
+                      consistency_schedule=schedules)
+
+
+def contention_mega_grid(workloads: Sequence[str] = tuple(WORKLOADS),
+                         configs: Sequence[str] = ("wb", "proactive"),
+                         seeds: Sequence[int] = (0, 1),
+                         replicas: Sequence[Optional[int]] = (1, 3),
+                         cn_counts: Sequence[Optional[int]] = (16, 8),
+                         conflict_rates: Sequence[Optional[float]] =
+                         (0.0, 0.2, 0.5),
+                         read_shares: Sequence[Optional[float]] =
+                         (0.0, 0.6),
+                         schedules: Sequence[Optional[str]] =
+                         ("lazy", "epoch", "eager")) -> List[ScenarioSpec]:
+    """The contention cross-product at streaming-tier scale
+    (workload x config x seed x N_r x CN x conflict x read-share x
+    schedule -- 2 592 cells at the defaults, >= ``STREAM_THRESHOLD`` so
+    ``run_sweep`` picks the banked streaming engine). The neutral
+    ``(0.0, 0.0, "lazy")`` cells are bit-identical to the uncontended
+    semantics and serve as in-grid normalization; the CN axis exercises
+    scan-lane dedup (contention keys deliberately exclude ``n_cns``).
+    ``fig17/contention/*`` bench rows run it
+    (benchmarks/bench_contention.py)."""
+    return sweep_grid(workloads=workloads, configs=configs, seeds=seeds,
+                      n_replicas=replicas, n_cns=cn_counts,
+                      conflict_rate=conflict_rates, read_share=read_shares,
+                      consistency_schedule=schedules)
 
 
 def run_sweep(specs: Sequence[ScenarioSpec],
@@ -200,7 +256,10 @@ def recovery_sweep(workloads: Sequence[str] = tuple(WORKLOADS),
                    cn_counts: Sequence[int] = (4, 8, 16),
                    link_bw_gbps: Optional[float] = None,
                    cluster: ClusterConfig = PAPER_CLUSTER,
-                   params: RecoveryTimeParams = DEFAULT_RECOVERY_PARAMS
+                   params: RecoveryTimeParams = DEFAULT_RECOVERY_PARAMS,
+                   read_share: Optional[float] = None,
+                   conflict_rate: Optional[float] = None,
+                   consistency_schedule: Optional[str] = None
                    ) -> RecoverySweep:
     """Sweep the SS VII-E downtime model over a (workload x
     failure-time x node-count) grid in ONE jitted call.
@@ -209,8 +268,16 @@ def recovery_sweep(workloads: Sequence[str] = tuple(WORKLOADS),
     of the dump interval -- downtime grows within the interval because
     the undumped log (and so the Algorithm 2 replay volume) accumulates
     until the next dump resets it. ``link_bw_gbps`` (GB/s) defaults to
-    the cluster link.
+    the cluster link. The contention axes (all-``None`` = off) scale
+    the crash-exposed volumes through
+    ``workload_recovery_inputs(contention=...)`` -- conflicted
+    ownership churn inflates the replayed state, persist-ordering
+    schedules shrink it (docs/contention.md).
     """
+    from repro.core.contention import resolve_contention
+
+    contention = resolve_contention(read_share, conflict_rate,
+                                    consistency_schedule)
     bw = cluster.cxl_link_bw_gbps if link_bw_gbps is None else link_bw_gbps
     if bw <= 0.0:
         raise ValueError(f"link_bw_gbps must be > 0, got {bw}")
@@ -228,7 +295,8 @@ def recovery_sweep(workloads: Sequence[str] = tuple(WORKLOADS),
             for ic, ncn in enumerate(cn_counts):
                 owned[iw, it, ic], undumped[iw, it, ic] = \
                     workload_recovery_inputs(wname, t_ms, cluster=cluster,
-                                             n_cns=ncn, params=params)
+                                             n_cns=ncn, params=params,
+                                             contention=contention)
     out = recovery_time_batch(owned, undumped, np.full(shape, bw),
                               cluster=cluster, params=params)
     comps = {k: np.asarray(v) for k, v in out.items()}
@@ -244,7 +312,13 @@ def recovery_sweep(workloads: Sequence[str] = tuple(WORKLOADS),
 
 @dataclasses.dataclass(frozen=True)
 class FaultScenario:
-    """One enumerable end-to-end resilience run."""
+    """One enumerable end-to-end resilience run.
+
+    The contention axes (``None`` = off; ``repro.core.contention``)
+    describe the workload regime the failed node was running: they
+    scale the crash-exposed volumes feeding each event's downtime
+    estimate, so the same fail-stop schedule yields contention-dependent
+    downtime numbers."""
     name: str
     events: Tuple[FailureEvent, ...]
     n_nodes: int = 4
@@ -254,6 +328,16 @@ class FaultScenario:
     n_replicas: int = 2
     n_buckets: int = 2
     log_capacity: int = 3
+    read_share: Optional[float] = None
+    conflict_rate: Optional[float] = None
+    consistency_schedule: Optional[str] = None
+
+    def contention(self):
+        """Resolved :class:`~repro.core.contention.ContentionParams`
+        (``None`` when every axis is off)."""
+        from repro.core.contention import resolve_contention
+        return resolve_contention(self.read_share, self.conflict_rate,
+                                  self.consistency_schedule)
 
     def validate(self) -> None:
         if self.variant not in ("baseline", "parallel", "proactive"):
@@ -263,6 +347,7 @@ class FaultScenario:
         for ev in self.events:
             if not 0 <= ev.node < self.n_nodes:
                 raise ValueError(f"event node {ev.node} outside mesh")
+        self.contention()        # raises on out-of-range contention axes
 
 
 @dataclasses.dataclass
@@ -309,7 +394,8 @@ def estimate_scenario_downtime(engine: ReplicationEngine,
                                result: RecoveryResult,
                                cluster: ClusterConfig = PAPER_CLUSTER,
                                params: RecoveryTimeParams =
-                               DEFAULT_RECOVERY_PARAMS) -> RecoveryEstimate:
+                               DEFAULT_RECOVERY_PARAMS,
+                               contention=None) -> RecoveryEstimate:
     """Downtime estimate for one executed recovery replay, fed by the
     volumes the replay *actually* moved.
 
@@ -317,17 +403,28 @@ def estimate_scenario_downtime(engine: ReplicationEngine,
     payload ("line") size set to the engine's bucket footprint in bytes;
     the undumped log volume is the number of log versions Algorithm 2
     walked (the FetchLatestVersResp message log records them), also at
-    bucket granularity. Times in the returned estimate are ns.
+    bucket granularity. ``contention``
+    (:class:`~repro.core.contention.ContentionParams` or ``None``)
+    scales both volumes for the scenario's contention regime --
+    conflicted ownership churn keeps more state dirty at the crash
+    point, persist-ordering schedules shrink it. Times in the returned
+    estimate are ns.
     """
+    from repro.core.contention import dirty_line_scale, undumped_log_scale
+
     bucket_bytes = engine.layout.bucket_len * engine.log_dtype.itemsize
     n_versions = sum(m[1].get("n_versions", 0) for m in result.message_log
                      if m[0] == MsgType.FETCH_LATEST_VERS_RESP)
     p = dataclasses.replace(params, line_bytes=bucket_bytes,
                             log_entry_bytes=float(
                                 bucket_bytes + params.header_bytes))
+    owned = float(result.stats.owned_entries)
+    undumped = n_versions * p.log_entry_bytes
+    if contention is not None:
+        owned *= dirty_line_scale(contention)
+        undumped *= undumped_log_scale(contention)
     return estimate_recovery_time(
-        owned_lines=float(result.stats.owned_entries),
-        undumped_log_bytes=n_versions * p.log_entry_bytes,
+        owned_lines=owned, undumped_log_bytes=undumped,
         cluster=cluster, params=p)
 
 
@@ -490,7 +587,8 @@ def run_fault_scenario(scn: FaultScenario,
                     directory_consistent=not directory_references(
                         directory, failed),
                     unrecoverable=res.stats.unrecoverable,
-                    downtime=estimate_scenario_downtime(engine, res)))
+                    downtime=estimate_scenario_downtime(
+                        engine, res, contention=scn.contention())))
 
     return ScenarioOutcome(
         scenario=scn, steps_run=scn.n_steps,

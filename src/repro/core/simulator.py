@@ -115,13 +115,27 @@ the readable reference; new commit rules must be added to
 ``_timeline``, ``_timeline_batch`` and ``_blocked_precompute``/
 ``_blocked_steps``.
 
+Contention & crash-consistency axes
+-----------------------------------
+
+``ScenarioSpec`` carries three ``None``-defaulted axes -- ``read_share``,
+``conflict_rate``, ``consistency_schedule`` -- modeled by
+``repro.core.contention`` (docs/contention.md): conflict retry backoff
+and sharer invalidations are added to the exposed coherence latency
+(the ``w`` side of the max-plus recurrence absorbs them through the
+store's ready time), persist barriers to the REPL-ack / drain terms
+(the ``v`` side), all inside :func:`_make_cell_arrays` BEFORE the
+collapse -- so every engine tier, both data planes and the Pallas
+kernel work unchanged and stay bit-identical. Active axes append the
+resolved params to the bank's max-plus row key; all-``None`` axes
+change neither outputs nor dedup keys, bit-for-bit.
+
 Failure/recovery scenario sweeps and the recovery-time (downtime) model
 build on this API in ``repro.core.scenarios`` / ``repro.core.recovery``.
 """
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 import hashlib
@@ -137,6 +151,13 @@ from repro.configs.recxl_paper import (
     WORKLOADS,
     WorkloadProfile,
 )
+from repro.core.contention import (
+    ContentionParams,
+    clear_contention_caches,
+    contention_arrays,
+    resolve_contention,
+)
+from repro.core.hostcache import BoundedCache
 
 CONFIGS = ("wb", "wt", "baseline", "parallel", "proactive")
 _CONFIG_IDX = {c: i for i, c in enumerate(CONFIGS)}
@@ -181,6 +202,15 @@ class ScenarioSpec:
     bandwidth in GB/s (Fig. 16), ``n_cns`` compute nodes (Fig. 18),
     ``sb_size`` store-buffer entries, ``coalescing`` enables same-line
     SB coalescing (Fig. 12).
+
+    Contention / crash-consistency axes (``repro.core.contention``;
+    docs/contention.md): ``read_share`` fraction of the remote mix that
+    is reads (sharer census, [0, 1)), ``conflict_rate`` fraction of
+    stores hitting a directory conflict ([0, 1)),
+    ``consistency_schedule`` persist-ordering discipline (``"lazy"`` /
+    ``"epoch"`` / ``"eager"``). All three default to ``None`` --
+    contention modeling off, outputs and bank dedup keys unchanged; if
+    any is set, the others resolve to their neutral values.
     """
     workload: str
     config: str
@@ -190,6 +220,15 @@ class ScenarioSpec:
     n_cns: Optional[int] = None
     sb_size: Optional[int] = None
     coalescing: bool = True
+    read_share: Optional[float] = None
+    conflict_rate: Optional[float] = None
+    consistency_schedule: Optional[str] = None
+
+    def contention(self) -> Optional[ContentionParams]:
+        """The cell's resolved contention params (``None`` = axes off;
+        raises ``ValueError`` on out-of-range axes)."""
+        return resolve_contention(self.read_share, self.conflict_rate,
+                                  self.consistency_schedule)
 
     def validate(self, cluster: ClusterConfig) -> None:
         if self.config not in CONFIGS:
@@ -209,6 +248,7 @@ class ScenarioSpec:
             else cluster.cxl_link_bw_gbps
         if bw <= 0.0:
             raise ValueError(f"link_bw_gbps must be > 0, got {bw}")
+        self.contention()        # raises on out-of-range contention axes
 
 
 # ---------------------------------------------------------------------------
@@ -319,41 +359,9 @@ def _trace_cached(workload: str, n_stores: int, seed: int,
 # Host-side memoization (bounded, hash-keyed, centrally clearable)
 # ---------------------------------------------------------------------------
 
-class _BoundedCache:
-    """Hash-keyed LRU memo with a hard entry bound.
-
-    Unlike ``functools.lru_cache`` over the raw arguments, callers pass
-    a small *key* (a digest tuple for batches, a scalar-knob tuple for
-    cell arrays), so a 10^4-spec batch key costs bytes instead of
-    pinning a copy of the spec tuple; ``maxsize`` bounds how many
-    values (which may hold large host/device arrays) stay alive."""
-
-    def __init__(self, maxsize: int):
-        self.maxsize = maxsize
-        self._data: "collections.OrderedDict" = collections.OrderedDict()
-        self.hits = 0
-        self.misses = 0
-
-    def get_or_put(self, key, make: Callable[[], object]):
-        try:
-            val = self._data[key]
-            self._data.move_to_end(key)
-            self.hits += 1
-            return val
-        except KeyError:
-            self.misses += 1
-        val = make()
-        self._data[key] = val
-        while len(self._data) > self.maxsize:
-            self._data.popitem(last=False)
-        return val
-
-    def __len__(self) -> int:
-        return len(self._data)
-
-    def clear(self) -> None:
-        self._data.clear()
-        self.hits = self.misses = 0
+#: The shared cache primitive (repro.core.hostcache -- contention.py
+#: uses the same class for its memos without an import cycle).
+_BoundedCache = BoundedCache
 
 
 #: Reduced-key per-store array derivations (see :func:`_cell_arrays`).
@@ -398,6 +406,7 @@ def clear_sim_caches() -> None:
     _WV_ROW_CACHE.clear()
     _BANK_CACHE.clear()       # drops host columns AND device placements
     _BANKED_INPUT_CACHE.clear()
+    clear_contention_caches()   # conflict draws + delay rows
     for fn in list(_CACHE_CLEARERS):
         fn()
 
@@ -454,7 +463,9 @@ class _CellArrays:
 
 def _make_cell_arrays(workload: str, n_stores: int, seed: int,
                       cluster: ClusterConfig, nr: int, bw: float,
-                      replicating: bool, coalesce_on: bool) -> _CellArrays:
+                      replicating: bool, coalesce_on: bool,
+                      contention: Optional[ContentionParams] = None
+                      ) -> _CellArrays:
     wl = WORKLOADS[workload]
     trace = _trace_cached(workload, n_stores, seed, cluster)
     costs = _commit_cost_ns("proactive", cluster)   # config-independent
@@ -502,6 +513,19 @@ def _make_cell_arrays(workload: str, n_stores: int, seed: int,
     svc_i = np.where(trace["in_burst"], svc_floor,
                      costs["t_drain"]).astype(np.float32)
 
+    if contention is not None:
+        # conflict backoff + sharer invalidations delay the coherence
+        # transaction (the store's ready time absorbs them through the
+        # exposed latency -> the w side of the max-plus recurrence);
+        # persist barriers ride the REPL-ack and drain-service terms
+        # (the v side). Neutral params yield all-zero rows, so x + 0.0
+        # keeps every output bit-identical to the uncontended cell.
+        delay, flush = contention_arrays(contention, n_stores, seed,
+                                         cluster, congestion)
+        exposed = exposed + delay
+        t_repl_i = t_repl_i + flush
+        svc_i = (svc_i + flush).astype(np.float32)
+
     return _CellArrays(
         coalesce=np.asarray(coalesce, bool),
         exposed=np.asarray(exposed, np.float32),
@@ -515,18 +539,20 @@ def _make_cell_arrays(workload: str, n_stores: int, seed: int,
 
 def _cell_arrays(workload: str, n_stores: int, seed: int,
                  cluster: ClusterConfig, nr: int, bw: float,
-                 replicating: bool, coalesce_on: bool) -> _CellArrays:
+                 replicating: bool, coalesce_on: bool,
+                 contention: Optional[ContentionParams] = None
+                 ) -> _CellArrays:
     """Memoized :func:`_make_cell_arrays` on the *reduced* key.
 
     The per-store arrays depend on the spec only through ``(workload,
     seed, n_replicas, link_bw, replicating-config?, coalescing
-    effective?)`` -- NOT on ``config`` itself (beyond the replicating /
-    wt-coalescing classes), ``sb_size`` or ``n_cns``. On a mega-grid
-    whose axes include config/SB/CN sweeps, one derivation therefore
-    serves many cells; the bound (:data:`_CELL_ARRAY_CACHE`) keeps
-    pinned host memory at ~16 bytes x n_stores per entry."""
+    effective?, contention)`` -- NOT on ``config`` itself (beyond the
+    replicating / wt-coalescing classes), ``sb_size`` or ``n_cns``. On
+    a mega-grid whose axes include config/SB/CN sweeps, one derivation
+    therefore serves many cells; the bound (:data:`_CELL_ARRAY_CACHE`)
+    keeps pinned host memory at ~16 bytes x n_stores per entry."""
     key = (workload, n_stores, seed, cluster, nr, bw, replicating,
-           coalesce_on)
+           coalesce_on, contention)
     return _CELL_ARRAY_CACHE.get_or_put(
         key, lambda: _make_cell_arrays(*key))
 
@@ -542,19 +568,25 @@ def _plane_keys(spec: ScenarioSpec, cluster: ClusterConfig
     ``trace_key`` selects the arrivals column (identical across every
     cell that scans the same trace); ``wv_key`` selects the
     precollapsed max-plus ``(w, v, pr_nc)`` column. WB/WT rows are
-    constants (``t_l1`` / ``t_wt`` everywhere), so their key is just
-    the rule name; the replicating rules depend on the reduced
-    derivation knobs but NOT on ``sb_size`` / ``n_cns`` -- the same
-    reduction :func:`_cell_arrays` exploits, now visible to the device
-    data plane."""
+    constants (``t_l1`` / ``t_wt`` everywhere -- they commit locally
+    without a directory transaction, so contention never touches them),
+    so their key is just the rule name; the replicating rules depend on
+    the reduced derivation knobs but NOT on ``sb_size`` / ``n_cns`` --
+    the same reduction :func:`_cell_arrays` exploits, now visible to
+    the device data plane. Active contention axes append their resolved
+    :class:`ContentionParams` as a 7th key component; all-``None`` axes
+    append NOTHING, so legacy grids keep byte-identical keys (and
+    therefore identical bank rows -- no dedup churn)."""
     trace_key = (spec.workload, spec.seed)
     if spec.config in ("wb", "wt"):
         return trace_key, (spec.config,)
     nr = cluster.n_replicas if spec.n_replicas is None else spec.n_replicas
     bw = cluster.cxl_link_bw_gbps if spec.link_bw_gbps is None \
         else spec.link_bw_gbps
-    return trace_key, (spec.config, spec.workload, spec.seed, nr, bw,
-                       spec.coalescing)
+    wv_key = (spec.config, spec.workload, spec.seed, nr, bw,
+              spec.coalescing)
+    con = spec.contention()
+    return trace_key, (wv_key if con is None else wv_key + (con,))
 
 
 def _make_wv_row(wv_key: tuple, n_stores: int, cluster: ClusterConfig
@@ -574,9 +606,10 @@ def _make_wv_row(wv_key: tuple, n_stores: int, cluster: ClusterConfig
     if config in ("wb", "wt"):
         w = np.full(n_stores, t_l1 if config == "wb" else t_wt, np.float32)
         return w, w, np.zeros(n_stores, bool)
-    _, workload, seed, nr, bw, coalescing = wv_key
+    _, workload, seed, nr, bw, coalescing = wv_key[:6]
+    con = wv_key[6] if len(wv_key) > 6 else None
     arr = _cell_arrays(workload, n_stores, seed, cluster, nr, bw, True,
-                       coalescing)
+                       coalescing, contention=con)
     if config == "baseline":
         w = np.where(arr.coalesce, t_l1, arr.exposed + arr.t_repl_i)
         return w, w, np.zeros(n_stores, bool)
@@ -732,8 +765,14 @@ def _prepare_cell(spec: ScenarioSpec, trace: Dict[str, np.ndarray],
     sb = cluster.store_buffer if spec.sb_size is None else spec.sb_size
     replicating = config in _REPLICATING
 
+    # contention only contends the directory/replication transactions of
+    # the replicating configs (WB/WT commit locally on the modeled
+    # path), keeping the WB normalization baseline -- and the constant
+    # WB/WT bank rows -- unchanged; see _plane_keys.
+    con = spec.contention() if replicating else None
     arr = _cell_arrays(spec.workload, n_stores, spec.seed, cluster, nr, bw,
-                       replicating, spec.coalescing and config != "wt")
+                       replicating, spec.coalescing and config != "wt",
+                       contention=con)
 
     # --- scaling with CN count: fewer CNs -> each runs more of the fixed
     # total work (weak scaling of the cluster as in Fig. 18).
@@ -1194,19 +1233,27 @@ def simulate(workload: str, config: str,
              link_bw_gbps: Optional[float] = None,
              n_cns: Optional[int] = None,
              sb_size: Optional[int] = None,
-             coalescing: bool = True) -> SimResult:
+             coalescing: bool = True,
+             read_share: Optional[float] = None,
+             conflict_rate: Optional[float] = None,
+             consistency_schedule: Optional[str] = None) -> SimResult:
     """Simulate one (workload, config) pair on one compute node.
 
     All sensitivity knobs of Figs. 16-18 are exposed as overrides
     (``n_replicas`` replica count, ``link_bw_gbps`` CXL link bandwidth in
-    GB/s, ``n_cns`` compute-node count, ``sb_size`` store-buffer entries).
-    This is the serial oracle the batched engines are differentially
-    tested against; returns a :class:`SimResult` (times in ns, log sizes
-    in bytes, bandwidths in GB/s).
+    GB/s, ``n_cns`` compute-node count, ``sb_size`` store-buffer
+    entries), as are the contention axes (``read_share`` /
+    ``conflict_rate`` / ``consistency_schedule`` -- see
+    ``repro.core.contention``). This is the serial oracle the batched
+    engines are differentially tested against; returns a
+    :class:`SimResult` (times in ns, log sizes in bytes, bandwidths in
+    GB/s).
     """
     spec = ScenarioSpec(workload, config, seed=seed, n_replicas=n_replicas,
                         link_bw_gbps=link_bw_gbps, n_cns=n_cns,
-                        sb_size=sb_size, coalescing=coalescing)
+                        sb_size=sb_size, coalescing=coalescing,
+                        read_share=read_share, conflict_rate=conflict_rate,
+                        consistency_schedule=consistency_schedule)
     spec.validate(cluster)
     trace = _trace_cached(workload, n_stores, seed, cluster)
     cell = _prepare_cell(spec, trace, n_stores, cluster)
@@ -1218,6 +1265,25 @@ def simulate(workload: str, config: str,
         costs["t_l1"], costs["t_wt"], costs["t_drain"])
     return _finish_result(cell, exec_ns, int(at_head), int(sb_full),
                           meta={"engine": "serial"})
+
+
+def simulate_spec(spec: ScenarioSpec,
+                  cluster: ClusterConfig = PAPER_CLUSTER,
+                  n_stores: int = 50_000) -> SimResult:
+    """Run the serial oracle for one :class:`ScenarioSpec` cell.
+
+    The single place that maps EVERY spec knob -- including the
+    contention axes -- onto :func:`simulate`'s keyword surface, so
+    differential callers (the engine's ``serial`` tier, benchmark
+    oracle checks) cannot silently drop a new axis."""
+    return simulate(spec.workload, spec.config, cluster=cluster,
+                    n_stores=n_stores, seed=spec.seed,
+                    n_replicas=spec.n_replicas,
+                    link_bw_gbps=spec.link_bw_gbps, n_cns=spec.n_cns,
+                    sb_size=spec.sb_size, coalescing=spec.coalescing,
+                    read_share=spec.read_share,
+                    conflict_rate=spec.conflict_rate,
+                    consistency_schedule=spec.consistency_schedule)
 
 
 def _pad_len(n: int, mult: int = 8) -> int:
@@ -1304,24 +1370,48 @@ def _make_banked_inputs(specs: Tuple[ScenarioSpec, ...], n_stores: int,
     cells = [_prepare_cell(s, _trace_cached(s.workload, n_stores, s.seed,
                                             cluster), n_stores, cluster)
              for s in specs]
-    n_pad = _pad_len(len(cells))
-    padded = cells + [cells[0]] * (n_pad - len(cells))
-    rows = [bank.rows_for(c.spec) for c in padded]
-    trace_idx = np.asarray([r[0] for r in rows], np.int32)
-    wv_idx = np.asarray([r[1] for r in rows], np.int32)
-    sb_arr = np.asarray([c.sb_size for c in padded], np.int32)
-    sb_max = _pad_len(max(c.sb_size for c in padded))
-    sb_min = min(c.sb_size for c in padded)
-    sb_uniform = sb_min if sb_min == max(c.sb_size for c in padded) else None
-    return (cells, trace_idx, wv_idx, sb_arr, sb_max, sb_min, sb_uniform)
+    # scan-lane dedup (same reduction as the streaming engine's): a
+    # timeline consumes only (arrivals row, max-plus row, SB depth), so
+    # cells sharing that triple are ONE lane -- gathered and scanned
+    # once, with the lane outputs scattered back to member cells by
+    # ``cell_lane``. The one-shot tier no longer gathers (and pads) the
+    # full (n_stores, B) batch on device when the grid repeats lanes
+    # (e.g. the whole CN axis of a sweep): device gather width, scan
+    # width and the shipped index bytes all shrink to unique lanes.
+    lane_of: Dict[tuple, int] = {}
+    lane_rows: List[Tuple[int, int]] = []
+    lane_sb: List[int] = []
+    cell_lane: List[int] = []
+    for c in cells:
+        tr, wv = bank.rows_for(c.spec)
+        key = (c.sb_size, tr, wv)
+        j = lane_of.setdefault(key, len(lane_rows))
+        if j == len(lane_rows):
+            lane_rows.append((tr, wv))
+            lane_sb.append(c.sb_size)
+        cell_lane.append(j)
+    n_lanes = len(lane_rows)
+    pad = _pad_len(n_lanes) - n_lanes
+    trace_idx = np.asarray([r[0] for r in lane_rows]
+                           + [lane_rows[0][0]] * pad, np.int32)
+    wv_idx = np.asarray([r[1] for r in lane_rows]
+                        + [lane_rows[0][1]] * pad, np.int32)
+    sb_list = lane_sb + [lane_sb[0]] * pad
+    sb_arr = np.asarray(sb_list, np.int32)
+    sb_max = _pad_len(max(sb_list))
+    sb_min = min(sb_list)
+    sb_uniform = sb_min if sb_min == max(sb_list) else None
+    return (cells, np.asarray(cell_lane, np.int64), n_lanes, trace_idx,
+            wv_idx, sb_arr, sb_max, sb_min, sb_uniform)
 
 
 def _banked_inputs(specs: Tuple[ScenarioSpec, ...], n_stores: int,
                    cluster: ClusterConfig):
     """Memoized banked host prep for one batch: the padded ``int32``
-    row-index vectors plus prepared cells (the banked counterpart of
-    :func:`_batch_inputs` -- entries are a few KB instead of stacked
-    array copies, and hold NO reference to the bank itself)."""
+    lane-index vectors, the cell->lane scatter map, plus prepared cells
+    (the banked counterpart of :func:`_batch_inputs` -- entries are a
+    few KB instead of stacked array copies, and hold NO reference to
+    the bank itself)."""
     key = _specs_key(specs, n_stores, cluster)
     return _BANKED_INPUT_CACHE.get_or_put(
         key, lambda: _make_banked_inputs(specs, n_stores, cluster))
@@ -1394,10 +1484,13 @@ def simulate_batch(specs: Sequence[ScenarioSpec],
     back past the carried commit history); ``0`` runs the PR-1 per-step
     scan. ``data_plane`` selects how per-store inputs reach the device:
     ``"bank"`` (the blocked default) ships the deduplicated columnar
-    :class:`TraceBank` plus ``int32`` row indices and gathers in-jit;
-    ``"stacked"`` ships one full array copy per cell (the pre-bank
-    plane, kept as the comparison baseline -- and the only plane of the
-    per-step engine). All engines and planes are bit-identical to each
+    :class:`TraceBank` plus ``int32`` row indices, gathers in-jit, and
+    -- like the streaming tier -- scans only unique **lanes** (cells
+    sharing ``(SB, trace row, max-plus row)`` have bit-identical
+    timelines, so their outputs are scattered from one scanned lane;
+    ``meta["scan_lanes"]`` reports the count); ``"stacked"`` ships one
+    full array copy per cell (the pre-bank plane, kept as the
+    comparison baseline -- and the only plane of the per-step engine). All engines and planes are bit-identical to each
     other and to the serial :func:`simulate` oracle; the blocked one is
     several times faster on CPU (see ``fig10/sweep/*`` bench rows).
     The engine, chunk and data plane actually used are reported in
@@ -1418,24 +1511,29 @@ def simulate_batch(specs: Sequence[ScenarioSpec],
         s.validate(cluster)
 
     costs = _commit_cost_ns("proactive", cluster)   # t_l1/t_wt are shared
+    cell_lane = None
     if chunk_size is None or chunk_size:
         plane = data_plane or "bank"
         if plane == "bank":
-            (cells, trace_idx, wv_idx, sb_arr, sb_max, sb_min,
-             sb_uniform) = _banked_inputs(tuple(specs), n_stores, cluster)
+            (cells, cell_lane, n_lanes, trace_idx, wv_idx, sb_arr, sb_max,
+             sb_min, sb_uniform) = _banked_inputs(tuple(specs), n_stores,
+                                                  cluster)
             bank = get_trace_bank(specs, n_stores, cluster)
             idx_bytes = trace_idx.nbytes + wv_idx.nbytes + sb_arr.nbytes
+            batch_width = len(trace_idx)        # padded unique lanes
         else:
             cells, args, sb_max, sb_min, sb_uniform = _batch_inputs(
                 tuple(specs), n_stores, cluster)
+            batch_width = _pad_len(len(specs))
         # a block may not reach past the carried history: the SB depth
         # bounds the lookback (c_{i-sb}), so clamp to the narrowest cell
-        chunk = auto_chunk(n_stores, sb_min, _pad_len(len(specs))) \
+        chunk = auto_chunk(n_stores, sb_min, batch_width) \
             if chunk_size is None else min(chunk_size, n_stores, sb_min)
         meta = {"engine": "blocked", "chunk": chunk,
                 "auto_chunk": chunk_size is None, "data_plane": plane}
         if plane == "bank":
             meta["bank_rows"] = bank.n_rows
+            meta["scan_lanes"] = n_lanes
             meta["h2d_bytes"] = bank.nbytes + idx_bytes
             _, bank_dev = bank.device_args()
             exec_ns, at_head, sb_full = _timeline_banked(
@@ -1457,6 +1555,11 @@ def simulate_batch(specs: Sequence[ScenarioSpec],
     exec_ns = np.asarray(exec_ns)
     at_head = np.asarray(at_head)
     sb_full = np.asarray(sb_full)
+    if cell_lane is not None:
+        # scatter each deduplicated lane's outputs to its member cells
+        exec_ns = exec_ns[cell_lane]
+        at_head = at_head[cell_lane]
+        sb_full = sb_full[cell_lane]
 
     # fresh meta per result: SimResult is frozen but a shared dict would
     # alias annotations across the whole batch

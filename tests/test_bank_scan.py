@@ -33,10 +33,11 @@ def banked_grid():
     specs = tuple(ScenarioSpec(w, c, seed=s, sb_size=SB)
                   for w in ("ycsb", "canneal", "barnes")
                   for c in CONFIGS for s in (0, 1))
-    (cells, tr, wv, sb_arr, sb_max, _, sb_uniform) = _banked_inputs(
-        specs, N, PAPER_CLUSTER)
+    (cells, cell_lane, n_lanes, tr, wv, sb_arr, sb_max, _,
+     sb_uniform) = _banked_inputs(specs, N, PAPER_CLUSTER)
     bank = get_trace_bank(specs, N, PAPER_CLUSTER)
     assert sb_uniform == SB
+    assert n_lanes == len(specs)         # all-distinct lanes in this grid
     args = tuple(jnp.asarray(x) for x in
                  (bank.arrivals, bank.w, bank.v, bank.pr_nc))
     return args, jnp.asarray(tr), jnp.asarray(wv), jnp.asarray(sb_arr), sb_max

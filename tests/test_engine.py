@@ -260,6 +260,12 @@ def test_bank_stats_and_meta_on_banked_run():
     assert stats["dedup_ratio"] > 1.0
     # the resident bank is part of the device-memory high-water mark
     assert stats["dev_mem_hwm_bytes"] >= stats["bank_bytes"]
+    # per-shard replicated device bytes are explicit (bank x n_shards):
+    # the headroom a per-shard sub-bank layout would reclaim
+    assert stats["bank_dev_bytes_per_shard"] == stats["bank_bytes"] > 0
+    assert stats["bank_dev_bytes"] == \
+        stats["bank_bytes"] * stats["n_shards"]
+    assert stats["dev_mem_hwm_bytes"] >= stats["bank_dev_bytes"]
 
 
 def test_stream_threshold_routes_large_grids():

@@ -144,6 +144,24 @@ def test_coalescing_and_capacity_wrap_recovery():
 
 
 @needs_devices
+def test_fault_scenario_contention_scales_downtime():
+    """The same fail-stop schedule yields contention-dependent downtime:
+    conflicted ownership churn inflates the crash-exposed volumes, an
+    eager persist schedule shrinks them (docs/contention.md)."""
+    ev = (FailureEvent(step=2, node=1),)
+    base = run_fault_scenario(FaultScenario(name="base", events=ev))
+    hot = run_fault_scenario(FaultScenario(name="hot", events=ev,
+                                           conflict_rate=0.6))
+    eager = run_fault_scenario(FaultScenario(
+        name="eager", events=ev, consistency_schedule="eager"))
+    assert base.all_invariants_hold and hot.all_invariants_hold
+    assert hot.total_downtime_ns > base.total_downtime_ns
+    assert eager.total_downtime_ns < base.total_downtime_ns
+    with pytest.raises(ValueError):
+        FaultScenario(name="bad", events=ev, conflict_rate=3.0).validate()
+
+
+@needs_devices
 def test_straggler_events_recorded_not_failed():
     scn = FaultScenario(
         name="straggler",

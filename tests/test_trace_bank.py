@@ -129,6 +129,34 @@ def test_bank_rows_are_shared_across_engines():
     assert get_trace_bank(specs, N) is bank_a
 
 
+def test_oneshot_lane_dedup_drops_h2d_and_gather_width():
+    """The one-shot banked tier no longer gathers the full (n_stores, B)
+    batch: cells sharing a (SB, trace, max-plus row) lane are scanned
+    once (here the whole CN axis collapses to 2 lanes for 20 cells), so
+    the shipped index bytes -- and the device gather/scan width -- drop
+    from padded cells to padded lanes, bit-identically."""
+    specs = [ScenarioSpec("ycsb", c, n_cns=ncn)
+             for c in ("wb", "proactive")
+             for ncn in (16, 12, 8, 6, 4, 3, 2, 1, 24, 32)]
+    out = simulate_batch(specs, n_stores=N)
+    want = simulate_batch(specs, n_stores=N, data_plane="stacked")
+    for a, b in zip(out, want):
+        for f in FLOAT_FIELDS:
+            assert getattr(a, f) == getattr(b, f), f
+    meta = out[0].meta
+    assert meta["scan_lanes"] == 2                 # one per config
+    bank = get_trace_bank(specs, N)
+    # pre-dedup accounting: 3 int32 vectors over the padded CELL count
+    old_h2d = bank.nbytes + 3 * 4 * S._pad_len(len(specs))
+    new_h2d = bank.nbytes + 3 * 4 * S._pad_len(2)
+    assert meta["h2d_bytes"] == new_h2d < old_h2d
+    # a grid with all-distinct lanes keeps lane count == cell count
+    uniq = [ScenarioSpec(w, "proactive", seed=s)
+            for w in WORKLOAD_POOL for s in (0, 1)]
+    (r, *_) = simulate_batch(uniq, n_stores=N)
+    assert r.meta["scan_lanes"] == len(uniq)
+
+
 def test_wb_wt_rows_collapse_to_constants():
     """Every WB (and WT) cell of a grid shares one constant column."""
     specs = [ScenarioSpec(w, c, seed=s, n_replicas=nr)
