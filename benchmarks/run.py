@@ -15,6 +15,10 @@ Sections:
   fig17/contention/*  contention & crash-consistency axes on the
                 streaming banked tier (scenarios.contention_mega_grid;
                 see benchmarks/bench_contention.py + docs/contention.md)
+  fig17/directory/*  queueing-coupled directory model (two-level
+                max-plus recurrence): geomean slowdown vs offered load,
+                oracle bit-identity and lane dedup on the streaming
+                directory mega-grid (benchmarks/bench_directory.py)
   framework/*   jitted step wall times per ReCXL variant, Logging-Unit op
                 latencies, log-compressor throughput
   roofline/*    per (arch x shape) single-pod roofline terms from the
@@ -45,35 +49,63 @@ HISTORY_DEFAULT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                "BENCH_protocol.json")
 
 
+def _load_history(path: str) -> list:
+    """Best-effort read of the existing trajectory. A missing, truncated
+    or concurrently-rewritten file degrades to an empty/partial list --
+    corrupt *entries* (non-dict items from an interrupted writer) are
+    skipped with a stderr warning instead of poisoning the append."""
+    try:
+        with open(path) as f:
+            hist = json.load(f)
+    except FileNotFoundError:
+        return []
+    except (OSError, ValueError) as e:
+        print(f"# bench history unreadable, restarting ({path}: {e})",
+              file=sys.stderr)
+        return []
+    if not isinstance(hist, list):
+        print(f"# bench history malformed (not a list), restarting ({path})",
+              file=sys.stderr)
+        return []
+    kept = [e for e in hist if isinstance(e, dict)]
+    if len(kept) != len(hist):
+        print(f"# bench history: skipped {len(hist) - len(kept)} corrupt "
+              f"entr(ies) in {path}", file=sys.stderr)
+    return kept
+
+
 def append_history(rows, quick: bool) -> str:
     """Append one run's rows to the JSON trajectory; returns the path
     ('' when disabled or unwritable). The file is a list of run
     entries, oldest first. History is best-effort telemetry: an
-    unreadable/corrupt file is restarted and an unwritable path is
-    reported on stderr -- neither may fail a bench run that already
-    completed."""
+    unreadable/corrupt file is restarted, corrupt entries are skipped
+    with a warning, and an unwritable path is reported on stderr --
+    neither may fail a bench run that already completed. The rewrite
+    goes through a same-directory tmp file + ``os.replace`` so a
+    concurrent reader (or a crash mid-write) never observes a
+    truncated trajectory."""
     path = os.environ.get("RECXL_BENCH_HISTORY", HISTORY_DEFAULT)
     if path.lower() in ("", "0", "off", "none"):
         return ""
-    try:
-        with open(path) as f:
-            hist = json.load(f)
-        if not isinstance(hist, list):
-            hist = []
-    except (OSError, ValueError):
-        hist = []
+    hist = _load_history(path)
     hist.append({
         "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
         "quick": quick,
         "argv": sys.argv[1:],
         "rows": rows,
     })
+    tmp = f"{path}.tmp.{os.getpid()}"
     try:
-        with open(path, "w") as f:
+        with open(tmp, "w") as f:
             json.dump(hist, f, indent=1, sort_keys=True, default=str)
             f.write("\n")
+        os.replace(tmp, path)
     except OSError as e:
         print(f"# bench history not written ({path}: {e})", file=sys.stderr)
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
         return ""
     return path
 
@@ -84,9 +116,11 @@ def main() -> None:
     quick = os.environ.get("RECXL_BENCH_QUICK", "") not in ("", "0")
 
     from benchmarks.bench_contention import bench_contention
+    from benchmarks.bench_directory import bench_directory
     from benchmarks.protocol_benches import ALL_PROTOCOL_BENCHES
 
-    benches = list(ALL_PROTOCOL_BENCHES) + [bench_contention]
+    benches = list(ALL_PROTOCOL_BENCHES) + [bench_contention,
+                                            bench_directory]
     if not quick:
         from benchmarks.framework_benches import ALL_FRAMEWORK_BENCHES
         benches += ALL_FRAMEWORK_BENCHES

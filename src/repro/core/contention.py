@@ -88,11 +88,17 @@ EPOCH_LEN = 64
 #: a contended line stays contended for a burst of accesses).
 CONFLICT_RUN_LEN = 8.0
 
-#: Peer CNs that can hold a Shared copy of a line (the paper's 16-CN
-#: cluster minus the writer). Deliberately a constant -- NOT the spec's
-#: ``n_cns`` knob -- so the CN weak-scaling axis keeps sharing bank rows
-#: and scan lanes (contention is a property of the workload's sharing
-#: pattern, not of how many nodes the fixed work is split over).
+#: DEFAULT peer pool that can hold a Shared copy of a line (the paper's
+#: 16-CN cluster minus the writer). This is only the *fallback* for a
+#: bare :class:`ContentionParams`: the simulator's ``_resolve_coupling``
+#: replaces it with the **directory-derived** census
+#: (``directory.sharer_pool(n_cns, n_replicas)`` -- the union of the
+#: real ``ShardDirectory`` replica peers, never more than ``n_cns - 1``)
+#: whenever ``read_share > 0``, and canonicalizes it to 0 when
+#: ``read_share == 0`` (the binomial census is identically zero then, so
+#: the CN weak-scaling axis keeps sharing bank rows and scan lanes).
+#: The old behavior -- Binomial(15, read_share) even on a 4-CN cluster
+#: -- overcounted invalidations on small clusters.
 SHARER_POOL = 15
 
 #: RNG salt decorrelating conflict draws from the trace synthesis rng
@@ -107,12 +113,16 @@ class ContentionParams:
     ``read_share`` in [0, 1): fraction of the remote mix that is reads
     (drives the sharer census a store must invalidate);
     ``conflict_rate`` in [0, 1): fraction of stores hitting a directory
-    conflict; ``schedule`` one of :data:`CONSISTENCY_SCHEDULES`.
+    conflict; ``schedule`` one of :data:`CONSISTENCY_SCHEDULES`;
+    ``sharer_pool`` the peer census the invalidation binomial draws
+    from (the simulator canonicalizes it via ``_resolve_coupling``:
+    directory-derived when ``read_share > 0``, 0 otherwise).
     Hashable -- used verbatim as the contention component of the bank's
     max-plus row dedup key."""
     read_share: float = 0.0
     conflict_rate: float = 0.0
     schedule: str = "lazy"
+    sharer_pool: int = SHARER_POOL
 
 
 def resolve_contention(read_share: Optional[float],
@@ -146,8 +156,8 @@ def resolve_contention(read_share: Optional[float],
 # ---------------------------------------------------------------------------
 
 #: Raw conflict/sharer draws, keyed ``(n_stores, seed, conflict_rate,
-#: read_share)`` -- ~8 bytes x n_stores per entry (two int32 census
-#: columns). The draws do NOT depend on congestion / cluster constants
+#: read_share, pool)`` -- ~8 bytes x n_stores per entry (two int32
+#: census columns). The draws do NOT depend on congestion / cluster constants
 #: (those scale the delays deterministically afterwards), so one entry
 #: serves every N_r/bw knob of a sweep. ``clear_sim_caches`` drops both
 #: caches via :func:`clear_contention_caches`.
@@ -170,7 +180,8 @@ def contention_cache_sizes() -> Tuple[int, int]:
 
 
 def _make_conflict_draws(n_stores: int, seed: int, conflict_rate: float,
-                         read_share: float) -> Dict[str, np.ndarray]:
+                         read_share: float,
+                         pool: int = SHARER_POOL) -> Dict[str, np.ndarray]:
     """Draw the per-store conflict structure for one trace.
 
     Same run-length technique as ``simulator.synthesize_trace``:
@@ -183,7 +194,9 @@ def _make_conflict_draws(n_stores: int, seed: int, conflict_rate: float,
       store: attempts are geometric (each re-races the conflictors with
       win probability ``1 - conflict_rate``), zero outside episodes;
     * ``sharers`` (i32) -- Shared copies to invalidate before owning
-      the line: a Binomial(:data:`SHARER_POOL`, read_share) census,
+      the line: a Binomial(``pool``, read_share) census -- ``pool`` is
+      the resolved sharer pool (directory-derived under
+      ``_resolve_coupling``, :data:`SHARER_POOL` for a bare params) --
       zero outside episodes (an uncontended line was prefetched
       exclusive long before the SB head -- Fig. 7).
     """
@@ -209,15 +222,17 @@ def _make_conflict_draws(n_stores: int, seed: int, conflict_rate: float,
 
     retries = rng.geometric(max(1.0 - frac, 0.02), m) - 1
     retries = np.where(hot, retries, 0).astype(np.int32)
-    sharers = rng.binomial(SHARER_POOL, np.clip(read_share, 0.0, 1.0), m)
+    sharers = rng.binomial(max(int(pool), 0),
+                           np.clip(read_share, 0.0, 1.0), m)
     sharers = np.where(hot, sharers, 0).astype(np.int32)
     return {"retries": retries[:n_stores], "sharers": sharers[:n_stores]}
 
 
 def conflict_draws(n_stores: int, seed: int, conflict_rate: float,
-                   read_share: float) -> Dict[str, np.ndarray]:
+                   read_share: float,
+                   pool: int = SHARER_POOL) -> Dict[str, np.ndarray]:
     """Memoized :func:`_make_conflict_draws` (read-only arrays)."""
-    key = (n_stores, seed, conflict_rate, read_share)
+    key = (n_stores, seed, conflict_rate, read_share, pool)
     return _DRAW_CACHE.get_or_put(
         key, lambda: _make_conflict_draws(*key))
 
@@ -250,7 +265,7 @@ def _make_contention_arrays(params: ContentionParams, n_stores: int,
                             congestion: float
                             ) -> Tuple[np.ndarray, np.ndarray]:
     d = conflict_draws(n_stores, seed, params.conflict_rate,
-                       params.read_share)
+                       params.read_share, params.sharer_pool)
     # one failed ownership attempt = a directory round trip + the
     # directory's DRAM state access; sharer invalidations serialize at
     # the home directory port (half an RTT each: INV out, ACK back,

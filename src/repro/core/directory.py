@@ -15,12 +15,31 @@ lives in MN memory and is repaired by *software* handlers; keeping it off
 the device state also means its consistency survives device failures by
 construction. Benchmarks read it for the Fig. 15 analogue (owned shards
 of a crashed node).
+
+Queueing model (``directory_load`` axis)
+----------------------------------------
+The bottom of this module is the *capacity* side of the directory: the
+simulator's two-level max-plus recurrence (docs/simulator.md) treats
+each (node, bucket) shard as an M/D/1-style server shared by every CN
+that appears in the shard's replica set. Two resolved quantities feed
+it:
+
+* :func:`sharer_pool` -- the **real** sharer census: the union of
+  node 0's per-bucket replica peers under :class:`ShardDirectory`,
+  clamped to ``n_cns - 1``. This replaces ``contention.SHARER_POOL``'s
+  fixed 15-peer binomial when the directory model is active (the
+  small-cluster overcount bugfix).
+* :class:`DirectoryParams` via :func:`resolve_directory_load` -- the
+  frozen per-cell coupling knobs the simulator folds into each epoch's
+  ``w`` side and the dedup keys. ``directory_load=None`` keeps the
+  axis fully inert (bit-identical legacy outputs AND keys).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 import json
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -141,3 +160,92 @@ class ShardDirectory:
             e.dump_step = v["dump_step"]
             e.commit_step = v["commit_step"]
         return d
+
+
+# ---------------------------------------------------------------------------
+# Queueing-coupled directory model (the simulator's level-2 recurrence)
+# ---------------------------------------------------------------------------
+
+#: Buckets per node in the canonical coupling directory. Matches the
+#: recovery benches' shard granularity; a shard therefore serves
+#: ``1/DIR_BUCKETS`` of a node's line traffic.
+DIR_BUCKETS = 16
+
+#: Stores per directory epoch in the level-2 service-rate recurrence.
+#: Coarser than ``contention.EPOCH_LEN`` (64): the directory queue
+#: drains on dump-period timescales, not store-buffer timescales.
+DIR_EPOCH_LEN = 128
+
+
+@functools.lru_cache(maxsize=256)
+def sharer_pool(n_cns: int, n_replicas: int,
+                n_buckets: int = DIR_BUCKETS) -> int:
+    """Real sharer census for one CN: the union of node 0's per-bucket
+    replica peers under :class:`ShardDirectory`, self excluded.
+
+    This is the directory-derived replacement for the fixed
+    ``contention.SHARER_POOL`` binomial pool: by construction it never
+    exceeds ``n_cns - 1``, so a 4-CN cluster stops drawing invalidation
+    storms from 15 phantom peers. Returns 0 for single-node clusters
+    (nobody to invalidate)."""
+    if n_cns <= 1:
+        return 0
+    nr_eff = max(1, min(int(n_replicas), n_cns - 1))
+    peers = set()
+    for bucket in range(n_buckets):
+        peers.update(replica_groups.replica_targets(
+            0, bucket, nr_eff, n_cns))
+    peers.discard(0)
+    return len(peers)
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectoryParams:
+    """Resolved directory-coupling knobs for one cell.
+
+    Frozen + hashable: appended verbatim to the simulator's
+    ``_plane_keys`` wv key (and hence the bank-row / scan-lane dedup
+    keys), so two cells couple through the same (shard, epoch-profile)
+    iff their params compare equal. ``rho_bg`` is the *background*
+    utilization this cell's shard sees from its sharer pool; the cell's
+    own offered work is added per epoch by the level-2 recurrence.
+    """
+
+    sharer_pool: int
+    rho_bg: float
+    epoch: int = DIR_EPOCH_LEN
+    buckets: int = DIR_BUCKETS
+
+
+def resolve_directory_load(load: Optional[float], n_cns: int,
+                           n_replicas: int) -> Optional[DirectoryParams]:
+    """Resolve the ``directory_load`` axis to frozen params (or None).
+
+    ``None`` means the coupling is OFF: no params, no key component,
+    bit-identical legacy behavior. ``load`` is the offered utilization
+    in [0, 1) each *sharer* contributes to the shared shard;
+    ``rho_bg`` scales it by the real pool over the peer count.
+    ``load == 0.0`` canonicalizes to a pool-free zero-load cell so the
+    in-grid normalization cell dedups across CN counts (the delays are
+    exactly zero either way)."""
+    if load is None:
+        return None
+    load = float(load)
+    if not 0.0 <= load < 1.0:
+        raise ValueError(
+            f"directory_load must be in [0, 1) or None, got {load!r}")
+    if load == 0.0:
+        return DirectoryParams(sharer_pool=0, rho_bg=0.0)
+    pool = sharer_pool(n_cns, n_replicas)
+    rho_bg = load * pool / max(n_cns - 1, 1)
+    return DirectoryParams(sharer_pool=pool, rho_bg=rho_bg)
+
+
+def directory_service_scale(dirp: Optional[DirectoryParams]) -> float:
+    """Mean service-rate dilation ``1 / (1 - rho)`` of a shard under
+    background load (utilization capped below saturation). Scales the
+    recovery walk's directory phase; 1.0 when the coupling is off."""
+    if dirp is None:
+        return 1.0
+    rho = min(float(dirp.rho_bg), 0.95)
+    return 1.0 / (1.0 - rho)

@@ -75,6 +75,23 @@ This module is the streaming tier that removes all three:
 grids stream; ``engine=`` forces a tier. ``SimResult.meta`` records
 which tier ran, the chunk used, the tile/shard geometry and the data
 plane.
+
+Two notes on axes and threads that this module gets for free:
+
+* **Coupled axes ride the plane keys.** Lane and bank-row dedup both
+  key on ``simulator._plane_keys``, which already appends the resolved
+  ``ContentionParams`` / ``DirectoryParams`` tails for coupled cells
+  (the two-level directory recurrence is folded into the wv row on the
+  host, before the bank ever sees it). The engine therefore needs no
+  knowledge of either axis: coupled cells that share a (shard,
+  epoch-profile) still collapse to one scan lane, and axis-off grids
+  produce byte-identical keys -- and rows -- to the legacy plane.
+* **Memo caches are shared with worker threads.** The prefetch and
+  compile-warm executors mutate the same :class:`BoundedCache` memos
+  (`_cell_arrays`, trace synthesis, compiled tiles) as the caller;
+  ``hostcache.BoundedCache`` serializes per-cache, so each key is
+  built exactly once even when a warm thread and the dispatch loop
+  race on it.
 """
 
 from __future__ import annotations

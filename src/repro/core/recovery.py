@@ -355,7 +355,9 @@ def estimate_recovery_time(owned_lines: float,
                            cluster: ClusterConfig = PAPER_CLUSTER,
                            link_bw_gbps: Optional[float] = None,
                            params: RecoveryTimeParams =
-                           DEFAULT_RECOVERY_PARAMS) -> RecoveryEstimate:
+                           DEFAULT_RECOVERY_PARAMS,
+                           dir_service_scale: float = 1.0
+                           ) -> RecoveryEstimate:
     """Closed-form downtime estimate for one failed CN.
 
     ``owned_lines``: cache lines (or shard entries) the failed node
@@ -365,6 +367,9 @@ def estimate_recovery_time(owned_lines: float,
     Algorithm 2 walks these to find the newest validated versions.
     ``link_bw_gbps``: CXL link bandwidth in GB/s (1 GB/s == 1 byte/ns,
     so transfer ns == bytes / GB/s); defaults to the cluster's.
+    ``dir_service_scale`` (>= 1.0) dilates the directory-walk phase
+    when the surviving directory shards serve recovery under background
+    load (``directory.directory_service_scale`` -- 1.0 = uncoupled).
 
     The estimate is monotone increasing in both volumes and monotone
     decreasing in the bandwidth (tests/test_recovery_time.py holds this
@@ -375,6 +380,9 @@ def estimate_recovery_time(owned_lines: float,
         raise ValueError(f"link_bw_gbps must be > 0, got {bw}")
     if owned_lines < 0 or undumped_log_bytes < 0:
         raise ValueError("volumes must be >= 0")
+    if dir_service_scale < 1.0:
+        raise ValueError(
+            f"dir_service_scale must be >= 1.0, got {dir_service_scale}")
     fetch_bytes = owned_lines * (params.line_bytes + params.header_bytes)
     wb_bytes = owned_lines * params.line_bytes
     entries = undumped_log_bytes / params.log_entry_bytes
@@ -383,7 +391,7 @@ def estimate_recovery_time(owned_lines: float,
         detect_ns=params.detect_us * 1e3,
         quiesce_ns=cluster.cxl_rtt_ns
         + cluster.store_buffer * 2.0 * cluster.cycle_ns,
-        directory_ns=owned_lines * params.dir_entry_ns,
+        directory_ns=owned_lines * params.dir_entry_ns * dir_service_scale,
         log_scan_ns=entries * params.scan_cycles_per_entry * lu_cycle_ns,
         fetch_ns=fetch_bytes / bw,
         writeback_ns=wb_bytes / bw,
@@ -443,6 +451,7 @@ def workload_recovery_inputs(workload: str, fail_time_ms: float,
 def recovery_time_batch(owned_lines: jax.Array,
                         undumped_log_bytes: jax.Array,
                         link_bw_gbps: jax.Array,
+                        dir_service_scale: jax.Array = 1.0,
                         cluster: ClusterConfig = PAPER_CLUSTER,
                         params: RecoveryTimeParams =
                         DEFAULT_RECOVERY_PARAMS) -> Dict[str, jax.Array]:
@@ -451,7 +460,10 @@ def recovery_time_batch(owned_lines: jax.Array,
 
     Inputs broadcast together to the grid shape; returns a dict of
     arrays of that shape: every phase field of :class:`RecoveryEstimate`
-    plus ``total_ns`` and ``replay_bytes``. Same arithmetic as the
+    plus ``total_ns`` and ``replay_bytes``. ``dir_service_scale``
+    broadcasts like the volumes (``recovery_sweep`` passes a per-CN
+    vector of directory service dilations; the scalar default 1.0
+    reproduces the uncoupled model bit-for-bit). Same arithmetic as the
     scalar model (tests/test_recovery_time.py checks them against each
     other).
     """
@@ -459,6 +471,7 @@ def recovery_time_batch(owned_lines: jax.Array,
                         else jnp.float32)
     undumped = jnp.asarray(undumped_log_bytes, owned.dtype)
     bw = jnp.asarray(link_bw_gbps, owned.dtype)
+    dscale = jnp.asarray(dir_service_scale, owned.dtype)
     fetch_bytes = owned * (params.line_bytes + params.header_bytes)
     wb_bytes = owned * params.line_bytes
     entries = undumped / params.log_entry_bytes
@@ -467,19 +480,20 @@ def recovery_time_batch(owned_lines: jax.Array,
         "detect_ns": jnp.broadcast_to(params.detect_us * 1e3,
                                       jnp.broadcast_shapes(
                                           owned.shape, undumped.shape,
-                                          bw.shape)),
+                                          bw.shape, dscale.shape)),
         "quiesce_ns": jnp.broadcast_to(
             cluster.cxl_rtt_ns + cluster.store_buffer * 2.0
             * cluster.cycle_ns,
-            jnp.broadcast_shapes(owned.shape, undumped.shape, bw.shape)),
-        "directory_ns": owned * params.dir_entry_ns,
+            jnp.broadcast_shapes(owned.shape, undumped.shape, bw.shape,
+                                 dscale.shape)),
+        "directory_ns": owned * params.dir_entry_ns * dscale,
         "log_scan_ns": entries * params.scan_cycles_per_entry * lu_cycle_ns,
         "fetch_ns": fetch_bytes / bw,
         "writeback_ns": wb_bytes / bw,
         "resume_ns": jnp.broadcast_to(cluster.cxl_rtt_ns,
                                       jnp.broadcast_shapes(
                                           owned.shape, undumped.shape,
-                                          bw.shape)),
+                                          bw.shape, dscale.shape)),
         "replay_bytes": undumped + fetch_bytes + wb_bytes,
     }
     out["total_ns"] = (out["detect_ns"] + out["quiesce_ns"]

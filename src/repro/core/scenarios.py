@@ -73,22 +73,25 @@ def sweep_grid(workloads: Sequence[str] = tuple(WORKLOADS),
                read_share: Sequence[Optional[float]] = (None,),
                conflict_rate: Sequence[Optional[float]] = (None,),
                consistency_schedule: Sequence[Optional[str]] = (None,),
+               directory_load: Sequence[Optional[float]] = (None,),
                ) -> List[ScenarioSpec]:
     """Cartesian product of sensitivity knobs as a flat spec list.
 
     The contention / crash-consistency axes (``read_share``,
     ``conflict_rate``, ``consistency_schedule`` -- see
-    docs/contention.md) default to a single ``None`` value, so every
+    docs/contention.md) and the directory-coupling axis
+    (``directory_load`` -- the two-level queueing recurrence, see
+    docs/simulator.md) default to a single ``None`` value, so every
     pre-existing grid is unchanged cell-for-cell."""
     return [ScenarioSpec(w, c, seed=s, n_replicas=nr, link_bw_gbps=bw,
                          n_cns=ncn, sb_size=sb, coalescing=co,
                          read_share=rs, conflict_rate=cr,
-                         consistency_schedule=cs)
-            for w, c, s, nr, bw, ncn, sb, co, rs, cr, cs
+                         consistency_schedule=cs, directory_load=dl)
+            for w, c, s, nr, bw, ncn, sb, co, rs, cr, cs, dl
             in itertools.product(
                 workloads, configs, seeds, n_replicas, link_bw_gbps,
                 n_cns, sb_sizes, coalescing, read_share, conflict_rate,
-                consistency_schedule)]
+                consistency_schedule, directory_load)]
 
 
 def fig10_grid(seeds: Sequence[int] = (0,)) -> List[ScenarioSpec]:
@@ -176,6 +179,35 @@ def contention_mega_grid(workloads: Sequence[str] = tuple(WORKLOADS),
                       consistency_schedule=schedules)
 
 
+def directory_mega_grid(workloads: Sequence[str] = tuple(WORKLOADS),
+                        configs: Sequence[str] = ("baseline", "parallel",
+                                                  "proactive"),
+                        seeds: Sequence[int] = (0, 1),
+                        replicas: Sequence[Optional[int]] = (1, 3),
+                        cn_counts: Sequence[Optional[int]] = (16, 8, 4),
+                        loads: Sequence[Optional[float]] =
+                        (0.0, 0.2, 0.4, 0.7),
+                        sb_sizes: Sequence[Optional[int]] = (72, 48)
+                        ) -> List[ScenarioSpec]:
+    """The directory-coupling cross-product at streaming-tier scale
+    (workload x config x seed x N_r x CN x load x SB -- 2 592 cells at
+    the defaults, >= ``STREAM_THRESHOLD``; the 4-CN column exercises
+    the clamped directory census). ``directory_load=0.0``
+    cells are bit-identical to the axis-off semantics and serve as the
+    in-grid normalization baseline of the ``fig17/directory/*``
+    slowdown rows; ``baseline`` pays the shard's queueing wait serially
+    per store while ``proactive``'s decoupled commit largely hides it
+    behind the drain chain -- the capacity-vs-resilience contrast the
+    bench reports. The SB and CN axes exercise scan-lane dedup on
+    coupled cells (cells sharing a resolved
+    :class:`~repro.core.directory.DirectoryParams` + max-plus row are
+    one lane). ``fig17/directory/*`` bench rows run it
+    (benchmarks/bench_directory.py)."""
+    return sweep_grid(workloads=workloads, configs=configs, seeds=seeds,
+                      n_replicas=replicas, n_cns=cn_counts,
+                      sb_sizes=sb_sizes, directory_load=loads)
+
+
 def run_sweep(specs: Sequence[ScenarioSpec],
               cluster: ClusterConfig = PAPER_CLUSTER,
               n_stores: int = 50_000,
@@ -259,7 +291,8 @@ def recovery_sweep(workloads: Sequence[str] = tuple(WORKLOADS),
                    params: RecoveryTimeParams = DEFAULT_RECOVERY_PARAMS,
                    read_share: Optional[float] = None,
                    conflict_rate: Optional[float] = None,
-                   consistency_schedule: Optional[str] = None
+                   consistency_schedule: Optional[str] = None,
+                   directory_load: Optional[float] = None
                    ) -> RecoverySweep:
     """Sweep the SS VII-E downtime model over a (workload x
     failure-time x node-count) grid in ONE jitted call.
@@ -272,9 +305,15 @@ def recovery_sweep(workloads: Sequence[str] = tuple(WORKLOADS),
     the crash-exposed volumes through
     ``workload_recovery_inputs(contention=...)`` -- conflicted
     ownership churn inflates the replayed state, persist-ordering
-    schedules shrink it (docs/contention.md).
+    schedules shrink it (docs/contention.md). ``directory_load``
+    (``None`` = off) dilates the directory-walk phase per CN count:
+    recovery's Algorithm 1 walks the surviving shards while they still
+    serve the sharer pool's background load, so each owned entry costs
+    ``directory_service_scale`` times its uncoupled service time.
     """
     from repro.core.contention import resolve_contention
+    from repro.core.directory import (directory_service_scale,
+                                      resolve_directory_load)
 
     contention = resolve_contention(read_share, conflict_rate,
                                     consistency_schedule)
@@ -297,7 +336,17 @@ def recovery_sweep(workloads: Sequence[str] = tuple(WORKLOADS),
                     workload_recovery_inputs(wname, t_ms, cluster=cluster,
                                              n_cns=ncn, params=params,
                                              contention=contention)
+    # per-CN directory service dilation (1.0s when the coupling is off;
+    # the raw load is range-checked once up front so a bad axis value
+    # fails before the heavy per-cell loop)
+    resolve_directory_load(directory_load, cluster.n_cns,
+                           cluster.n_replicas)
+    dir_scale = np.asarray(
+        [directory_service_scale(resolve_directory_load(
+            directory_load, ncn, cluster.n_replicas))
+         for ncn in cn_counts], np.float64)
     out = recovery_time_batch(owned, undumped, np.full(shape, bw),
+                              dir_service_scale=dir_scale,
                               cluster=cluster, params=params)
     comps = {k: np.asarray(v) for k, v in out.items()}
     return RecoverySweep(workloads=workloads, fail_times_ms=fail_times_ms,
@@ -318,7 +367,10 @@ class FaultScenario:
     describe the workload regime the failed node was running: they
     scale the crash-exposed volumes feeding each event's downtime
     estimate, so the same fail-stop schedule yields contention-dependent
-    downtime numbers."""
+    downtime numbers. ``directory_load`` (``None`` = off;
+    ``repro.core.directory``) dilates the directory-walk phase of each
+    estimate -- the surviving shards serve recovery under the sharer
+    pool's background load."""
     name: str
     events: Tuple[FailureEvent, ...]
     n_nodes: int = 4
@@ -331,6 +383,7 @@ class FaultScenario:
     read_share: Optional[float] = None
     conflict_rate: Optional[float] = None
     consistency_schedule: Optional[str] = None
+    directory_load: Optional[float] = None
 
     def contention(self):
         """Resolved :class:`~repro.core.contention.ContentionParams`
@@ -338,6 +391,13 @@ class FaultScenario:
         from repro.core.contention import resolve_contention
         return resolve_contention(self.read_share, self.conflict_rate,
                                   self.consistency_schedule)
+
+    def directory(self):
+        """Resolved :class:`~repro.core.directory.DirectoryParams`
+        (``None`` when the coupling axis is off)."""
+        from repro.core.directory import resolve_directory_load
+        return resolve_directory_load(self.directory_load, self.n_nodes,
+                                      self.n_replicas)
 
     def validate(self) -> None:
         if self.variant not in ("baseline", "parallel", "proactive"):
@@ -348,6 +408,7 @@ class FaultScenario:
             if not 0 <= ev.node < self.n_nodes:
                 raise ValueError(f"event node {ev.node} outside mesh")
         self.contention()        # raises on out-of-range contention axes
+        self.directory()         # raises on out-of-range directory_load
 
 
 @dataclasses.dataclass
@@ -395,7 +456,8 @@ def estimate_scenario_downtime(engine: ReplicationEngine,
                                cluster: ClusterConfig = PAPER_CLUSTER,
                                params: RecoveryTimeParams =
                                DEFAULT_RECOVERY_PARAMS,
-                               contention=None) -> RecoveryEstimate:
+                               contention=None,
+                               directory=None) -> RecoveryEstimate:
     """Downtime estimate for one executed recovery replay, fed by the
     volumes the replay *actually* moved.
 
@@ -407,10 +469,14 @@ def estimate_scenario_downtime(engine: ReplicationEngine,
     (:class:`~repro.core.contention.ContentionParams` or ``None``)
     scales both volumes for the scenario's contention regime --
     conflicted ownership churn keeps more state dirty at the crash
-    point, persist-ordering schedules shrink it. Times in the returned
-    estimate are ns.
+    point, persist-ordering schedules shrink it. ``directory``
+    (:class:`~repro.core.directory.DirectoryParams` or ``None``)
+    dilates the directory-walk phase by the shard's service-rate
+    dilation under background load. Times in the returned estimate are
+    ns.
     """
     from repro.core.contention import dirty_line_scale, undumped_log_scale
+    from repro.core.directory import directory_service_scale
 
     bucket_bytes = engine.layout.bucket_len * engine.log_dtype.itemsize
     n_versions = sum(m[1].get("n_versions", 0) for m in result.message_log
@@ -425,7 +491,8 @@ def estimate_scenario_downtime(engine: ReplicationEngine,
         undumped *= undumped_log_scale(contention)
     return estimate_recovery_time(
         owned_lines=owned, undumped_log_bytes=undumped,
-        cluster=cluster, params=p)
+        cluster=cluster, params=p,
+        dir_service_scale=directory_service_scale(directory))
 
 
 def enumerate_fault_scenarios(n_nodes: int = 4, n_steps: int = 6,
@@ -588,7 +655,8 @@ def run_fault_scenario(scn: FaultScenario,
                         directory, failed),
                     unrecoverable=res.stats.unrecoverable,
                     downtime=estimate_scenario_downtime(
-                        engine, res, contention=scn.contention())))
+                        engine, res, contention=scn.contention(),
+                        directory=scn.directory())))
 
     return ScenarioOutcome(
         scenario=scn, steps_run=scn.n_steps,

@@ -130,6 +130,34 @@ kernel work unchanged and stay bit-identical. Active axes append the
 resolved params to the bank's max-plus row key; all-``None`` axes
 change neither outputs nor dedup keys, bit-for-bit.
 
+Two-level recurrence (queueing-coupled directory)
+-------------------------------------------------
+
+The ``directory_load`` axis nests the per-store max-plus recurrence
+inside a **per-epoch service-rate recurrence** over the shared
+``ShardDirectory`` shard (docs/simulator.md): stores are grouped into
+``DirectoryParams.epoch``-long directory epochs; per epoch the shard's
+backlog follows the Lindley recurrence
+
+    q_e = max(q_{e-1} + own_e + bg_e - span_e, 0)
+
+where ``own_e`` is this cell's offered directory work in the epoch,
+``bg_e`` the background utilization from the cell's *real* sharer pool
+(``directory.sharer_pool`` -- the union of the shard's replica peers,
+never the fixed 15-peer census), and ``span_e`` the epoch's wall-clock
+span on the arrival clock. Each epoch's waiting time (carried backlog
++ an M/D/1 in-epoch wait) is folded into every directory-transacting
+store's ``w`` side (:func:`_directory_delay_row`, host-side inside
+:func:`_make_cell_arrays` BEFORE the collapse) -- so the level-1
+collapse, every engine tier, both data planes and the Pallas kernel
+again work unchanged. ``directory_load=None`` keeps outputs AND dedup
+keys bit-identical; active coupling appends the resolved
+:class:`~repro.core.directory.DirectoryParams` to the wv key, so cells
+sharing a (shard, epoch-profile) still dedup to one bank row / scan
+lane. :func:`_resolve_coupling` is the single resolution point shared
+by :func:`_prepare_cell` and :func:`_plane_keys`, so data and keys
+cannot drift.
+
 Failure/recovery scenario sweeps and the recovery-time (downtime) model
 build on this API in ``repro.core.scenarios`` / ``repro.core.recovery``.
 """
@@ -156,6 +184,11 @@ from repro.core.contention import (
     clear_contention_caches,
     contention_arrays,
     resolve_contention,
+)
+from repro.core.directory import (
+    DirectoryParams,
+    resolve_directory_load,
+    sharer_pool,
 )
 from repro.core.hostcache import BoundedCache
 
@@ -211,6 +244,14 @@ class ScenarioSpec:
     ``"epoch"`` / ``"eager"``). All three default to ``None`` --
     contention modeling off, outputs and bank dedup keys unchanged; if
     any is set, the others resolve to their neutral values.
+
+    ``directory_load`` ([0, 1) or ``None``) is the queueing-coupled
+    directory axis (``repro.core.directory``): the offered utilization
+    each sharer contributes to the cell's shared ``ShardDirectory``
+    shard, folded into the max-plus ``w`` side per directory epoch by
+    the level-2 recurrence. ``None`` = coupling off (bit-identical
+    outputs and keys); ``0.0`` = the in-grid normalization cell (zero
+    delays, own bank row).
     """
     workload: str
     config: str
@@ -223,6 +264,7 @@ class ScenarioSpec:
     read_share: Optional[float] = None
     conflict_rate: Optional[float] = None
     consistency_schedule: Optional[str] = None
+    directory_load: Optional[float] = None
 
     def contention(self) -> Optional[ContentionParams]:
         """The cell's resolved contention params (``None`` = axes off;
@@ -249,6 +291,7 @@ class ScenarioSpec:
         if bw <= 0.0:
             raise ValueError(f"link_bw_gbps must be > 0, got {bw}")
         self.contention()        # raises on out-of-range contention axes
+        resolve_directory_load(self.directory_load, ncn, nr)
 
 
 # ---------------------------------------------------------------------------
@@ -461,10 +504,62 @@ class _CellArrays:
     mem_demand: float                # GB/s per CN
 
 
+def _directory_delay_row(arrivals: np.ndarray, tx_mask: np.ndarray,
+                         dirp: DirectoryParams, cluster: ClusterConfig,
+                         congestion: float) -> np.ndarray:
+    """Level-2 recurrence: per-store directory-queue delay (f32 ns).
+
+    Stores are grouped into ``dirp.epoch``-long directory epochs on the
+    arrival clock. Per epoch ``e`` the shared shard sees
+
+    * ``own_e``  -- this cell's offered service: its directory
+      transactions (the non-coalesced stores) times the directory's
+      DRAM state-access service time, spread over the node's
+      ``dirp.buckets`` shards (each shard serves 1/buckets of the
+      node's lines);
+    * ``bg_e``   -- the sharer pool's background utilization
+      ``rho_bg * span_e``;
+
+    and carries the Lindley backlog ``q_e = max(q_{e-1} + own_e + bg_e
+    - span_e, 0)`` -- the service-rate recurrence the per-store
+    max-plus recurrence nests inside. Every directory-transacting
+    store of epoch ``e`` then waits the backlog carried INTO the epoch
+    plus the M/D/1 in-epoch queueing wait ``rho * s / (2 (1 - rho))``,
+    scaled by the cell's link-congestion factor like every other
+    latency. Host numpy (f64 recurrence, f32 result): the delays are
+    folded into the ``w`` side before the collapse, so no scan kernel
+    changes. Exactly all-zero when ``rho_bg == 0`` (the load-0
+    normalization cell); monotone in ``rho_bg``.
+    """
+    n = int(arrivals.shape[0])
+    if dirp.rho_bg <= 0.0 or n == 0:
+        return np.zeros(n, np.float32)
+    e_len = int(dirp.epoch)
+    a = np.asarray(arrivals, np.float64)
+    starts = a[::e_len]
+    ends = np.concatenate([starts[1:], a[-1:] + cluster.cycle_ns])
+    span = np.maximum(ends - starts, cluster.cycle_ns)
+    tx = np.add.reduceat(np.asarray(tx_mask, np.float64),
+                         np.arange(0, n, e_len))
+    s_dir = float(cluster.dram_lat_ns)
+    own = tx * s_dir / dirp.buckets
+    bg = float(dirp.rho_bg) * span
+    x = own + bg - span
+    cs = np.cumsum(x)
+    backlog = cs - np.minimum(np.minimum.accumulate(cs), 0.0)
+    b_prev = np.concatenate([[0.0], backlog[:-1]])
+    rho = np.minimum((own + bg) / span, 0.95)
+    wq = rho * s_dir / (2.0 * (1.0 - rho))
+    d_e = (b_prev + wq) * congestion
+    delay = np.repeat(d_e, e_len)[:n]
+    return np.where(tx_mask, delay, 0.0).astype(np.float32)
+
+
 def _make_cell_arrays(workload: str, n_stores: int, seed: int,
                       cluster: ClusterConfig, nr: int, bw: float,
                       replicating: bool, coalesce_on: bool,
-                      contention: Optional[ContentionParams] = None
+                      contention: Optional[ContentionParams] = None,
+                      directory: Optional[DirectoryParams] = None
                       ) -> _CellArrays:
     wl = WORKLOADS[workload]
     trace = _trace_cached(workload, n_stores, seed, cluster)
@@ -526,6 +621,16 @@ def _make_cell_arrays(workload: str, n_stores: int, seed: int,
         t_repl_i = t_repl_i + flush
         svc_i = (svc_i + flush).astype(np.float32)
 
+    if directory is not None:
+        # the level-2 (per-epoch service-rate) recurrence: the shared
+        # directory shard's queueing delay rides the w side exactly
+        # like the contention backoff -- zero rows at load 0, so the
+        # normalization cell stays bit-identical to the axis-off cell.
+        dir_delay = _directory_delay_row(
+            np.asarray(trace["arrivals"], np.float32),
+            ~np.asarray(coalesce, bool), directory, cluster, congestion)
+        exposed = exposed + dir_delay
+
     return _CellArrays(
         coalesce=np.asarray(coalesce, bool),
         exposed=np.asarray(exposed, np.float32),
@@ -540,21 +645,58 @@ def _make_cell_arrays(workload: str, n_stores: int, seed: int,
 def _cell_arrays(workload: str, n_stores: int, seed: int,
                  cluster: ClusterConfig, nr: int, bw: float,
                  replicating: bool, coalesce_on: bool,
-                 contention: Optional[ContentionParams] = None
+                 contention: Optional[ContentionParams] = None,
+                 directory: Optional[DirectoryParams] = None
                  ) -> _CellArrays:
     """Memoized :func:`_make_cell_arrays` on the *reduced* key.
 
     The per-store arrays depend on the spec only through ``(workload,
     seed, n_replicas, link_bw, replicating-config?, coalescing
-    effective?, contention)`` -- NOT on ``config`` itself (beyond the
-    replicating / wt-coalescing classes), ``sb_size`` or ``n_cns``. On
-    a mega-grid whose axes include config/SB/CN sweeps, one derivation
-    therefore serves many cells; the bound (:data:`_CELL_ARRAY_CACHE`)
-    keeps pinned host memory at ~16 bytes x n_stores per entry."""
+    effective?, contention, directory)`` -- NOT on ``config`` itself
+    (beyond the replicating / wt-coalescing classes), ``sb_size`` or
+    ``n_cns`` (the directory coupling sees the CN count only through
+    the already-resolved :class:`DirectoryParams`). On a mega-grid
+    whose axes include config/SB/CN sweeps, one derivation therefore
+    serves many cells; the bound (:data:`_CELL_ARRAY_CACHE`) keeps
+    pinned host memory at ~16 bytes x n_stores per entry."""
     key = (workload, n_stores, seed, cluster, nr, bw, replicating,
-           coalesce_on, contention)
+           coalesce_on, contention, directory)
     return _CELL_ARRAY_CACHE.get_or_put(
         key, lambda: _make_cell_arrays(*key))
+
+
+def _resolve_coupling(spec: ScenarioSpec, cluster: ClusterConfig
+                      ) -> Tuple[Optional[ContentionParams],
+                                 Optional[DirectoryParams]]:
+    """Resolve one cell's shared-resource coupling, canonically.
+
+    The SINGLE resolution point for both the per-store data
+    (:func:`_prepare_cell`) and the dedup keys (:func:`_plane_keys`),
+    so the two cannot drift. Returns ``(contention, directory)``:
+
+    * WB/WT commit locally without a directory transaction, so both
+      components are ``None`` (their constant bank rows survive any
+      coupling axis);
+    * active contention gets the **directory-derived** sharer census:
+      ``sharer_pool(n_cns, n_replicas)`` when ``read_share > 0`` (the
+      small-cluster overcount bugfix -- never more than ``n_cns - 1``
+      peers), canonical 0 when ``read_share == 0`` (the census is
+      identically zero either way, so the CN weak-scaling axis keeps
+      sharing lanes);
+    * ``directory_load`` resolves through
+      :func:`~repro.core.directory.resolve_directory_load`.
+    """
+    if spec.config not in _REPLICATING:
+        return None, None
+    nr = cluster.n_replicas if spec.n_replicas is None else spec.n_replicas
+    ncn = cluster.n_cns if spec.n_cns is None else spec.n_cns
+    con = spec.contention()
+    if con is not None:
+        pool = sharer_pool(ncn, nr) if con.read_share > 0.0 else 0
+        if pool != con.sharer_pool:
+            con = dataclasses.replace(con, sharer_pool=pool)
+    dirp = resolve_directory_load(spec.directory_load, ncn, nr)
+    return con, dirp
 
 
 # ---------------------------------------------------------------------------
@@ -573,10 +715,14 @@ def _plane_keys(spec: ScenarioSpec, cluster: ClusterConfig
     so their key is just the rule name; the replicating rules depend on
     the reduced derivation knobs but NOT on ``sb_size`` / ``n_cns`` --
     the same reduction :func:`_cell_arrays` exploits, now visible to
-    the device data plane. Active contention axes append their resolved
-    :class:`ContentionParams` as a 7th key component; all-``None`` axes
-    append NOTHING, so legacy grids keep byte-identical keys (and
-    therefore identical bank rows -- no dedup churn)."""
+    the device data plane. Active coupling axes append their resolved
+    params (via :func:`_resolve_coupling`) in fixed order --
+    :class:`ContentionParams` first, then
+    :class:`~repro.core.directory.DirectoryParams` -- so coupled cells
+    sharing a (shard, epoch-profile) still dedup to one row / lane;
+    all-``None`` axes append NOTHING, so legacy grids keep
+    byte-identical keys (and therefore identical bank rows -- no dedup
+    churn)."""
     trace_key = (spec.workload, spec.seed)
     if spec.config in ("wb", "wt"):
         return trace_key, (spec.config,)
@@ -585,8 +731,12 @@ def _plane_keys(spec: ScenarioSpec, cluster: ClusterConfig
         else spec.link_bw_gbps
     wv_key = (spec.config, spec.workload, spec.seed, nr, bw,
               spec.coalescing)
-    con = spec.contention()
-    return trace_key, (wv_key if con is None else wv_key + (con,))
+    con, dirp = _resolve_coupling(spec, cluster)
+    if con is not None:
+        wv_key = wv_key + (con,)
+    if dirp is not None:
+        wv_key = wv_key + (dirp,)
+    return trace_key, wv_key
 
 
 def _make_wv_row(wv_key: tuple, n_stores: int, cluster: ClusterConfig
@@ -607,9 +757,17 @@ def _make_wv_row(wv_key: tuple, n_stores: int, cluster: ClusterConfig
         w = np.full(n_stores, t_l1 if config == "wb" else t_wt, np.float32)
         return w, w, np.zeros(n_stores, bool)
     _, workload, seed, nr, bw, coalescing = wv_key[:6]
-    con = wv_key[6] if len(wv_key) > 6 else None
+    # trailing coupling components are typed, not positional: a key may
+    # carry contention, directory params, both (contention first), or
+    # neither -- see _plane_keys
+    con = dirp = None
+    for extra in wv_key[6:]:
+        if isinstance(extra, ContentionParams):
+            con = extra
+        elif isinstance(extra, DirectoryParams):
+            dirp = extra
     arr = _cell_arrays(workload, n_stores, seed, cluster, nr, bw, True,
-                       coalescing, contention=con)
+                       coalescing, contention=con, directory=dirp)
     if config == "baseline":
         w = np.where(arr.coalesce, t_l1, arr.exposed + arr.t_repl_i)
         return w, w, np.zeros(n_stores, bool)
@@ -765,14 +923,16 @@ def _prepare_cell(spec: ScenarioSpec, trace: Dict[str, np.ndarray],
     sb = cluster.store_buffer if spec.sb_size is None else spec.sb_size
     replicating = config in _REPLICATING
 
-    # contention only contends the directory/replication transactions of
-    # the replicating configs (WB/WT commit locally on the modeled
-    # path), keeping the WB normalization baseline -- and the constant
-    # WB/WT bank rows -- unchanged; see _plane_keys.
-    con = spec.contention() if replicating else None
+    # contention and directory coupling only touch the directory/
+    # replication transactions of the replicating configs (WB/WT commit
+    # locally on the modeled path), keeping the WB normalization
+    # baseline -- and the constant WB/WT bank rows -- unchanged;
+    # _resolve_coupling is shared with _plane_keys so the per-store
+    # data and the dedup keys cannot drift.
+    con, dirp = _resolve_coupling(spec, cluster)
     arr = _cell_arrays(spec.workload, n_stores, spec.seed, cluster, nr, bw,
                        replicating, spec.coalescing and config != "wt",
-                       contention=con)
+                       contention=con, directory=dirp)
 
     # --- scaling with CN count: fewer CNs -> each runs more of the fixed
     # total work (weak scaling of the cluster as in Fig. 18).
@@ -1236,7 +1396,8 @@ def simulate(workload: str, config: str,
              coalescing: bool = True,
              read_share: Optional[float] = None,
              conflict_rate: Optional[float] = None,
-             consistency_schedule: Optional[str] = None) -> SimResult:
+             consistency_schedule: Optional[str] = None,
+             directory_load: Optional[float] = None) -> SimResult:
     """Simulate one (workload, config) pair on one compute node.
 
     All sensitivity knobs of Figs. 16-18 are exposed as overrides
@@ -1244,16 +1405,18 @@ def simulate(workload: str, config: str,
     GB/s, ``n_cns`` compute-node count, ``sb_size`` store-buffer
     entries), as are the contention axes (``read_share`` /
     ``conflict_rate`` / ``consistency_schedule`` -- see
-    ``repro.core.contention``). This is the serial oracle the batched
-    engines are differentially tested against; returns a
-    :class:`SimResult` (times in ns, log sizes in bytes, bandwidths in
-    GB/s).
+    ``repro.core.contention``) and the directory-coupling axis
+    (``directory_load`` -- see ``repro.core.directory``). This is the
+    serial oracle the batched engines are differentially tested
+    against; returns a :class:`SimResult` (times in ns, log sizes in
+    bytes, bandwidths in GB/s).
     """
     spec = ScenarioSpec(workload, config, seed=seed, n_replicas=n_replicas,
                         link_bw_gbps=link_bw_gbps, n_cns=n_cns,
                         sb_size=sb_size, coalescing=coalescing,
                         read_share=read_share, conflict_rate=conflict_rate,
-                        consistency_schedule=consistency_schedule)
+                        consistency_schedule=consistency_schedule,
+                        directory_load=directory_load)
     spec.validate(cluster)
     trace = _trace_cached(workload, n_stores, seed, cluster)
     cell = _prepare_cell(spec, trace, n_stores, cluster)
@@ -1283,7 +1446,8 @@ def simulate_spec(spec: ScenarioSpec,
                     sb_size=spec.sb_size, coalescing=spec.coalescing,
                     read_share=spec.read_share,
                     conflict_rate=spec.conflict_rate,
-                    consistency_schedule=spec.consistency_schedule)
+                    consistency_schedule=spec.consistency_schedule,
+                    directory_load=spec.directory_load)
 
 
 def _pad_len(n: int, mult: int = 8) -> int:

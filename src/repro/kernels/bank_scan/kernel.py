@@ -19,6 +19,12 @@ bit-identical to ``ref.py`` and the serial oracle.
 The store axis is padded to a chunk multiple by the ops wrapper; padded
 positions are masked by the static ``length`` (they update nothing --
 the history slots they touch are never read again).
+
+Coupled axes never reach this kernel as extra operands: contention
+stalls and the two-level directory recurrence's epoch delays are
+precollapsed into ``w_bank`` rows on the host, so a queueing-coupled
+mega-grid runs the exact same kernel on more (or the same, when cells
+dedup) bank rows.
 """
 
 from __future__ import annotations

@@ -9,7 +9,11 @@ Inputs are the store-contiguous :class:`~repro.core.simulator.TraceBank`
 rows: ``a_bank (T, n)`` arrivals, ``w_bank / v_bank (P, n)`` the
 precollapsed max-plus terms, ``p_bank (P, n)`` the proactive
 non-coalesced (Fig. 11 REPL-at-head candidate) mask, plus per-cell
-``int32`` row indices. The recurrence per store ``i`` of cell ``b``::
+``int32`` row indices. "Precollapsed" includes every host-side
+coupling the simulator folds into the ``w`` side -- contention stalls
+and the level-2 directory-epoch delays of the two-level recurrence
+alike -- so the kernel contract (and its arithmetic) is axis-agnostic:
+a directory-coupled wv row scans through the identical code path. The recurrence per store ``i`` of cell ``b``::
 
     r_i = max(a_i, c_{i-sb})          # retire waits for a free SB slot
     c_i = max(r_i + w_i, c_{i-1} + v_i)

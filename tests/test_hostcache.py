@@ -1,0 +1,129 @@
+"""Thread-safety of the shared host-side memo (hostcache.BoundedCache).
+
+The streaming engine mutates the simulator / contention memos from its
+prefetch and compile-warm worker threads concurrently with the caller's
+thread. The contract:
+
+* ``get_or_put`` builds each key's value EXACTLY once, no matter how
+  many threads race on it (device-resident values must not be built
+  twice, and a torn ``OrderedDict`` corrupts every later lookup);
+* the LRU bound holds under concurrent inserts;
+* ``clear()`` racing ``get_or_put`` never corrupts the dict (values may
+  be rebuilt after a clear -- that is the point of clearing);
+* nested get_or_put across two caches (cell arrays pull trace rows)
+  and same-cache re-entrancy (RLock) both work from worker threads.
+
+Run under ``PYTHONDEVMODE=1`` in the CI thread-safety job.
+"""
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.core.hostcache import BoundedCache
+
+
+def test_single_make_per_key_under_contention():
+    cache = BoundedCache(maxsize=256)
+    calls = []
+    barrier = threading.Barrier(8)
+
+    def worker(tid):
+        barrier.wait()
+        out = []
+        for rep in range(200):
+            key = rep % 32
+            val = cache.get_or_put(key, lambda k=key: calls.append(k)
+                                   or ("value", k))
+            out.append((key, val))
+        return out
+
+    with ThreadPoolExecutor(max_workers=8) as ex:
+        results = [f.result() for f in
+                   [ex.submit(worker, t) for t in range(8)]]
+
+    assert len(calls) == 32, "make() ran more than once for some key"
+    assert sorted(calls) == list(range(32))
+    for out in results:
+        for key, val in out:
+            assert val == ("value", key), "corrupted value under races"
+    assert len(cache) == 32
+    assert cache.misses == 32
+    assert cache.hits == 8 * 200 - 32
+
+
+def test_lru_bound_holds_under_concurrent_inserts():
+    cache = BoundedCache(maxsize=16)
+
+    def worker(tid):
+        for i in range(500):
+            cache.get_or_put((tid, i), lambda: i)
+
+    with ThreadPoolExecutor(max_workers=8) as ex:
+        for f in [ex.submit(worker, t) for t in range(8)]:
+            f.result()
+    assert len(cache) <= 16
+
+
+def test_clear_races_get_or_put():
+    cache = BoundedCache(maxsize=64)
+    stop = threading.Event()
+    errors = []
+
+    def churn():
+        i = 0
+        try:
+            while not stop.is_set():
+                v = cache.get_or_put(i % 40, lambda k=i % 40: ("v", k))
+                assert v == ("v", i % 40)
+                i += 1
+        except Exception as e:        # pragma: no cover - failure path
+            errors.append(e)
+
+    def clearer():
+        try:
+            while not stop.is_set():
+                cache.clear()
+        except Exception as e:        # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=churn) for _ in range(4)]
+    threads.append(threading.Thread(target=clearer))
+    for t in threads:
+        t.start()
+    stop_timer = threading.Timer(0.5, stop.set)
+    stop_timer.start()
+    for t in threads:
+        t.join()
+    stop_timer.cancel()
+    assert not errors, errors
+    assert len(cache) <= 64
+
+
+def test_nested_and_reentrant_get_or_put():
+    outer = BoundedCache(maxsize=8)
+    inner = BoundedCache(maxsize=8)
+
+    def make_outer(key):
+        # cross-cache nesting: cell arrays pull trace rows
+        row = inner.get_or_put(("trace", key), lambda: key * 2)
+        # same-cache re-entrancy: RLock must not deadlock
+        base = outer.get_or_put(("base",), lambda: 100)
+        return row + base
+
+    with ThreadPoolExecutor(max_workers=4) as ex:
+        vals = [f.result() for f in
+                [ex.submit(lambda k=k: outer.get_or_put(
+                    k, lambda: make_outer(k))) for k in range(4)]]
+    assert vals == [100, 102, 104, 106]
+    assert len(inner) == 4
+
+
+def test_sim_caches_are_bounded_caches():
+    """The simulator / contention memos actually use this primitive
+    (the engine's worker threads rely on it)."""
+    from repro.core import contention as C
+    from repro.core import simulator as S
+    for cache in (S._CELL_ARRAY_CACHE, S._WV_ROW_CACHE, S._BANK_CACHE,
+                  C._DRAW_CACHE, C._DELAY_CACHE):
+        assert isinstance(cache, BoundedCache)
+        assert cache._lock is not None
