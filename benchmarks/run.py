@@ -19,6 +19,12 @@ Sections:
                 max-plus recurrence): geomean slowdown vs offered load,
                 oracle bit-identity and lane dedup on the streaming
                 directory mega-grid (benchmarks/bench_directory.py)
+  serve/latency/*  scenario-serving daemon (repro.core.serving):
+                p50/p99 query latency, throughput, lane-cache hit
+                ratio, steady-state compile count (must be 0) and the
+                marginal h2d bytes of incremental bank diffs vs a cold
+                full-bank upload (benchmarks/bench_serving.py;
+                see docs/serving.md)
   framework/*   jitted step wall times per ReCXL variant, Logging-Unit op
                 latencies, log-compressor throughput
   roofline/*    per (arch x shape) single-pod roofline terms from the
@@ -117,10 +123,12 @@ def main() -> None:
 
     from benchmarks.bench_contention import bench_contention
     from benchmarks.bench_directory import bench_directory
+    from benchmarks.bench_serving import bench_serving
     from benchmarks.protocol_benches import ALL_PROTOCOL_BENCHES
 
     benches = list(ALL_PROTOCOL_BENCHES) + [bench_contention,
-                                            bench_directory]
+                                            bench_directory,
+                                            bench_serving]
     if not quick:
         from benchmarks.framework_benches import ALL_FRAMEWORK_BENCHES
         benches += ALL_FRAMEWORK_BENCHES

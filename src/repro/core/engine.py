@@ -379,6 +379,15 @@ def _tile_fn(sig: TileSignature) -> Callable:
     return fn
 
 
+#: Public alias of the signature-keyed tile-program cache lookup. The
+#: scenario-serving daemon (``repro.core.serving``) batches queries
+#: into the SAME canonical tile shapes as the streaming engine and
+#: calls the programs through this entry, so steady-state serving adds
+#: zero compiles beyond the signatures :func:`warm_signatures` warmed
+#: (``trace_count()`` counts serve-path traces too -- tests pin it).
+tile_fn = _tile_fn
+
+
 @register_cache_clearer
 def _clear_engine_caches() -> None:
     _TILE_FNS.clear()
@@ -459,13 +468,15 @@ def _place_bank(bank: TraceBank, n_shards: int) -> Tuple[int, tuple]:
     return bank.device_args(("cells", n_shards), place)
 
 
-def _warm_signatures(sigs: List[TileSignature], t_l1, t_wt,
-                     bank_dev: Optional[tuple] = None) -> None:
+def warm_signatures(sigs: List[TileSignature], t_l1, t_wt,
+                    bank_dev: Optional[tuple] = None) -> None:
     """Compile every distinct tile program with zero inputs (runs on the
     compile thread, so XLA compilation -- which releases the GIL --
     overlaps the first tiles' host prep and device compute; jax's
     per-program lock keeps a racing main-thread call from compiling the
-    same program twice).
+    same program twice). Public: the scenario-serving daemon's warm
+    pool calls it at startup against its own device-resident bank, so
+    the first live query never pays a compile.
 
     Warming MUST go through a real call: on the jax versions this repo
     targets (0.4.x), AOT ``jit(f).lower(shapes).compile()`` does not
@@ -492,6 +503,9 @@ def _warm_signatures(sigs: List[TileSignature], t_l1, t_wt,
                 np.zeros((sig.b_pad,), np.int32),
                 np.full((sig.b_pad,), sig.sb_uniform, np.int32))
         _tile_fn(sig)(*_place_tile(args, sig), t_l1, t_wt)
+
+
+_warm_signatures = warm_signatures        # internal alias (streaming loop)
 
 
 def _stacked_tile_bytes(sig: TileSignature) -> int:

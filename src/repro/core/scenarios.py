@@ -249,6 +249,24 @@ def grid_bank(specs: Sequence[ScenarioSpec],
     return get_trace_bank(specs, n_stores, cluster)
 
 
+def grid_delta(base: Sequence[ScenarioSpec],
+               **axes) -> List[ScenarioSpec]:
+    """The cells of a sweep that are NOT already in ``base``.
+
+    The query->cell translation for the serving daemon's *grid delta*
+    requests ("extend my sweep by these axis values"): ``axes`` are
+    :func:`sweep_grid` keyword axes describing the requested
+    cross-product, and the return value is its cells minus the ones
+    ``base`` already contains, in sweep order. Feeding the result to
+    :meth:`repro.core.serving.ScenarioServer.query_batch` appends only
+    the genuinely new bank rows (the incremental-diff upload path);
+    ``base + grid_delta(base, **axes)`` is the merged grid whose
+    from-scratch bank the extended bank stays byte-identical to.
+    """
+    have = set(base)
+    return [s for s in sweep_grid(**axes) if s not in have]
+
+
 # ---------------------------------------------------------------------------
 # Recovery-time sweeps: downtime over a failure-time x node grid (SS VII-E)
 # ---------------------------------------------------------------------------
@@ -352,6 +370,47 @@ def recovery_sweep(workloads: Sequence[str] = tuple(WORKLOADS),
     return RecoverySweep(workloads=workloads, fail_times_ms=fail_times_ms,
                          cn_counts=cn_counts, total_ns=comps.pop("total_ns"),
                          components=comps)
+
+
+def downtime_query(workload: str, fail_time_ms: float,
+                   n_cns: Optional[int] = None,
+                   n_replicas: Optional[int] = None,
+                   link_bw_gbps: Optional[float] = None,
+                   cluster: ClusterConfig = PAPER_CLUSTER,
+                   params: RecoveryTimeParams = DEFAULT_RECOVERY_PARAMS,
+                   read_share: Optional[float] = None,
+                   conflict_rate: Optional[float] = None,
+                   consistency_schedule: Optional[str] = None,
+                   directory_load: Optional[float] = None
+                   ) -> RecoveryEstimate:
+    """One "what's my downtime if ..." cell of the SS VII-E model.
+
+    The single-cell counterpart of :func:`recovery_sweep` and the
+    query->estimate translation the serving daemon's recovery queries
+    go through (:meth:`repro.core.serving.ScenarioServer.query_downtime`
+    delegates here, so the daemon and the batched sweep cannot drift):
+    the same contention scaling of the crash-exposed volumes and the
+    same ``directory_load`` dilation of the walk phase, evaluated
+    closed-form for one (workload, failure time, cluster shape) point.
+    ``None`` knobs resolve to the ``cluster`` defaults, as on
+    :class:`~repro.core.simulator.ScenarioSpec`.
+    """
+    from repro.core.contention import resolve_contention
+    from repro.core.directory import (directory_service_scale,
+                                      resolve_directory_load)
+
+    contention = resolve_contention(read_share, conflict_rate,
+                                    consistency_schedule)
+    ncn = cluster.n_cns if n_cns is None else n_cns
+    nr = cluster.n_replicas if n_replicas is None else n_replicas
+    owned, undumped = workload_recovery_inputs(
+        workload, fail_time_ms, cluster=cluster, n_cns=ncn, n_replicas=nr,
+        params=params, contention=contention)
+    scale = directory_service_scale(
+        resolve_directory_load(directory_load, ncn, nr))
+    return estimate_recovery_time(owned, undumped, cluster=cluster,
+                                  link_bw_gbps=link_bw_gbps, params=params,
+                                  dir_service_scale=scale)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,513 @@
+"""Scenario-serving daemon: the engine as a long-lived service.
+
+Every batch tier (``simulate_batch``, ``run_grid``) is call-oriented:
+one grid in, results out, state dropped. The ROADMAP's north star is
+the opposite shape -- millions of small "what if" queries against ONE
+persistent platform, the way the paper's SS VIII evaluation amortizes
+one cluster model across many workload x config x failure-time points.
+:class:`ScenarioServer` is that layer: a stateful, latency-oriented
+daemon over the banked engine that keeps everything expensive resident
+and makes the marginal query cost proportional to what is genuinely
+new about it.
+
+How a query is served (docs/serving.md has the lifecycle diagram):
+
+1. **Lane cache.** A query resolves to its scan lane -- ``(SB depth,
+   trace row, max-plus row)``, via ``simulator._plane_keys``, the same
+   dedup key the streaming engine scans by. If the lane was ever
+   scanned before (by any earlier query or the warm grid), the answer
+   is pure host math over the cached lane outputs: no device work, no
+   upload, bit-identical to a cold run because ``_finish_result`` is
+   the same code every other tier ends with.
+
+2. **Incremental bank diffs.** A miss extends the server's
+   :class:`~repro.core.simulator.TraceBank` in place
+   (:meth:`TraceBank.extend` -- append-only, first-seen order, so the
+   grown bank stays byte-identical to a from-scratch build of the
+   merged grid) and ships ONLY the appended rows host->device: the
+   device bank is **capacity-padded** (rows rounded up to
+   :data:`SERVE_ROW_PAD`), so in-capacity appends splice the new rows
+   into the resident buffers without changing the array shapes.
+
+3. **Canonical batching.** Miss lanes are grouped and padded by
+   ``engine.plan_tiles(small_pad=False)`` into the SAME canonical
+   SB-uniform tile shapes the streaming engine compiles, and executed
+   through ``engine.tile_fn`` -- so the compiled-program cache, the
+   ``trace_count()`` accounting and the capacity-shape trick together
+   give **zero new compiles in steady state**: once :meth:`warm` has
+   compiled the (SB x capacity-shape) signatures, novel queries reuse
+   them verbatim (tests/test_serving.py pins this at 100 mixed
+   queries).
+
+4. **Async batching window.** :meth:`submit` enqueues a query and
+   returns a ``Future``; a daemon thread coalesces everything arriving
+   within ``batch_window_ms`` (or up to ``batch_cells``) into one
+   flush, so concurrent callers share tiles instead of paying one
+   dispatch each.
+
+Recovery questions ("what's my downtime if CN 3 dies mid-interval?")
+bypass the store-level scan entirely: :meth:`query_downtime` delegates
+to the closed-form SS VII-E model via
+:func:`repro.core.scenarios.downtime_query`.
+
+Thread safety: all serve state is guarded by one re-entrant lock, and
+the shared host memos the flush path touches (`_trace_cached`,
+`_cell_arrays`, `_wv_row`) are the PR-6 thread-safe caches. A racing
+``clear_sim_caches()`` may drop compiled tile programs (the next flush
+recompiles) and host memos (rebuilt on demand), but never the server's
+bank handle or lane cache -- answers stay bit-identical throughout
+(tests/test_serving.py races exactly this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.recxl_paper import ClusterConfig, PAPER_CLUSTER
+from repro.core import engine as _engine
+from repro.core.recovery import RecoveryEstimate
+from repro.core.scenarios import downtime_query, sweep_grid
+from repro.core.simulator import (
+    ScenarioSpec,
+    SimResult,
+    _commit_cost_ns,
+    _finish_result,
+    _plane_keys,
+    _prepare_cell,
+    _trace_cached,
+    get_trace_bank,
+)
+from repro.distributed.context import cells_mesh
+from repro.distributed.sharding import bank_shardings
+
+#: Device-bank rows are padded up to the next multiple of this (with at
+#: least one full spare block of headroom), so appending a novel
+#: query's rows keeps the resident arrays' SHAPES -- and therefore the
+#: tile signatures and compiled programs -- unchanged. 256 rows of
+#: headroom absorb thousands of single-row queries between the (rare,
+#: recompiling) capacity growths.
+SERVE_ROW_PAD = 256
+
+#: Default cells per serve tile: small enough that a single query's
+#: flush stays cheap (the other ``b_pad - 1`` lanes are padding), large
+#: enough that a burst amortizes one dispatch across many lanes.
+SERVE_BATCH_CELLS = 64
+
+
+def _row_capacity(rows: int, pad: int) -> int:
+    """Smallest multiple of ``pad`` that is STRICTLY greater than
+    ``rows`` -- the strict inequality guarantees spare rows, so a
+    freshly-grown bank can always absorb at least one more append
+    before the next capacity step."""
+    return (rows // pad + 1) * pad
+
+
+def _pad_rows(col: np.ndarray, cap: int) -> np.ndarray:
+    """``col`` zero-padded along axis 0 to ``cap`` rows."""
+    out = np.zeros((cap,) + col.shape[1:], col.dtype)
+    out[:col.shape[0]] = col
+    return out
+
+
+class ScenarioServer:
+    """Persistent in-process scenario-query daemon over the banked engine.
+
+    Synchronous entry points (:meth:`query`, :meth:`query_batch`,
+    :meth:`query_grid`, :meth:`query_downtime`) serve in the caller's
+    thread; :meth:`submit` returns a ``concurrent.futures.Future`` and
+    lets the daemon thread batch concurrent queries within
+    ``batch_window_ms``. Every protocol answer is bit-identical
+    (``==`` on every physics field) to the cold
+    ``simulate_grid``/``simulate_spec`` oracle for the same spec --
+    the server only ever reorganizes *which compiled program computes
+    which lane when*, never the arithmetic.
+
+    ``batch_cells`` is the canonical serve-tile size (every flush pads
+    to it -- one compiled program per store-buffer depth);
+    ``row_pad`` the device-bank capacity quantum (:data:`SERVE_ROW_PAD`);
+    ``n_shards`` > 1 shards flush tiles over the ``cells`` mesh exactly
+    like the streaming engine (bank replicated, indices sharded).
+    Use as a context manager or call :meth:`close` to stop the daemon
+    thread; a closed server still answers synchronous queries.
+    """
+
+    def __init__(self, cluster: ClusterConfig = PAPER_CLUSTER,
+                 n_stores: int = 50_000,
+                 batch_cells: int = SERVE_BATCH_CELLS,
+                 batch_window_ms: float = 2.0,
+                 chunk_size: Optional[int] = None,
+                 n_shards: int = 1,
+                 row_pad: int = SERVE_ROW_PAD):
+        n_dev = len(jax.devices())
+        if not 1 <= n_shards <= n_dev:
+            raise ValueError(f"n_shards must be in [1, {n_dev}], "
+                             f"got {n_shards}")
+        if batch_cells < 1:
+            raise ValueError(f"batch_cells must be >= 1, got {batch_cells}")
+        if row_pad < 1:
+            raise ValueError(f"row_pad must be >= 1, got {row_pad}")
+        self.cluster = cluster
+        self.n_stores = int(n_stores)
+        self.batch_cells = int(batch_cells)
+        self.batch_window_ms = float(batch_window_ms)
+        self.chunk_size = chunk_size
+        self.n_shards = int(n_shards)
+        self.row_pad = int(row_pad)
+
+        # serve state (all guarded by _lock)
+        self._lock = threading.RLock()
+        self._bank = None                               # TraceBank handle
+        self._dev: Optional[tuple] = None               # capacity arrays
+        self._cap: Tuple[int, int] = (0, 0)             # device capacity
+        self._dev_rows: Tuple[int, int] = (0, 0)        # real rows resident
+        self._lanes: Dict[tuple, Tuple[np.floating, int, int]] = {}
+        self._sigs: Set[_engine.TileSignature] = set()
+        self._stats: Dict[str, int] = {
+            "queries": 0, "lane_hits": 0, "lane_misses": 0,
+            "scanned_lanes": 0, "flushes": 0, "batches": 0,
+            "h2d_bytes": 0, "bank_uploads": 0, "bank_builds": 0,
+            "appended_trace_rows": 0, "appended_wv_rows": 0,
+            "compiled_programs": 0, "downtime_queries": 0,
+        }
+
+        # async queue (guarded by _cond; the worker serves via the
+        # synchronous path, so _cond is never held across device work)
+        self._cond = threading.Condition()
+        self._queue: Deque[Tuple[ScenarioSpec, Future]] = deque()
+        self._worker: Optional[threading.Thread] = None
+        self._closed = False
+
+    # -- context manager ---------------------------------------------------
+
+    def __enter__(self) -> "ScenarioServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Stop the daemon thread after draining pending submissions.
+        Synchronous queries still work on a closed server; further
+        :meth:`submit` calls raise."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+            worker = self._worker
+        if worker is not None:
+            worker.join()
+
+    # -- query -> lane plumbing -------------------------------------------
+
+    def _lane_key(self, spec: ScenarioSpec) -> tuple:
+        sb = spec.sb_size if spec.sb_size is not None \
+            else self.cluster.store_buffer
+        return (sb,) + _plane_keys(spec, self.cluster)
+
+    def _ensure_bank(self, specs: Sequence[ScenarioSpec]) -> None:
+        """First call adopts the digest-memoized grid bank (shared with
+        any engine sweeping the same grid); later calls append-extend
+        it. The server keeps its own handle, so a racing
+        ``clear_sim_caches()`` never forces a rebuild."""
+        if self._bank is None:
+            self._bank = get_trace_bank(specs, self.n_stores, self.cluster)
+            self._stats["bank_builds"] += 1
+            return
+        nt, nw = self._bank.extend(specs)
+        self._stats["appended_trace_rows"] += nt
+        self._stats["appended_wv_rows"] += nw
+
+    def _place_rows(self, host: tuple) -> tuple:
+        if self.n_shards == 1:
+            return tuple(jnp.asarray(x) for x in host)
+        # replicate over the cells mesh the way _place_bank does: one
+        # host->device crossing to device 0, fabric copies to the rest
+        mesh = cells_mesh(self.n_shards)
+        staged = jax.device_put(host, jax.devices()[0])
+        sharding = bank_shardings(mesh)[0]
+        return tuple(jax.device_put(x, sharding) for x in staged)
+
+    def _splice(self, dev, rows: np.ndarray, r0: int):
+        """Splice ``rows`` into the capacity array at row ``r0``
+        device-side (the only host->device bytes are ``rows`` itself;
+        the surrounding capacity rows never recross the link)."""
+        delta = self._place_rows((np.ascontiguousarray(rows),))[0]
+        return jnp.concatenate([dev[:r0], delta, dev[r0 + rows.shape[0]:]],
+                               axis=0)
+
+    def _sync_device(self) -> int:
+        """Bring the capacity-padded device bank up to date with the
+        host bank. Returns the bytes that crossed host->device: the
+        whole padded bank on first placement or a capacity growth, just
+        the appended row slices otherwise."""
+        bank = self._bank
+        t, p = bank.trace_rows, bank.wv_rows
+        t_cap = _row_capacity(t, self.row_pad)
+        p_cap = _row_capacity(p, self.row_pad)
+        if self._dev is None or t_cap > self._cap[0] or p_cap > self._cap[1]:
+            cap = (max(t_cap, self._cap[0]), max(p_cap, self._cap[1]))
+            host = (_pad_rows(bank.arrivals, cap[0]),
+                    _pad_rows(bank.w, cap[1]),
+                    _pad_rows(bank.v, cap[1]),
+                    _pad_rows(bank.pr_nc, cap[1]))
+            self._dev = self._place_rows(host)
+            self._cap = cap
+            self._dev_rows = (t, p)
+            self._stats["bank_uploads"] += 1
+            return sum(int(x.nbytes) for x in host)
+        h2d = 0
+        a, w, v, pnc = self._dev
+        t0, p0 = self._dev_rows
+        if t > t0:
+            a = self._splice(a, bank.arrivals[t0:t], t0)
+            h2d += int(bank.arrivals[t0:t].nbytes)
+        if p > p0:
+            w = self._splice(w, bank.w[p0:p], p0)
+            v = self._splice(v, bank.v[p0:p], p0)
+            pnc = self._splice(pnc, bank.pr_nc[p0:p], p0)
+            h2d += int(bank.w[p0:p].nbytes + bank.v[p0:p].nbytes
+                       + bank.pr_nc[p0:p].nbytes)
+        if h2d:
+            self._dev = (a, w, v, pnc)
+            self._dev_rows = (t, p)
+        return h2d
+
+    def _serve_sigs(self, lane_specs: Sequence[ScenarioSpec]
+                    ) -> List[Tuple[_engine.Tile, _engine.TileSignature]]:
+        """Plan miss lanes into canonical serve tiles: the streaming
+        engine's own scheduler at the serve-tile size, retargeted at
+        the banked plane with the CAPACITY shape (the signature the
+        compiled programs are keyed on, stable across in-capacity
+        appends)."""
+        tiles = _engine.plan_tiles(lane_specs, cluster=self.cluster,
+                                   n_stores=self.n_stores,
+                                   chunk_size=self.chunk_size,
+                                   tile_cells=self.batch_cells,
+                                   n_shards=self.n_shards, small_pad=False)
+        return [(t, dataclasses.replace(t.sig, data_plane="bank",
+                                        bank_shape=self._cap))
+                for t in tiles]
+
+    def _scan_lanes(self, miss: Dict[tuple, ScenarioSpec]) -> int:
+        """Scan every miss lane once through ``engine.tile_fn`` and
+        cache its raw outputs. Returns the index-vector h2d bytes."""
+        lane_keys = list(miss)
+        bank = self._bank
+        h2d = 0
+        for tile, sig in self._serve_sigs([miss[k] for k in lane_keys]):
+            rows = [bank.rows_for(s) for s in tile.specs]
+            rows += [rows[0]] * (sig.b_pad - len(rows))
+            idx = (np.asarray([r[0] for r in rows], np.int32),
+                   np.asarray([r[1] for r in rows], np.int32))
+            h2d += idx[0].nbytes + idx[1].nbytes
+            out = _engine.tile_fn(sig)(*self._dev,
+                                       *_engine._place_tile(idx, sig))
+            exec_ns, at_head, sb_full = (np.asarray(o) for o in out)
+            for j, i in enumerate(tile.indices):
+                self._lanes[lane_keys[i]] = (exec_ns[j], int(at_head[j]),
+                                             int(sb_full[j]))
+            self._sigs.add(sig)
+        return h2d
+
+    # -- synchronous serving ----------------------------------------------
+
+    def query(self, spec: ScenarioSpec) -> SimResult:
+        """Serve one scenario cell (bit-identical to the cold oracle)."""
+        return self.query_batch([spec])[0]
+
+    def query_batch(self, specs: Sequence[ScenarioSpec]) -> List[SimResult]:
+        """Serve a batch of cells in one flush, in ``specs`` order.
+
+        Hits are answered from the lane cache; the distinct miss lanes
+        are scanned once through the canonical serve tiles after the
+        bank diff (new rows only) is spliced into the resident device
+        bank. ``SimResult.meta`` records the serve provenance per cell:
+        ``cache`` (``"hit"``/``"miss"``), the flush's marginal
+        ``h2d_bytes``, and the bank geometry that answered it."""
+        specs = list(specs)
+        if not specs:
+            return []
+        for s in specs:
+            s.validate(self.cluster)
+        with self._lock:
+            self._ensure_bank(specs)
+            h2d = self._sync_device()
+            keys = [self._lane_key(s) for s in specs]
+            miss: Dict[tuple, ScenarioSpec] = {}
+            for s, k in zip(specs, keys):
+                if k not in self._lanes:
+                    miss.setdefault(k, s)
+            compiled0 = _engine.trace_count()
+            if miss:
+                h2d += self._scan_lanes(miss)
+            st = self._stats
+            st["queries"] += len(specs)
+            st["lane_misses"] += sum(k in miss for k in keys)
+            st["lane_hits"] += sum(k not in miss for k in keys)
+            st["scanned_lanes"] += len(miss)
+            st["h2d_bytes"] += h2d
+            st["compiled_programs"] += _engine.trace_count() - compiled0
+            st["flushes"] += 1
+            results = []
+            for s, k in zip(specs, keys):
+                exec_ns, at_head, sb_full = self._lanes[k]
+                cell = _prepare_cell(
+                    s, _trace_cached(s.workload, self.n_stores, s.seed,
+                                     self.cluster),
+                    self.n_stores, self.cluster)
+                meta = {"engine": "serving", "data_plane": "bank",
+                        "cache": "miss" if k in miss else "hit",
+                        "h2d_bytes": h2d,
+                        "bank_rows": self._bank.n_rows,
+                        "bank_capacity": self._cap,
+                        "n_shards": self.n_shards}
+                results.append(_finish_result(cell, exec_ns, at_head,
+                                              sb_full, meta=meta))
+            return results
+
+    def query_grid(self, **axes) -> List[SimResult]:
+        """Serve a whole :func:`~repro.core.scenarios.sweep_grid`
+        cross-product (the *grid delta* query shape: cells already
+        served are lane-cache hits, genuinely new cells ride the
+        diff-upload path; :func:`repro.core.scenarios.grid_delta`
+        computes just the novel cells if the caller wants them alone).
+        """
+        return self.query_batch(sweep_grid(**axes))
+
+    def query_downtime(self, workload: str, fail_time_ms: float,
+                       **knobs) -> RecoveryEstimate:
+        """Answer a "what's my downtime if ..." request through the
+        closed-form SS VII-E model (no store-level scan involved);
+        ``knobs`` are :func:`repro.core.scenarios.downtime_query`
+        keywords (``n_cns``, ``n_replicas``, ``link_bw_gbps``, the
+        contention axes, ``directory_load``)."""
+        with self._lock:
+            self._stats["downtime_queries"] += 1
+        return downtime_query(workload, fail_time_ms,
+                              cluster=self.cluster, **knobs)
+
+    # -- warm pool ---------------------------------------------------------
+
+    def warm(self, specs: Sequence[ScenarioSpec],
+             populate: bool = True) -> None:
+        """Make the server hot for a grid: build/extend the bank, place
+        the capacity device bank, and compile every serve-tile program
+        the grid's store-buffer depths need (``engine.warm_signatures``
+        against the resident capacity bank, so warm calls see exactly
+        the live flush shardings). With ``populate=True`` (default) the
+        whole grid is additionally served once, so every lane of it is
+        a cache hit afterwards; ``populate=False`` only compiles."""
+        specs = list(specs)
+        if not specs:
+            return
+        if populate:
+            self.query_batch(specs)
+            return
+        for s in specs:
+            s.validate(self.cluster)
+        with self._lock:
+            self._ensure_bank(specs)
+            self._sync_device()
+            lanes: Dict[tuple, ScenarioSpec] = {}
+            for s in specs:
+                lanes.setdefault(self._lane_key(s), s)
+            sigs = list(dict.fromkeys(
+                sig for _, sig in self._serve_sigs(list(lanes.values()))))
+            costs = _commit_cost_ns("proactive", self.cluster)
+            compiled0 = _engine.trace_count()
+            _engine.warm_signatures(sigs, np.float32(costs["t_l1"]),
+                                    np.float32(costs["t_wt"]),
+                                    bank_dev=self._dev)
+            self._sigs.update(sigs)
+            self._stats["compiled_programs"] += \
+                _engine.trace_count() - compiled0
+
+    # -- async batching ----------------------------------------------------
+
+    def submit(self, spec: ScenarioSpec) -> "Future[SimResult]":
+        """Enqueue one query; the daemon thread coalesces everything
+        arriving within ``batch_window_ms`` (or up to ``batch_cells``
+        entries) into one flush and resolves each Future with its
+        :class:`SimResult`."""
+        spec.validate(self.cluster)
+        fut: Future = Future()
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("ScenarioServer is closed")
+            self._queue.append((spec, fut))
+            if self._worker is None:
+                self._worker = threading.Thread(
+                    target=self._serve_loop, name="scenario-server",
+                    daemon=True)
+                self._worker.start()
+            self._cond.notify_all()
+        return fut
+
+    def _serve_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._closed:
+                    self._cond.wait()
+                if not self._queue:          # closed and drained
+                    return
+                # batching window: linger for stragglers so concurrent
+                # submitters share one flush instead of paying one each
+                deadline = time.monotonic() + self.batch_window_ms / 1e3
+                while (not self._closed
+                       and len(self._queue) < self.batch_cells):
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        break
+                    self._cond.wait(left)
+                batch = list(self._queue)
+                self._queue.clear()
+            with self._lock:
+                self._stats["batches"] += 1
+            try:
+                results = self.query_batch([s for s, _ in batch])
+            except BaseException as e:       # surface to every waiter
+                for _, fut in batch:
+                    if not fut.done():
+                        fut.set_exception(e)
+                continue
+            for (_, fut), res in zip(batch, results):
+                if not fut.done():
+                    fut.set_result(res)
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        """Serve counters plus derived state: ``hit_ratio`` (lane-cache
+        hits over queries), ``lanes_cached``, bank geometry
+        (``bank_rows`` real rows, ``bank_bytes`` -- the cost of one
+        COLD full-bank upload, the baseline the marginal ``h2d_bytes``
+        is measured against -- and ``bank_capacity``), and ``pending``
+        queue depth."""
+        with self._lock:
+            st: Dict[str, object] = dict(self._stats)
+            q = self._stats["queries"]
+            st["hit_ratio"] = self._stats["lane_hits"] / q if q else 0.0
+            st["lanes_cached"] = len(self._lanes)
+            st["bank_rows"] = self._bank.n_rows if self._bank else 0
+            st["bank_bytes"] = self._bank.nbytes if self._bank else 0
+            st["bank_capacity"] = self._cap
+            st["dev_rows"] = self._dev_rows
+        with self._cond:
+            st["pending"] = len(self._queue)
+        return st
+
+    def reset_stats(self) -> None:
+        """Zero the counters (bank, lane cache and compiled programs
+        stay hot) -- benchmarks call this after :meth:`warm` so the
+        reported ratios describe live traffic only."""
+        with self._lock:
+            for k in self._stats:
+                self._stats[k] = 0

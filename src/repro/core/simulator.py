@@ -805,7 +805,18 @@ class TraceBank:
     max-plus row of row key ``k``. Host rows are built once per grid
     (memoized by :func:`get_trace_bank`) and placed on device at most
     once per placement key (:meth:`device_args`);
-    :func:`clear_sim_caches` drops both."""
+    :func:`clear_sim_caches` drops both.
+
+    Banks are **append-only**: :meth:`extend` adds the rows of new
+    specs in first-seen order -- exactly the order a from-scratch build
+    of the merged grid would assign -- so an extended bank is
+    byte-identical to :func:`get_trace_bank` of the concatenated spec
+    list (tests/test_trace_bank.py pins this), existing row indices
+    stay valid forever, and :meth:`device_args` uploads only the
+    **diff** (the appended rows) for placements that already hold the
+    old rows. The scenario-serving daemon (``repro.core.serving``)
+    lives on this: the marginal H2D cost of a novel query is its new
+    rows, not the bank."""
     n_stores: int
     cluster: ClusterConfig
     arrivals: np.ndarray             # (T, n_stores) f32 ns
@@ -851,16 +862,74 @@ class TraceBank:
         memoized by ``key``, so a grid swept by several engines uploads
         once. Returns ``(bytes_uploaded_now, arrays)`` --
         ``bytes_uploaded_now`` is 0 on a placement-cache hit, which is
-        what the engines' ``h2d_bytes`` accounting reports."""
-        try:
-            return 0, self._device[key]
-        except KeyError:
-            pass
+        what the engines' ``h2d_bytes`` accounting reports.
+
+        After :meth:`extend` grew the bank, a resident placement is
+        refreshed **incrementally**: only the appended row slices cross
+        host->device (``place`` sees just the diff) and are concatenated
+        onto the resident buffers device-side, so
+        ``bytes_uploaded_now`` is the diff's bytes, not the bank's."""
+        dev = self._device.get(key)
+        if dev is not None:
+            t_res, p_res = int(dev[0].shape[0]), int(dev[1].shape[0])
+            if t_res == self.trace_rows and p_res == self.wv_rows:
+                return 0, dev
+            # diff upload: ship only the rows appended since placement
+            host = (self.arrivals[t_res:], self.w[p_res:],
+                    self.v[p_res:], self.pr_nc[p_res:])
+            fresh = place(host) if place is not None else \
+                tuple(jnp.asarray(x) for x in host)
+            dev = tuple(jnp.concatenate([d, f], axis=0)
+                        for d, f in zip(dev, fresh))
+            self._device[key] = dev
+            return sum(int(x.nbytes) for x in host), dev
         host = (self.arrivals, self.w, self.v, self.pr_nc)
         dev = place(host) if place is not None else \
             tuple(jnp.asarray(x) for x in host)
         self._device[key] = dev
         return self.nbytes, dev
+
+    def extend(self, specs: Sequence[ScenarioSpec]) -> Tuple[int, int]:
+        """Append the rows of ``specs`` not yet in the bank, in place.
+
+        New ``(trace, wv)`` keys get rows in **first-seen order over
+        ``specs``** -- the same order :func:`_make_trace_bank` assigns
+        when building the merged grid from scratch, so after
+        ``bank.extend(delta)`` the bank's columns and row maps are
+        byte-identical to ``get_trace_bank(base + delta)``
+        (tests/test_trace_bank.py pins ``==`` on the bytes). Existing
+        rows and indices are never reordered, so handles, cached index
+        vectors and resident device placements of the old grid all stay
+        valid; stale placements are refreshed by the next
+        :meth:`device_args` call via a diff upload of just these rows.
+
+        Returns ``(new_trace_rows, new_wv_rows)`` -- ``(0, 0)`` when
+        every spec's rows were already present. Not thread-safe on its
+        own; the serving daemon serializes extends under its lock."""
+        new_trace: List[tuple] = []
+        new_wv: List[tuple] = []
+        for s in specs:
+            tk, wk = _plane_keys(s, self.cluster)
+            if tk not in self.trace_row:
+                self.trace_row[tk] = len(self.trace_row)
+                new_trace.append(tk)
+            if wk not in self.wv_row:
+                self.wv_row[wk] = len(self.wv_row)
+                new_wv.append(wk)
+        if new_trace:
+            rows = [_trace_cached(w, self.n_stores, seed, self.cluster)
+                    ["arrivals"] for (w, seed) in new_trace]
+            self.arrivals = np.concatenate(
+                [self.arrivals, np.stack(rows, axis=0)], axis=0)
+        if new_wv:
+            cols = [_wv_row(k, self.n_stores, self.cluster) for k in new_wv]
+            self.w = np.concatenate(
+                [self.w, np.stack([c[0] for c in cols], axis=0)], axis=0)
+            self.v = np.concatenate(
+                [self.v, np.stack([c[1] for c in cols], axis=0)], axis=0)
+            self.pr_nc = np.concatenate(
+                [self.pr_nc, np.stack([c[2] for c in cols], axis=0)], axis=0)
+        return len(new_trace), len(new_wv)
 
 
 def bank_row_maps(specs: Sequence[ScenarioSpec],

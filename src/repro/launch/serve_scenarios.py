@@ -1,0 +1,112 @@
+"""Scenario-serving daemon launcher: warm a :class:`ScenarioServer`
+on a sweep grid, then drive a mixed query stream against it and report
+serve-side latency/cache statistics.
+
+Example::
+
+    PYTHONPATH=src python -m repro.launch.serve_scenarios \
+        --stores 5000 --queries 200 --batch-cells 32 --shards 4
+
+The driver warms the server on a mixed-SB sweep grid, then issues a
+query stream that interleaves lane-cache hits (cells of the warm grid),
+novel cells (diff-upload misses), a grid-delta request and a couple of
+downtime queries -- the daemon's three query shapes -- and prints
+p50/p99 latency, throughput, cache-hit ratio and the marginal
+host->device bytes per query. ``--check`` re-runs every served cell
+through the cold ``simulate_grid`` oracle and asserts bit-identity
+(the same pin tests/test_serving.py holds under hypothesis).
+"""
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--stores", type=int, default=5_000,
+                    help="stores per timeline (n_stores)")
+    ap.add_argument("--queries", type=int, default=200,
+                    help="live queries to issue after warmup")
+    ap.add_argument("--batch-cells", type=int, default=32,
+                    help="canonical serve-tile size")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="async batching window (submit path)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="cells-mesh shards for flush tiles")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true",
+                    help="assert every answer == the cold oracle")
+    ap.add_argument("--host-devices", type=int, default=8)
+    args = ap.parse_args()
+
+    if "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices}")
+
+    import numpy as np
+
+    from repro.core.engine import simulate_grid, trace_count
+    from repro.core.scenarios import grid_delta, sweep_grid
+    from repro.core.serving import ScenarioServer
+
+    warm_grid = sweep_grid(seeds=(0, 1), sb_sizes=(None, 48),
+                           link_bw_gbps=(None, 40.0))
+    novel = grid_delta(warm_grid, workloads=("ycsb", "canneal", "barnes"),
+                       configs=("proactive", "baseline"),
+                       n_replicas=(2, 4), sb_sizes=(None, 48))
+
+    rng = np.random.default_rng(args.seed)
+    stream = [warm_grid[rng.integers(len(warm_grid))] if rng.random() < 0.7
+              else novel[rng.integers(len(novel))]
+              for _ in range(args.queries)]
+
+    with ScenarioServer(n_stores=args.stores, batch_cells=args.batch_cells,
+                        batch_window_ms=args.window_ms,
+                        n_shards=args.shards) as srv:
+        t0 = time.perf_counter()
+        srv.warm(warm_grid)
+        t_warm = time.perf_counter() - t0
+        print(f"warm: {len(warm_grid)} cells, "
+              f"{srv.stats()['bank_rows']} bank rows, "
+              f"{srv.stats()['compiled_programs']} programs, "
+              f"{t_warm * 1e3:.1f} ms")
+
+        srv.reset_stats()
+        tc0 = trace_count()
+        lat = []
+        t0 = time.perf_counter()
+        for spec in stream:
+            t1 = time.perf_counter()
+            srv.query(spec)
+            lat.append(time.perf_counter() - t1)
+        wall = time.perf_counter() - t0
+        st = srv.stats()
+        lat_ms = np.sort(np.asarray(lat)) * 1e3
+        print(f"served {len(stream)} queries in {wall:.3f} s "
+              f"({len(stream) / wall:.0f} q/s)")
+        print(f"latency p50 {lat_ms[len(lat_ms) // 2]:.3f} ms  "
+              f"p99 {lat_ms[int(len(lat_ms) * 0.99)]:.3f} ms")
+        print(f"cache-hit ratio {st['hit_ratio']:.3f}  "
+              f"steady-state compiles {trace_count() - tc0}")
+        print(f"marginal h2d {st['h2d_bytes'] / len(stream):.0f} B/query "
+              f"(cold full-bank upload {st['bank_bytes']} B)")
+
+        # the other two query shapes
+        added = srv.query_grid(workloads=("streamcluster",),
+                               configs=("proactive",), n_replicas=(2, 4))
+        est = srv.query_downtime("ycsb", fail_time_ms=50.0, n_cns=8)
+        print(f"grid-delta query: {len(added)} cells; "
+              f"downtime(ycsb, 50ms, 8 CNs) = {est.total_ns / 1e6:.2f} ms")
+
+        if args.check:
+            served = srv.query_batch(stream)
+            oracle = simulate_grid(stream, n_stores=args.stores,
+                                   engine="blocked")
+            for a, b in zip(served, oracle):
+                assert a == b, (a.meta, a, b)
+            print(f"oracle check: {len(stream)} answers bit-identical")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,380 @@
+"""Differential + concurrency harness for the scenario-serving daemon.
+
+The serving contract (``repro.core.serving``): every answer the daemon
+produces -- lane-cache hit or diff-upload miss, any batching, any data
+plane on the oracle side, any interleaving with ``clear_sim_caches()``
+-- is bit-identical (``==``) to the cold batch oracle for the same
+spec, and steady-state serving compiles nothing. These tests pin all
+of it, plus the ``_plane_keys`` bank-geometry invariants PRs 4-6
+relied on implicitly.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+
+from repro.core import engine as E
+from repro.core import simulator as S
+from repro.core.scenarios import (
+    contention_mega_grid,
+    directory_mega_grid,
+    downtime_query,
+    grid_delta,
+    mega_grid,
+    recovery_sweep,
+    sweep_grid,
+)
+from repro.core.serving import ScenarioServer, _row_capacity
+from repro.core.simulator import (
+    CONFIGS,
+    PAPER_CLUSTER,
+    ScenarioSpec,
+    bank_row_maps,
+    clear_sim_caches,
+    simulate_batch,
+)
+
+N = 700
+WORKLOAD_POOL = ("ycsb", "canneal", "barnes", "raytrace", "ocean_ncp")
+FLOAT_FIELDS = ("exec_time_ns", "repl_at_head_frac", "sb_full_frac",
+                "max_log_bytes", "cxl_mem_bw_gbps", "log_dump_bw_gbps")
+
+#: The warm grid every deterministic test heats the daemon with: mixed
+#: SB depths, two configs on each side of the replicate/local split.
+WARM_GRID = sweep_grid(workloads=("ycsb", "canneal"),
+                       configs=("wb", "proactive"),
+                       sb_sizes=(None, 48), n_replicas=(None, 3))
+
+
+def _spec_pool(draw):
+    """One random spec over the pooled serve axes (a superset of
+    WARM_GRID's axes, so draws mix hits and misses)."""
+    return ScenarioSpec(
+        draw(st.sampled_from(WORKLOAD_POOL)),
+        draw(st.sampled_from(CONFIGS)),
+        seed=draw(st.integers(min_value=0, max_value=2)),
+        n_replicas=draw(st.sampled_from((None, 2, 3))),
+        link_bw_gbps=draw(st.sampled_from((None, 40.0))),
+        n_cns=draw(st.sampled_from((None, 8))),
+        sb_size=draw(st.sampled_from((None, 16, 48))),
+        coalescing=draw(st.booleans()))
+
+
+@st.composite
+def query_streams(draw):
+    """A ragged mixed-SB query stream: WARM_GRID cells (lane-cache
+    hits) interleaved with novel pool cells (diff-upload misses),
+    duplicates and all."""
+    n = draw(st.integers(min_value=1, max_value=20))
+    stream = []
+    for _ in range(n):
+        if draw(st.booleans()):
+            stream.append(WARM_GRID[draw(st.integers(
+                min_value=0, max_value=len(WARM_GRID) - 1))])
+        else:
+            stream.append(_spec_pool(draw))
+    return stream
+
+
+def lane_count(specs, cluster=PAPER_CLUSTER):
+    """Unique scan lanes of a grid: the (SB, trace, wv) dedup the
+    engine and the daemon both key on."""
+    lanes = set()
+    for s in specs:
+        sb = s.sb_size if s.sb_size is not None else cluster.store_buffer
+        lanes.add((sb,) + S._plane_keys(s, cluster))
+    return len(lanes)
+
+
+# ---------------------------------------------------------------------------
+# Differential: daemon answers == cold oracle, hit and miss paths
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(query_streams())
+def test_daemon_bitident_to_cold_oracle_on_random_streams(stream):
+    with ScenarioServer(n_stores=N, batch_cells=8) as srv:
+        srv.warm(WARM_GRID)
+        warm_again = srv.query_batch(WARM_GRID)     # pure hit path
+        served = srv.query_batch(stream)            # mixed hit/miss
+        served_again = srv.query_batch(stream)      # now pure hits
+        st_ = srv.stats()
+    # the daemon's flush tiles gather from the capacity-padded device
+    # bank; the oracle builds its own grid from scratch on BOTH planes
+    clear_sim_caches()
+    oracle_banked = simulate_batch(WARM_GRID + stream, n_stores=N)
+    clear_sim_caches()
+    oracle_stacked = simulate_batch(WARM_GRID + stream, n_stores=N,
+                                    data_plane="stacked")
+    for got, a, b in zip(warm_again + served,
+                         oracle_banked, oracle_stacked):
+        for f in FLOAT_FIELDS:
+            assert getattr(got, f) == getattr(a, f), (got.meta, f)
+            assert getattr(got, f) == getattr(b, f), (got.meta, f)
+    # the re-served stream is answered from the lane cache, identically
+    for x, y in zip(served, served_again):
+        assert x == y
+        assert y.meta["cache"] == "hit"
+    assert st_["lane_hits"] >= len(WARM_GRID) + len(stream)
+    assert st_["bank_builds"] == 1
+
+
+def test_hit_and_miss_paths_and_meta_provenance():
+    with ScenarioServer(n_stores=N, batch_cells=8) as srv:
+        srv.warm(WARM_GRID)
+        srv.reset_stats()
+
+        hit = srv.query(WARM_GRID[0])
+        assert hit.meta["cache"] == "hit"
+        assert hit.meta["h2d_bytes"] == 0           # nothing crossed
+        assert srv.stats()["appended_trace_rows"] == 0
+
+        novel = ScenarioSpec("bodytrack", "proactive", n_replicas=4)
+        miss = srv.query(novel)
+        assert miss.meta["cache"] == "miss"
+        assert miss.meta["h2d_bytes"] > 0           # rows + index diff
+        st_ = srv.stats()
+        assert st_["appended_trace_rows"] == 1
+        assert st_["appended_wv_rows"] == 1
+        # marginal bytes of one novel cell are row-scale, not bank-scale
+        assert st_["h2d_bytes"] < st_["bank_bytes"]
+
+        again = srv.query(novel)
+        assert again.meta["cache"] == "hit"
+        assert again.meta["h2d_bytes"] == 0
+        assert again == miss
+    oracle = simulate_batch([WARM_GRID[0], novel], n_stores=N)
+    assert hit == oracle[0]
+    assert miss == oracle[1]
+
+
+def test_sharded_serving_matches_oracle():
+    n_shards = min(2, len(jax.devices()))
+    with ScenarioServer(n_stores=N, batch_cells=8,
+                        n_shards=n_shards) as srv:
+        served = srv.query_batch(WARM_GRID)
+        novel = [ScenarioSpec("barnes", "proactive", seed=2)]
+        served += srv.query_batch(novel)
+    oracle = simulate_batch(WARM_GRID + novel, n_stores=N)
+    for a, b in zip(served, oracle):
+        assert a == b, (a.meta, b.meta)
+
+
+def test_capacity_growth_reuploads_and_stays_bitident():
+    """Appends past the device capacity trigger a (rare) full re-upload
+    at the grown shape -- answers must stay bit-identical across the
+    capacity step and resident rows must survive it."""
+    base = [ScenarioSpec("ycsb", "proactive", n_replicas=r)
+            for r in (1, 2)]
+    with ScenarioServer(n_stores=N, batch_cells=8, row_pad=4) as srv:
+        first = srv.query_batch(base)
+        assert srv.stats()["bank_uploads"] == 1
+        cap0 = srv.stats()["bank_capacity"]
+        # 6 novel wv rows blow through the 4-row quantum
+        grow = [ScenarioSpec(w, "proactive", n_replicas=4)
+                for w in WORKLOAD_POOL] + \
+               [ScenarioSpec("ycsb", "baseline", link_bw_gbps=40.0)]
+        grown = srv.query_batch(grow)
+        st_ = srv.stats()
+        assert st_["bank_uploads"] == 2
+        assert st_["bank_capacity"][1] > cap0[1]
+        assert _row_capacity(st_["bank_rows"], 4) >= st_["bank_capacity"][1] \
+            or st_["bank_capacity"][1] > st_["dev_rows"][1]
+        recheck = srv.query_batch(base)             # old lanes still hit
+        assert all(r.meta["cache"] == "hit" for r in recheck)
+    oracle = simulate_batch(base + grow, n_stores=N)
+    for a, b in zip(first + grown, oracle):
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Compile-count regression: steady-state serving compiles nothing
+# ---------------------------------------------------------------------------
+
+
+def test_steady_state_serving_compiles_zero_programs():
+    """After warmup, 100 mixed queries (hits, novel in-capacity misses,
+    batches, singles) trace zero new tile programs."""
+    with ScenarioServer(n_stores=N, batch_cells=8) as srv:
+        srv.warm(WARM_GRID)
+        tc0 = E.trace_count()
+        rng = np.random.default_rng(7)
+        novel = sweep_grid(workloads=WORKLOAD_POOL,
+                           configs=("proactive", "baseline"),
+                           seeds=(0, 1, 2), n_replicas=(2,),
+                           sb_sizes=(None, 48))
+        queries = [WARM_GRID[rng.integers(len(WARM_GRID))]
+                   if rng.random() < 0.5
+                   else novel[rng.integers(len(novel))]
+                   for _ in range(100)]
+        for q in queries[:50]:
+            srv.query(q)                            # single-cell flushes
+        srv.query_batch(queries[50:])               # one batched flush
+        st_ = srv.stats()
+        assert E.trace_count() == tc0, \
+            f"steady-state serving traced {E.trace_count() - tc0} programs"
+        assert st_["compiled_programs"] == 0
+        assert st_["lane_misses"] > 0               # misses really ran
+        assert st_["lane_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Bank-key stability pins (the _plane_keys contract of PRs 4-6)
+# ---------------------------------------------------------------------------
+
+
+def test_bank_key_stability_pins():
+    """The serving refactor must not move a single bank row or lane:
+    mega_grid keeps its 27 + 1298 rows (and 2 700 scan lanes), and the
+    coupled mega-grids keep their lane counts."""
+    mega = mega_grid()
+    trace_map, wv_map = bank_row_maps(mega)
+    assert len(trace_map) == 27
+    assert len(wv_map) == 1298
+    assert lane_count(mega) == 2700
+    assert lane_count(contention_mega_grid()) == 990
+    assert lane_count(directory_mega_grid()) == 2160
+
+
+def test_bank_bytes_stable_across_serving_refactor():
+    """Byte-level pin on a materialized sub-grid: the extend-capable
+    bank builds the same columns (same bytes, same row order) as the
+    pre-refactor from-scratch path, and serving a grid does not perturb
+    the memoized bank another engine would resolve."""
+    sub = mega_grid(seeds=(0,), replicas=(1, 3), bandwidths=(160.0, 40.0),
+                    cn_counts=(16,), sb_sizes=(72, 48))
+    scratch = S._make_trace_bank(tuple(sub), N, PAPER_CLUSTER)
+    with ScenarioServer(n_stores=N, batch_cells=8) as srv:
+        srv.warm(sub, populate=False)
+        srv.query_batch(sub[: len(sub) // 2])
+        bank = srv._bank
+        assert bank.trace_row == scratch.trace_row
+        assert bank.wv_row == scratch.wv_row
+        assert bank.arrivals.tobytes() == scratch.arrivals.tobytes()
+        assert bank.w.tobytes() == scratch.w.tobytes()
+        assert bank.v.tobytes() == scratch.v.tobytes()
+        assert bank.pr_nc.tobytes() == scratch.pr_nc.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Query translation: grid deltas and downtime requests
+# ---------------------------------------------------------------------------
+
+
+def test_grid_delta_translation():
+    axes = dict(workloads=("ycsb", "canneal"), configs=("wb", "proactive"),
+                sb_sizes=(None, 48), n_replicas=(None, 3, 4))
+    delta = grid_delta(WARM_GRID, **axes)
+    full = sweep_grid(**axes)
+    assert delta == [s for s in full if s not in set(WARM_GRID)]
+    assert all(s.n_replicas == 4 for s in delta)    # only the new axis val
+    assert grid_delta(full, **axes) == []
+    with ScenarioServer(n_stores=N, batch_cells=8) as srv:
+        srv.warm(WARM_GRID)
+        srv.reset_stats()
+        served = srv.query_grid(**axes)
+        st_ = srv.stats()
+    assert st_["lane_hits"] >= len(full) - len(delta)
+    oracle = simulate_batch(full, n_stores=N)
+    for a, b in zip(served, oracle):
+        assert a == b
+
+
+def test_downtime_queries_match_recovery_model():
+    est = downtime_query("ycsb", 50.0, n_cns=8)
+    sweep = recovery_sweep(workloads=("ycsb",), fail_times_ms=(50.0,),
+                           cn_counts=(8,))
+    assert np.isclose(est.total_ns, float(sweep.total_ns[0, 0, 0]),
+                      rtol=1e-9)
+    # coupling axes move the estimate the same direction as the sweep's
+    loaded = downtime_query("ycsb", 50.0, n_cns=8, directory_load=0.5)
+    assert loaded.directory_ns > est.directory_ns
+    with ScenarioServer(n_stores=N) as srv:
+        got = srv.query_downtime("ycsb", 50.0, n_cns=8)
+        assert got == est
+        assert srv.stats()["downtime_queries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Async batching + threaded stress vs clear_sim_caches()
+# ---------------------------------------------------------------------------
+
+
+def test_submit_futures_batch_and_resolve():
+    with ScenarioServer(n_stores=N, batch_cells=64,
+                        batch_window_ms=100.0) as srv:
+        srv.warm(WARM_GRID)
+        srv.reset_stats()
+        futs = [srv.submit(s) for s in WARM_GRID + WARM_GRID]
+        got = [f.result(timeout=120) for f in futs]
+        st_ = srv.stats()
+        assert st_["queries"] == 2 * len(WARM_GRID)
+        # the window coalesced concurrent submissions into few flushes
+        assert 1 <= st_["batches"] <= 8
+    oracle = simulate_batch(WARM_GRID, n_stores=N)
+    for a, b in zip(got, oracle + oracle):
+        assert a == b
+    with pytest.raises(RuntimeError):
+        srv.submit(WARM_GRID[0])                    # closed
+
+
+def test_concurrent_queries_race_cache_clears_bitident():
+    """N threads hammer the daemon (sync + async paths) while another
+    thread repeatedly drops every host/compile cache: no deadlock, no
+    bank double-build, every answer still == the oracle."""
+    oracle = simulate_batch(WARM_GRID, n_stores=N)
+    novel = [ScenarioSpec(w, "proactive", seed=2, n_replicas=2)
+             for w in WORKLOAD_POOL]
+    novel_oracle = simulate_batch(novel, n_stores=N)
+    want = {s: r for s, r in zip(WARM_GRID + novel,
+                                 list(oracle) + list(novel_oracle))}
+
+    with ScenarioServer(n_stores=N, batch_cells=8,
+                        batch_window_ms=1.0) as srv:
+        srv.warm(WARM_GRID)
+        stop = threading.Event()
+        errors = []
+
+        def clearer():
+            while not stop.is_set():
+                clear_sim_caches()
+
+        def worker(seed):
+            rng = np.random.default_rng(seed)
+            pool = WARM_GRID + novel
+            try:
+                for _ in range(6):
+                    picks = [pool[rng.integers(len(pool))]
+                             for _ in range(4)]
+                    if rng.random() < 0.5:
+                        got = srv.query_batch(picks)
+                    else:
+                        got = [f.result(timeout=120)
+                               for f in map(srv.submit, picks)]
+                    for s, r in zip(picks, got):
+                        if r != want[s]:
+                            errors.append((s, r, want[s]))
+            except Exception as e:                  # pragma: no cover
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(6)]
+        clr = threading.Thread(target=clearer)
+        clr.start()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+        stop.set()
+        clr.join(timeout=60)
+        alive = [t for t in threads + [clr] if t.is_alive()]
+        assert not alive, f"deadlocked threads: {alive}"
+        assert not errors, errors[:3]
+        st_ = srv.stats()
+        assert st_["bank_builds"] == 1, "bank was rebuilt under the race"

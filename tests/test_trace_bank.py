@@ -157,6 +157,54 @@ def test_oneshot_lane_dedup_drops_h2d_and_gather_width():
     assert r.meta["scan_lanes"] == len(uniq)
 
 
+@settings(max_examples=10, deadline=None)
+@given(ragged_grids(), ragged_grids())
+def test_bank_extend_matches_from_scratch_merged_build(base, delta):
+    """Append-only extension is byte-identical to a from-scratch build
+    of the merged grid (the serving daemon's incremental-diff
+    contract): same row maps, same column bytes, old indices intact."""
+    bank = S._make_trace_bank(tuple(base), N, PAPER_CLUSTER)
+    t0, p0 = bank.trace_rows, bank.wv_rows
+    old_rows = {s: bank.rows_for(s) for s in base}
+    nt, nw = bank.extend(delta)
+    merged = S._make_trace_bank(tuple(base) + tuple(delta), N, PAPER_CLUSTER)
+    assert (nt, nw) == (merged.trace_rows - t0, merged.wv_rows - p0)
+    assert bank.trace_row == merged.trace_row
+    assert bank.wv_row == merged.wv_row
+    assert bank.arrivals.tobytes() == merged.arrivals.tobytes()
+    assert bank.w.tobytes() == merged.w.tobytes()
+    assert bank.v.tobytes() == merged.v.tobytes()
+    assert bank.pr_nc.tobytes() == merged.pr_nc.tobytes()
+    # indices handed out before the extension stay valid forever
+    assert all(bank.rows_for(s) == r for s, r in old_rows.items())
+    # idempotent: re-extending with the same specs appends nothing
+    assert bank.extend(delta) == (0, 0)
+    assert bank.arrivals.tobytes() == merged.arrivals.tobytes()
+
+
+def test_bank_device_diff_upload_ships_only_new_rows():
+    """A resident placement is refreshed incrementally after extend():
+    only the appended rows cross host->device, and the refreshed device
+    arrays equal the full (merged) host columns."""
+    base = [ScenarioSpec("ycsb", c) for c in CONFIGS]
+    bank = S._make_trace_bank(tuple(base), N, PAPER_CLUSTER)
+    up0, _ = bank.device_args("serve")
+    assert up0 == bank.nbytes                       # cold: full upload
+    assert bank.device_args("serve")[0] == 0        # resident: no bytes
+    nbytes0 = bank.nbytes
+    delta = [ScenarioSpec("barnes", "proactive", seed=2),
+             ScenarioSpec("ycsb", "proactive", n_replicas=4)]
+    nt, nw = bank.extend(delta)
+    assert nt == 1 and nw == 2
+    up1, dev = bank.device_args("serve")
+    assert up1 == bank.nbytes - nbytes0 > 0         # just the diff
+    assert np.array_equal(np.asarray(dev[0]), bank.arrivals)
+    assert np.array_equal(np.asarray(dev[1]), bank.w)
+    assert np.array_equal(np.asarray(dev[2]), bank.v)
+    assert np.array_equal(np.asarray(dev[3]), bank.pr_nc)
+    assert bank.device_args("serve")[0] == 0        # resident again
+
+
 def test_wb_wt_rows_collapse_to_constants():
     """Every WB (and WT) cell of a grid shares one constant column."""
     specs = [ScenarioSpec(w, c, seed=s, n_replicas=nr)
