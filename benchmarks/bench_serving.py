@@ -19,8 +19,13 @@ record:
   ``single_miss_h2d_frac`` -- the marginal bytes of ONE warm novel
   single-cell query over a cold full-bank upload (the incremental-diff
   headline: row-scale, not bank-scale; asserted <= 1%);
+* ``bank_partition`` / ``sharded_steady_compiles`` /
+  ``bank_dev_mb_per_shard`` -- a second daemon at > 1 shard holds the
+  capacity bank PARTITIONED (per-shard sub-banks, PR 8): steady-state
+  serving must still trace 0 programs there, and the measured
+  per-shard resident bytes are recorded;
 * ``oracle_bitident`` -- every streamed answer re-checked ``==``
-  against the cold blocked-batch oracle.
+  against the cold blocked-batch oracle (sharded answers included).
 
 Registered by benchmarks/run.py; the ``serving`` CI job asserts the
 ``oracle_bitident`` and ``cache_hit_ratio`` rows in ``--quick`` mode.
@@ -98,11 +103,26 @@ def bench_serving() -> List[Dict]:
         probe_h2d = srv.stats()["h2d_bytes"]
         full_upload = srv.stats()["bank_bytes"]
 
+    # partitioned capacity bank (PR 8): a sharded daemon holds the
+    # capacity sub-bank partitioned over the cells mesh -- steady-state
+    # compiles must STILL be 0 with owner-scheduled serve tiles, and
+    # stats() reports the measured per-shard resident bytes
+    import jax
+    n_sh = min(2, len(jax.devices()))
+    with ScenarioServer(n_stores=STORES, batch_cells=32,
+                        n_shards=n_sh) as ssrv:
+        ssrv.warm(warm_grid)
+        tc0 = E.trace_count()
+        sh_served = [ssrv.query(s) for s in stream[:24]]
+        sharded_compiles = E.trace_count() - tc0
+        sh_stats = ssrv.stats()
+
     # cold oracle for every answer the daemon produced (fresh caches:
     # the oracle must not ride the daemon's bank or memos)
     clear_sim_caches()
     oracle = simulate_batch(stream + probe, n_stores=STORES)
     ident = all(a == b for a, b in zip(served + served_probe, oracle))
+    ident = ident and all(a == b for a, b in zip(sh_served, oracle))
 
     rows += [
         {"name": "serve/latency/queries", "us_per_call": 0.0,
@@ -130,6 +150,13 @@ def bench_serving() -> List[Dict]:
          "derived": round(st["h2d_bytes"] / len(stream), 1)},
         {"name": "serve/latency/single_miss_h2d_frac", "us_per_call": 0.0,
          "derived": round(probe_h2d / max(full_upload, 1), 5)},
+        {"name": "serve/latency/bank_partition", "us_per_call": 0.0,
+         "derived": str(sh_stats["bank_partition"])},
+        {"name": "serve/latency/sharded_steady_compiles", "us_per_call": 0.0,
+         "derived": sharded_compiles},
+        {"name": "serve/latency/bank_dev_mb_per_shard", "us_per_call": 0.0,
+         "derived": round(sh_stats["bank_dev_bytes_per_shard"] / (1 << 20),
+                          3)},
         {"name": "serve/latency/oracle_bitident", "us_per_call": 0.0,
          "derived": int(ident)},
     ]

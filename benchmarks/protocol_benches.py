@@ -197,9 +197,12 @@ def bench_megagrid() -> List[Dict]:
       cell's arrays from scratch).
 
     Data-plane rows (from ``engine.bank_stats()``) record each engine
-    run's H2D bytes, bank rows, dedup ratio and the engine-accounted
-    device-memory high-water mark, so the ``BENCH_protocol.json``
-    trajectory captures the bank win across PRs.
+    run's H2D bytes, bank rows, dedup ratio, the engine-accounted
+    device-memory high-water mark, and (PR 8) the MEASURED resident
+    bank device bytes of the per-shard sub-bank partition --
+    per-shard, fleet total, the replicated baseline, and their cut
+    ratio -- so the ``BENCH_protocol.json`` trajectory captures the
+    bank win across PRs.
 
     ``oracle_bitident`` re-runs a handful of sampled cells through the
     serial oracle and checks ``==``, so the speedup rows can never
@@ -306,10 +309,35 @@ def bench_megagrid() -> List[Dict]:
         {"name": "fig10/megagrid/h2d_ratio", "us_per_call": 0.0,
          "derived": round(stacked["h2d_bytes"]
                           / max(bank["h2d_bytes"], 1), 2)},
-        # replication of the staged bank to the other shards is
-        # device-to-device traffic, not host bandwidth (engine._place_bank)
+        # replication of staged arrays to the other shards is
+        # device-to-device traffic, not host bandwidth: the whole bank
+        # under "replicated", only the arrivals column under "sub"
         {"name": "fig10/megagrid/bank_fabric_mb", "us_per_call": 0.0,
          "derived": round(bank["bank_fabric_bytes"] * mb, 1)},
+        # resident-bank device bytes, MEASURED from the live buffers
+        # (engine._measured_device_bytes). The run uses the per-shard
+        # sub-bank partition (PR 8 default): one copy of each max-plus
+        # row fleet-wide, arrivals replicated, so the per-shard bytes
+        # drop to ~1/n_shards of the replicated PR-4 layout -- whose
+        # cost is exactly bank_mb x n_shards (pinned == measured by
+        # tests/test_engine.py), the cut_ratio baseline below.
+        {"name": "fig10/megagrid/bank_partition", "us_per_call": 0.0,
+         "derived": str(bank["bank_partition"])},
+        {"name": "fig10/megagrid/bank_mb", "us_per_call": 0.0,
+         "derived": round(bank["bank_bytes"] * mb, 1)},
+        {"name": "fig10/megagrid/bank_dev_mb_per_shard", "us_per_call": 0.0,
+         "derived": round(bank["bank_dev_bytes_per_shard"] * mb, 1)},
+        {"name": "fig10/megagrid/bank_dev_total_mb", "us_per_call": 0.0,
+         "derived": round(bank["bank_dev_bytes"] * mb, 1)},
+        {"name": "fig10/megagrid/bank_dev_replicated_mb", "us_per_call": 0.0,
+         "derived": round(bank["bank_bytes"] * shards * mb, 1)},
+        {"name": "fig10/megagrid/bank_dev_cut_ratio", "us_per_call": 0.0,
+         "derived": round(bank["bank_bytes"] * shards
+                          / max(bank["bank_dev_bytes"], 1), 2)},
+        {"name": "fig10/megagrid/bank_dev_shard_ratio", "us_per_call": 0.0,
+         "derived": round(bank["bank_dev_bytes_per_shard"]
+                          / max(bank["bank_bytes"] / max(shards, 1), 1),
+                          3)},
         {"name": "fig10/megagrid/dedup_ratio", "us_per_call": 0.0,
          "derived": round(bank["dedup_ratio"], 2)},
         {"name": "fig10/megagrid/dev_mem_hwm_mb", "us_per_call": 0.0,

@@ -124,12 +124,15 @@ from repro.core.simulator import (
     register_cache_clearer,
     simulate_batch,
     simulate_spec,
+    sub_bank_rows,
 )
 from repro.distributed.context import cells_mesh, shard_map
 from repro.distributed.sharding import (
     bank_shardings,
     bank_tile_specs,
     index_shardings,
+    sub_bank_shardings,
+    sub_bank_tile_specs,
     tile_shardings,
     tile_specs,
 )
@@ -178,8 +181,12 @@ class TileSignature:
     size, ``data_plane`` which input plane the program consumes, and
     ``bank_shape`` the ``(trace_rows, wv_rows)`` of the grid's bank
     (``(0, 0)`` on the stacked plane) -- jit specializes on the bank's
-    shape, so it is part of the program key. A whole mega-grid runs
-    with a handful of distinct signatures.
+    shape, so it is part of the program key. ``bank_sub=True`` selects
+    the per-shard sub-bank layout (the default banked plane): the three
+    max-plus columns arrive as a ``(n_shards, local_rows, n_stores)``
+    shard-partitioned stack, wv indices are shard-LOCAL, and
+    ``bank_shape[1]`` is the local (per-shard) row count. A whole
+    mega-grid runs with a handful of distinct signatures.
     """
     b_pad: int
     n_stores: int
@@ -189,14 +196,25 @@ class TileSignature:
     n_shards: int
     data_plane: str = "stacked"
     bank_shape: Tuple[int, int] = (0, 0)
+    bank_sub: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
 class Tile:
-    """One scheduled slice of a grid: original positions + specs + sig."""
+    """One scheduled slice of a grid: original positions + specs + sig.
+
+    ``slots`` (sub-bank scheduling only) maps entry ``j`` of
+    ``indices``/``specs`` to its padded position in the tile's index
+    vectors and outputs: the vector is laid out as ``n_shards``
+    contiguous blocks of ``b_pad // n_shards`` slots, and lane ``j``
+    sits inside the block of the shard that OWNS its wv row, so the
+    in-jit gather under ``shard_map`` stays shard-local. ``None`` means
+    the identity layout (entry ``j`` at position ``j``), as on the
+    stacked and replicated-bank planes."""
     indices: Tuple[int, ...]
     specs: Tuple[ScenarioSpec, ...]
     sig: TileSignature
+    slots: Optional[Tuple[int, ...]] = None
 
 
 def _align(n_shards: int) -> int:
@@ -223,7 +241,8 @@ def plan_tiles(specs: Sequence[ScenarioSpec],
                chunk_size: Optional[int] = None,
                tile_cells: int = DEFAULT_TILE_CELLS,
                n_shards: int = 1,
-               small_pad: bool = True) -> List[Tile]:
+               small_pad: bool = True,
+               owners: Optional[Sequence[int]] = None) -> List[Tile]:
     """Schedule a grid into canonically-shaped, SB-uniform tiles.
 
     Cells are grouped by resolved store-buffer depth (preserving order
@@ -237,6 +256,17 @@ def plan_tiles(specs: Sequence[ScenarioSpec],
     the banked plane uses this, because its deduplicated scan lanes
     leave few tiles per group and a ragged tail's own program costs
     ~50x the padding lanes it would avoid.
+
+    ``owners`` (sub-bank scheduling) gives each cell's owning shard
+    (``wv_row % n_shards``, aligned with ``specs``): each tile's index
+    vector is then laid out as ``n_shards`` blocks of ``b_pad //
+    n_shards`` slots (``_align`` guarantees divisibility) and every
+    lane lands in its owner's block, recorded in :attr:`Tile.slots` --
+    the layout under which a ``shard_map`` over the ``cells`` axis
+    hands each shard exactly the lanes whose wv rows it holds. Tiles
+    per group become ``ceil(max_per_shard_lanes / block)`` instead of
+    ``ceil(lanes / tile_cells)``; round-robin row ownership keeps the
+    shard blocks balanced to within one lane on real grids.
     """
     align = _align(n_shards)
     tile_cells = max(align, -(-tile_cells // align) * align)
@@ -252,14 +282,40 @@ def plan_tiles(specs: Sequence[ScenarioSpec],
     for sb, members in groups.items():
         chunk = auto_chunk(n_stores, sb, tile_cells) if chunk_size is None \
             else max(1, min(chunk_size, n_stores, sb))
+
+        def sig_for(b_pad: int) -> TileSignature:
+            return TileSignature(b_pad=b_pad, n_stores=n_stores, chunk=chunk,
+                                 sb_max=_pad_len(sb), sb_uniform=sb,
+                                 n_shards=n_shards)
+
+        if owners is not None and n_shards > 1:
+            by_shard: List[List[Tuple[int, ScenarioSpec]]] = \
+                [[] for _ in range(n_shards)]
+            for i, s in members:
+                by_shard[owners[i]].append((i, s))
+            block = tile_cells // n_shards
+            n_tiles = max(1, -(-max(len(b) for b in by_shard) // block))
+            for t in range(n_tiles):
+                part: List[Tuple[int, ScenarioSpec]] = []
+                blocks = [b[t * block:(t + 1) * block] for b in by_shard]
+                widest = max(len(b) for b in blocks)
+                b_pad = next(c for c in sizes if c // n_shards >= widest)
+                per = b_pad // n_shards
+                slots: List[int] = []
+                for sh, blk in enumerate(blocks):
+                    for q, (i, s) in enumerate(blk):
+                        part.append((i, s))
+                        slots.append(sh * per + q)
+                tiles.append(Tile(indices=tuple(i for i, _ in part),
+                                  specs=tuple(s for _, s in part),
+                                  sig=sig_for(b_pad), slots=tuple(slots)))
+            continue
         for off in range(0, len(members), tile_cells):
             part = members[off:off + tile_cells]
             b_pad = next(c for c in sizes if c >= len(part))
-            sig = TileSignature(b_pad=b_pad, n_stores=n_stores, chunk=chunk,
-                                sb_max=_pad_len(sb), sb_uniform=sb,
-                                n_shards=n_shards)
             tiles.append(Tile(indices=tuple(i for i, _ in part),
-                              specs=tuple(s for _, s in part), sig=sig))
+                              specs=tuple(s for _, s in part),
+                              sig=sig_for(b_pad)))
     return tiles
 
 
@@ -289,22 +345,31 @@ def bank_stats() -> Dict[str, object]:
     * ``data_plane`` -- ``"bank"`` or ``"stacked"``; ``cells`` /
       ``n_shards`` -- run geometry; ``scan_lanes`` -- unique timelines
       actually scanned (== ``cells`` on the stacked plane);
+    * ``bank_partition`` -- ``"sub"`` (per-shard sub-banks, the
+      default) or ``"replicated"`` on the bank plane, ``None`` on the
+      stacked plane;
     * ``trace_rows`` / ``wv_rows`` / ``bank_rows`` -- deduplicated bank
       columns (0 on the stacked plane); ``bank_bytes`` -- host bytes of
       one bank copy; ``bank_dev_bytes_per_shard`` / ``bank_dev_bytes``
-      -- resident device bytes of the replicated bank, per shard and
-      total (``bank x n_shards`` -- the cost a per-shard sub-bank
-      layout with local indices would cut; see ROADMAP);
+      -- **measured** resident device bytes of the placed bank (summed
+      from the live buffers' addressable shards: max per device, and
+      fleet total). Replicated placement measures ~``bank x n_shards``
+      total; the sub-bank placement holds one copy of each max-plus
+      row fleet-wide (arrivals stay replicated -- they are ~1% of the
+      bytes and a lane's trace/wv rows may have different owners), so
+      the total stays ~``bank_bytes`` and per-shard drops to
+      ~``1/n_shards``;
     * ``h2d_bytes`` -- bytes that actually crossed host->device this
       run (one bank upload iff it was not already device-resident,
       plus every tile's payload); ``bank_fabric_bytes`` -- the
-      device-to-device bytes of replicating the staged bank to the
-      other shards (NOT host bandwidth; see ``_place_bank``);
+      device-to-device bytes of replicating staged arrays to the other
+      shards (NOT host bandwidth; the whole bank under the replicated
+      placement, only the arrivals column under sub-banks);
       ``stacked_h2d_bytes`` -- what the stacked plane would have
       shipped host->device for the same grid; ``dedup_ratio`` -- their
       ratio (>= 1; 1.0 on the stacked plane);
     * ``dev_mem_hwm_bytes`` -- engine-accounted device-memory
-      high-water mark: resident bank copies (one per shard) plus the
+      high-water mark: the measured resident bank bytes plus the
       in-flight tiles' input payloads at their peak.
 
     Empty until the first ``run_grid`` of the process."""
@@ -341,12 +406,28 @@ def _build_bank_tile_fn(sig: TileSignature) -> Callable:
     """Banked tile program: in-kernel gather from the device-resident
     bank columns, then the blocked scan -- fused into one Pallas kernel
     on TPU, an XLA gather + the shared ``_scan_wv`` core elsewhere.
-    Tiles ship only the two ``int32`` row-index vectors."""
+    Tiles ship only the two ``int32`` row-index vectors.
+
+    ``sig.bank_sub`` selects the per-shard sub-bank layout: the three
+    max-plus planes arrive stacked ``(n_shards, local_rows, n_stores)``
+    with the shard axis partitioned over the ``cells`` mesh, so under
+    ``shard_map`` each shard's view is ``(1, local_rows, n_stores)``
+    and ``[0]`` IS its local sub-bank -- the gather (wv indices are
+    pre-remapped to local rows, and the scheduler put every lane in its
+    owner's slot block) runs against shard-resident rows with zero
+    cross-shard communication, through the SAME kernel as the
+    replicated layout. Gathering a local row moves the identical bits
+    the global gather would, so the planes stay ``==``."""
     fused = bank_scan_backend() == "pallas"
 
     def run(a_bank, w_bank, v_bank, p_bank, trace_idx, wv_idx):
         global _TRACE_COUNT
         _TRACE_COUNT += 1          # runs once per trace, not per call
+        if sig.bank_sub:
+            # per-shard view of the shard-partitioned stacks (a no-op
+            # reshape on device: axis 0 is size 1 inside shard_map, and
+            # the full local plane at n_shards=1)
+            w_bank, v_bank, p_bank = w_bank[0], v_bank[0], p_bank[0]
         if fused:
             # gathered rows stream HBM->VMEM inside the kernel; no
             # stacked (B, n_stores) intermediate ever exists in HBM
@@ -364,10 +445,13 @@ def _build_bank_tile_fn(sig: TileSignature) -> Callable:
                         sig.sb_uniform)
 
     if sig.n_shards > 1:
-        # banks replicated (gathers stay local), indices cell-sharded:
-        # still zero cross-device communication
+        # replicated: banks replicated (gathers stay local), indices
+        # cell-sharded. sub: max-plus stacks shard-partitioned, every
+        # lane scheduled onto its owner shard -- either way zero
+        # cross-device communication
         run = shard_map(run, cells_mesh(sig.n_shards),
-                        in_specs=bank_tile_specs(),
+                        in_specs=(sub_bank_tile_specs() if sig.bank_sub
+                                  else bank_tile_specs()),
                         out_specs=(P("cells"),) * 3)
     return jax.jit(run)
 
@@ -468,6 +552,50 @@ def _place_bank(bank: TraceBank, n_shards: int) -> Tuple[int, tuple]:
     return bank.device_args(("cells", n_shards), place)
 
 
+def _place_sub_bank(bank: TraceBank, n_shards: int) -> Tuple[int, tuple]:
+    """Device-resident PER-SHARD sub-bank (``bank_partition="sub"``,
+    the default): arrivals replicated as in :func:`_place_bank` (tiny
+    -- ~1% of the bank's bytes -- and a lane's trace row may be owned
+    by a different shard than its wv row), the three max-plus planes
+    shard-partitioned via ``TraceBank.sub_bank_host`` -- ONE copy of
+    each wv row fleet-wide, so resident device bytes drop to
+    ~``1/n_shards`` of the replicated layout. The sub stacks
+    ``device_put`` straight to their sharded layout (each device
+    receives only its slice: host->device bytes stay at bank scale,
+    no fabric replication); only the arrivals staging replicates.
+    Memoized on the bank like :func:`_place_bank`."""
+    if n_shards == 1:
+        return bank.sub_device_args(1)
+    mesh = cells_mesh(n_shards)
+
+    def place(host: tuple) -> tuple:
+        a = jax.device_put(host[0], jax.devices()[0])     # host -> dev0
+        a = jax.device_put(a, bank_shardings(mesh)[0])    # dev -> dev
+        subs = jax.device_put(tuple(host[1:]), sub_bank_shardings(mesh))
+        return (a,) + tuple(subs)
+
+    return bank.sub_device_args(n_shards, place)
+
+
+def _measured_device_bytes(arrays: Sequence[jax.Array]) -> Tuple[int, int]:
+    """Resident device bytes of ``arrays``, MEASURED from the live
+    buffers: ``(total_bytes, max_bytes_on_one_device)`` summed over
+    every array's addressable shards. A replicated array contributes
+    one full copy per device, a shard-partitioned one only its slices
+    -- so this reports what the placement actually holds, not an
+    analytic ``bank x n_shards`` model (``bank_stats()`` satellite of
+    the sub-bank PR; the old product over-reported sub placements
+    n_shards-fold)."""
+    per_dev: Dict[object, int] = {}
+    for arr in arrays:
+        for sh in arr.addressable_shards:
+            dev = sh.device
+            per_dev[dev] = per_dev.get(dev, 0) + int(sh.data.nbytes)
+    if not per_dev:
+        return 0, 0
+    return sum(per_dev.values()), max(per_dev.values())
+
+
 def warm_signatures(sigs: List[TileSignature], t_l1, t_wt,
                     bank_dev: Optional[tuple] = None) -> None:
     """Compile every distinct tile program with zero inputs (runs on the
@@ -544,7 +672,8 @@ def run_grid(specs: Sequence[ScenarioSpec],
              chunk_size: Optional[int] = None,
              tile_cells: Optional[int] = None,
              n_shards: Optional[int] = None,
-             data_plane: Optional[str] = None) -> List[SimResult]:
+             data_plane: Optional[str] = None,
+             bank_partition: Optional[str] = None) -> List[SimResult]:
     """Stream a (mega-)grid through the sharded tile engine.
 
     Results come back in ``specs`` order, bit-identical to
@@ -562,6 +691,15 @@ def run_grid(specs: Sequence[ScenarioSpec],
     per-cell-copies plane (the measured baseline); results are
     bit-identical either way.
 
+    ``bank_partition`` picks the banked plane's device layout:
+    ``"sub"`` (the default) partitions the three max-plus columns into
+    per-shard sub-banks -- one copy of each row fleet-wide, scan lanes
+    scheduled onto their owning shard with shard-local wv indices, so
+    resident bank device bytes are ~``1/n_shards`` of the replicated
+    layout with the gather still shard-local -- while ``"replicated"``
+    keeps the PR-4 one-copy-per-shard layout (the measured baseline).
+    Both partitions are bit-identical: they gather the same rows.
+
     The loop overlaps three stages: the prefetch thread derives tile
     k+1's host payload while tile k's is placed cell-sharded on the
     mesh and its (asynchronously dispatched) scan runs. Dispatch runs
@@ -570,7 +708,7 @@ def run_grid(specs: Sequence[ScenarioSpec],
     compute finishes and releasing its input buffers), which -- with
     the bank resident -- caps live memory at the bank plus a few tile
     payloads however large the grid is. :func:`bank_stats` reports the
-    run's H2D / memory accounting.
+    run's H2D / memory accounting (measured from the live buffers).
     """
     if not specs:
         return []
@@ -580,6 +718,9 @@ def run_grid(specs: Sequence[ScenarioSpec],
     plane = data_plane or "bank"
     if plane not in ("bank", "stacked"):
         raise ValueError(f"unknown data_plane {data_plane!r}")
+    partition = bank_partition or "sub"
+    if partition not in ("sub", "replicated"):
+        raise ValueError(f"unknown bank_partition {bank_partition!r}")
     n_dev = len(jax.devices())
     if n_shards is None:
         # all local devices: even oversubscribed virtual CPU devices
@@ -613,12 +754,14 @@ def run_grid(specs: Sequence[ScenarioSpec],
         # to ~2 700 scanned lanes.
         lane_of: Dict[tuple, int] = {}
         lane_specs: List[ScenarioSpec] = []
+        lane_wv_keys: List[tuple] = []
         for i, s in enumerate(specs):
             sb = s.sb_size if s.sb_size is not None else cluster.store_buffer
             key = (sb,) + _plane_keys(s, cluster)
             j = lane_of.setdefault(key, len(lane_specs))
             if j == len(lane_specs):
                 lane_specs.append(s)
+                lane_wv_keys.append(key[2])
                 lane_members.append([i])
             else:
                 lane_members[j].append(i)
@@ -626,11 +769,21 @@ def run_grid(specs: Sequence[ScenarioSpec],
         # signatures -- and therefore compile warming -- do not wait
         # for the heavy row materialization below
         trace_map, wv_map = bank_row_maps(specs, cluster)
-        shape = (len(trace_map), len(wv_map))
+        sub = partition == "sub"
+        if sub:
+            # per-shard sub-banks: the signature carries the LOCAL
+            # (per-shard) wv row count, and the scheduler places each
+            # lane in the slot block of the shard owning its wv row
+            shape = (len(trace_map), sub_bank_rows(len(wv_map), n_shards))
+            owners = [wv_map[wk] % n_shards for wk in lane_wv_keys]
+        else:
+            shape = (len(trace_map), len(wv_map))
+            owners = None
         tiles = [dataclasses.replace(
             t, sig=dataclasses.replace(t.sig, data_plane="bank",
-                                       bank_shape=shape))
-            for t in plan_tiles(lane_specs, small_pad=False, **plan_kw)]
+                                       bank_shape=shape, bank_sub=sub))
+            for t in plan_tiles(lane_specs, small_pad=False, owners=owners,
+                                **plan_kw)]
     else:
         tiles = plan_tiles(specs, **plan_kw)
     costs = _commit_cost_ns("proactive", cluster)
@@ -654,22 +807,35 @@ def run_grid(specs: Sequence[ScenarioSpec],
     h2d_bytes = sum(tile_payload_bytes(t.sig) for t in tiles)
     live_bytes = 0
     hwm_bytes = 0
+    fabric_bytes = 0
+    bank_dev_total = bank_dev_per = 0
 
     def prep_banked(tile: Tile):
         """Banked tile prep (prefetch thread): the two padded int32
         row-index vectors, plus per-MEMBER-cell result metadata grouped
         by lane (the scatter targets -- ``_prepare_cell``'s array
-        fields are memo references, not copies, so this stays cheap)."""
-        rows = [bank.rows_for(s) for s in tile.specs]
-        rows += [rows[0]] * (tile.sig.b_pad - len(rows))
-        idx = (np.asarray([r[0] for r in rows], np.int32),
-               np.asarray([r[1] for r in rows], np.int32))
+        fields are memo references, not copies, so this stays cheap).
+        Sub-banked tiles remap wv rows to their SHARD-LOCAL index
+        (``row // n_shards``) and scatter each lane into its
+        :attr:`Tile.slots` position; unfilled slots stay 0 -- trace
+        row 0 and local row 0 are valid gather targets on every shard
+        (sub-banks are padded to at least one row), and padding
+        outputs are discarded."""
+        trace_idx = np.zeros(tile.sig.b_pad, np.int32)
+        wv_idx = np.zeros(tile.sig.b_pad, np.int32)
+        slots = tile.slots if tile.slots is not None \
+            else range(len(tile.specs))
+        wv_div = n_shards if tile.sig.bank_sub else 1
+        for s, pos in zip(tile.specs, slots):
+            tr, wr = bank.rows_for(s)
+            trace_idx[pos] = tr
+            wv_idx[pos] = wr // wv_div
         groups = [[(i, _prepare_cell(
             specs[i], _trace_cached(specs[i].workload, n_stores,
                                     specs[i].seed, cluster),
             n_stores, cluster)) for i in lane_members[lane]]
             for lane in tile.indices]
-        return groups, idx
+        return groups, (trace_idx, wv_idx)
 
     def prep_stacked(tile: Tile):
         cells, np_args = _prep_tile(tile, n_stores, cluster)
@@ -680,14 +846,18 @@ def run_grid(specs: Sequence[ScenarioSpec],
     def finish(entry) -> None:
         """Drain one dispatched tile: blocks until its device compute is
         done, releasing its input buffers, and scatters each lane's
-        outputs back to its member cells' original grid positions."""
+        outputs back to its member cells' original grid positions
+        (through :attr:`Tile.slots` when the sub-bank scheduler placed
+        lanes in shard-owner blocks)."""
         nonlocal live_bytes
         tile, groups, (exec_ns, at_head, sb_full) = entry
         exec_ns = np.asarray(exec_ns)
         at_head = np.asarray(at_head)
         sb_full = np.asarray(sb_full)
         live_bytes -= tile_payload_bytes(tile.sig)
-        for j, group in enumerate(groups):
+        slots = tile.slots if tile.slots is not None \
+            else range(len(tile.indices))
+        for group, pos in zip(groups, slots):
             for i, cell in group:
                 meta = {"engine": ("sharded" if tile.sig.n_shards > 1
                                    else "streamed"),
@@ -696,11 +866,14 @@ def run_grid(specs: Sequence[ScenarioSpec],
                         "tile_cells": tile.sig.b_pad,
                         "n_shards": tile.sig.n_shards,
                         "data_plane": plane,
+                        "bank_partition": (partition if plane == "bank"
+                                           else None),
                         "bank_rows": bank.n_rows if bank is not None else 0,
-                        "h2d_bytes": h2d_bytes}
-                results[i] = _finish_result(cell, exec_ns[j],
-                                            int(at_head[j]),
-                                            int(sb_full[j]), meta=meta)
+                        "h2d_bytes": h2d_bytes,
+                        "bank_fabric_bytes": fabric_bytes}
+                results[i] = _finish_result(cell, exec_ns[pos],
+                                            int(at_head[pos]),
+                                            int(sb_full[pos]), meta=meta)
 
     in_flight = []
     prep_pool = ThreadPoolExecutor(max_workers=1)
@@ -709,11 +882,22 @@ def run_grid(specs: Sequence[ScenarioSpec],
         if plane == "bank":
             # materialize + upload the bank before warming: the warm
             # calls (and every tile call) gather from the one resident
-            # copy, and compilation overlaps the first tiles' loop
+            # placement, and compilation overlaps the first tiles' loop
             bank = get_trace_bank(specs, n_stores, cluster)
-            bank_fresh, bank_dev = _place_bank(bank, n_shards)
+            if sub:
+                bank_fresh, bank_dev = _place_sub_bank(bank, n_shards)
+                # only the replicated arrivals staging crosses the
+                # device fabric; the partitioned max-plus stacks ship
+                # each shard's slice straight from the host
+                fabric_bytes = (bank.arrivals.nbytes * (n_shards - 1)
+                                if bank_fresh else 0)
+            else:
+                bank_fresh, bank_dev = _place_bank(bank, n_shards)
+                fabric_bytes = (bank.nbytes * (n_shards - 1)
+                                if bank_fresh else 0)
             h2d_bytes += bank_fresh
-            live_bytes = hwm_bytes = bank.nbytes * n_shards
+            bank_dev_total, bank_dev_per = _measured_device_bytes(bank_dev)
+            live_bytes = hwm_bytes = bank_dev_total
         sigs = list(dict.fromkeys(t.sig for t in tiles))
         warm = compile_pool.submit(_warm_signatures, sigs, t_l1, t_wt,
                                    bank_dev)
@@ -746,16 +930,16 @@ def run_grid(specs: Sequence[ScenarioSpec],
     _BANK_STATS.clear()
     _BANK_STATS.update({
         "data_plane": plane, "cells": len(specs), "n_shards": n_shards,
+        "bank_partition": partition if plane == "bank" else None,
         "scan_lanes": len(lane_members) if plane == "bank" else len(specs),
         "trace_rows": bank.trace_rows if bank is not None else 0,
         "wv_rows": bank.wv_rows if bank is not None else 0,
         "bank_rows": bank.n_rows if bank is not None else 0,
         "bank_bytes": bank.nbytes if bank is not None else 0,
-        "bank_dev_bytes_per_shard": bank.nbytes if bank is not None else 0,
-        "bank_dev_bytes": bank.nbytes * n_shards if bank is not None else 0,
+        "bank_dev_bytes_per_shard": bank_dev_per,
+        "bank_dev_bytes": bank_dev_total,
         "h2d_bytes": h2d_bytes,
-        "bank_fabric_bytes": (bank.nbytes * (n_shards - 1) * (bank_fresh > 0)
-                              if bank is not None else 0),
+        "bank_fabric_bytes": fabric_bytes,
         "stacked_h2d_bytes": stacked_h2d,
         "dedup_ratio": stacked_h2d / max(h2d_bytes, 1),
         "dev_mem_hwm_bytes": hwm_bytes,
@@ -774,7 +958,8 @@ def simulate_grid(specs: Sequence[ScenarioSpec],
                   chunk_size: Optional[int] = None,
                   tile_cells: Optional[int] = None,
                   n_shards: Optional[int] = None,
-                  data_plane: Optional[str] = None) -> List[SimResult]:
+                  data_plane: Optional[str] = None,
+                  bank_partition: Optional[str] = None) -> List[SimResult]:
     """Run a scenario grid on the right engine tier.
 
     ``engine``:
@@ -789,12 +974,18 @@ def simulate_grid(specs: Sequence[ScenarioSpec],
       (:func:`run_grid`).
 
     ``data_plane`` (blocked and stream tiers) selects the columnar bank
-    (default) or the stacked per-cell-copies baseline. All tiers and
-    planes return bit-identical results in ``specs`` order;
-    ``SimResult.meta`` records what actually ran.
+    (default) or the stacked per-cell-copies baseline;
+    ``bank_partition`` (stream tier only -- the one with a sharded
+    placement) selects per-shard sub-banks (default) or the replicated
+    layout, see :func:`run_grid`. All tiers and planes return
+    bit-identical results in ``specs`` order; ``SimResult.meta``
+    records what actually ran.
     """
     if engine == "auto":
         engine = "stream" if len(specs) >= STREAM_THRESHOLD else "blocked"
+    if bank_partition is not None and engine != "stream":
+        raise ValueError(
+            f"bank_partition applies to the stream tier only, not {engine!r}")
     if engine == "serial":
         for s in specs:
             s.validate(cluster)
@@ -812,5 +1003,6 @@ def simulate_grid(specs: Sequence[ScenarioSpec],
     if engine == "stream":
         return run_grid(specs, cluster=cluster, n_stores=n_stores,
                         chunk_size=chunk_size, tile_cells=tile_cells,
-                        n_shards=n_shards, data_plane=data_plane)
+                        n_shards=n_shards, data_plane=data_plane,
+                        bank_partition=bank_partition)
     raise ValueError(f"unknown engine {engine!r}")

@@ -27,7 +27,16 @@ How a query is served (docs/serving.md has the lifecycle diagram):
    merged grid) and ships ONLY the appended rows host->device: the
    device bank is **capacity-padded** (rows rounded up to
    :data:`SERVE_ROW_PAD`), so in-capacity appends splice the new rows
-   into the resident buffers without changing the array shapes.
+   into the resident buffers without changing the array shapes. The
+   resident bank uses the engine's PER-SHARD SUB-BANK layout
+   (``engine._place_sub_bank`` shape): arrivals replicated, the three
+   max-plus planes stacked ``(n_shards, local_capacity, n_stores)``
+   and partitioned over the ``cells`` mesh -- one padded copy of each
+   wv row fleet-wide, row ``r`` owned by shard ``r % n_shards`` at
+   local index ``r // n_shards``. Capacity is therefore PER SHARD:
+   in-capacity wv appends splice a rectangular local-row window (at
+   most ``n_shards - 1`` old rows re-ship) with one shard-local
+   ``concatenate``, no cross-device traffic.
 
 3. **Canonical batching.** Miss lanes are grouped and padded by
    ``engine.plan_tiles(small_pad=False)`` into the SAME canonical
@@ -44,6 +53,16 @@ How a query is served (docs/serving.md has the lifecycle diagram):
    within ``batch_window_ms`` (or up to ``batch_cells``) into one
    flush, so concurrent callers share tiles instead of paying one
    dispatch each.
+
+5. **Bounded uptime state.** Both the lane-answer cache and the bank
+   grow monotonically with the query universe by default; for
+   week-long daemons ``max_lanes`` LRU-bounds the lane cache (least
+   recently *asked* lane evicted first) and ``max_bank_rows`` triggers
+   a bank **compaction** -- rebuild from the live cached lanes' specs,
+   drop the device bank for a fresh capacity placement. Evicted lanes
+   re-asked later take the ordinary miss path (extend + scan) and stay
+   bit-identical; ``stats()`` counts ``lane_evictions`` /
+   ``bank_compactions``.
 
 Recovery questions ("what's my downtime if CN 3 dies mid-interval?")
 bypass the store-level scan entirely: :meth:`query_downtime` delegates
@@ -64,7 +83,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from concurrent.futures import Future
 from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -87,7 +106,7 @@ from repro.core.simulator import (
     get_trace_bank,
 )
 from repro.distributed.context import cells_mesh
-from repro.distributed.sharding import bank_shardings
+from repro.distributed.sharding import bank_shardings, sub_bank_shardings
 
 #: Device-bank rows are padded up to the next multiple of this (with at
 #: least one full spare block of headroom), so appending a novel
@@ -133,11 +152,17 @@ class ScenarioServer:
 
     ``batch_cells`` is the canonical serve-tile size (every flush pads
     to it -- one compiled program per store-buffer depth);
-    ``row_pad`` the device-bank capacity quantum (:data:`SERVE_ROW_PAD`);
-    ``n_shards`` > 1 shards flush tiles over the ``cells`` mesh exactly
-    like the streaming engine (bank replicated, indices sharded).
-    Use as a context manager or call :meth:`close` to stop the daemon
-    thread; a closed server still answers synchronous queries.
+    ``row_pad`` the device-bank capacity quantum (:data:`SERVE_ROW_PAD`;
+    the wv capacity is PER-SHARD local rows, so the global headroom is
+    ``~n_shards x row_pad``); ``n_shards`` > 1 shards flush tiles over
+    the ``cells`` mesh exactly like the streaming engine's sub-bank
+    layout (arrivals replicated, max-plus planes shard-partitioned,
+    every miss lane scheduled onto the shard owning its wv row).
+    ``max_lanes`` / ``max_bank_rows`` (both unbounded by default)
+    LRU-bound the lane-answer cache and trigger bank compaction for
+    long uptimes -- see the module docstring. Use as a context manager
+    or call :meth:`close` to stop the daemon thread; a closed server
+    still answers synchronous queries.
     """
 
     def __init__(self, cluster: ClusterConfig = PAPER_CLUSTER,
@@ -146,7 +171,9 @@ class ScenarioServer:
                  batch_window_ms: float = 2.0,
                  chunk_size: Optional[int] = None,
                  n_shards: int = 1,
-                 row_pad: int = SERVE_ROW_PAD):
+                 row_pad: int = SERVE_ROW_PAD,
+                 max_lanes: Optional[int] = None,
+                 max_bank_rows: Optional[int] = None):
         n_dev = len(jax.devices())
         if not 1 <= n_shards <= n_dev:
             raise ValueError(f"n_shards must be in [1, {n_dev}], "
@@ -155,6 +182,11 @@ class ScenarioServer:
             raise ValueError(f"batch_cells must be >= 1, got {batch_cells}")
         if row_pad < 1:
             raise ValueError(f"row_pad must be >= 1, got {row_pad}")
+        if max_lanes is not None and max_lanes < 1:
+            raise ValueError(f"max_lanes must be >= 1, got {max_lanes}")
+        if max_bank_rows is not None and max_bank_rows < 2:
+            raise ValueError("max_bank_rows must be >= 2 (one lane needs "
+                             f"a trace and a wv row), got {max_bank_rows}")
         self.cluster = cluster
         self.n_stores = int(n_stores)
         self.batch_cells = int(batch_cells)
@@ -162,21 +194,29 @@ class ScenarioServer:
         self.chunk_size = chunk_size
         self.n_shards = int(n_shards)
         self.row_pad = int(row_pad)
+        self.max_lanes = max_lanes
+        self.max_bank_rows = max_bank_rows
 
         # serve state (all guarded by _lock)
         self._lock = threading.RLock()
         self._bank = None                               # TraceBank handle
         self._dev: Optional[tuple] = None               # capacity arrays
-        self._cap: Tuple[int, int] = (0, 0)             # device capacity
+        self._cap: Tuple[int, int] = (0, 0)             # (trace, LOCAL wv)
         self._dev_rows: Tuple[int, int] = (0, 0)        # real rows resident
-        self._lanes: Dict[tuple, Tuple[np.floating, int, int]] = {}
+        # lane key -> (exec_ns, at_head, sb_full, representative spec);
+        # insertion order IS recency order (move_to_end on every hit),
+        # so eviction pops the least recently asked lane first and
+        # compaction rebuilds the bank from exactly the live specs
+        self._lanes: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._sigs: Set[_engine.TileSignature] = set()
+        self._compact_floor = 0        # rows after the last compaction
         self._stats: Dict[str, int] = {
             "queries": 0, "lane_hits": 0, "lane_misses": 0,
             "scanned_lanes": 0, "flushes": 0, "batches": 0,
             "h2d_bytes": 0, "bank_uploads": 0, "bank_builds": 0,
             "appended_trace_rows": 0, "appended_wv_rows": 0,
             "compiled_programs": 0, "downtime_queries": 0,
+            "lane_evictions": 0, "bank_compactions": 0,
         }
 
         # async queue (guarded by _cond; the worker serves via the
@@ -235,34 +275,72 @@ class ScenarioServer:
         sharding = bank_shardings(mesh)[0]
         return tuple(jax.device_put(x, sharding) for x in staged)
 
+    def _place_sub(self, host: tuple) -> tuple:
+        """Place ``(n_shards, local_rows, ...)`` stacks shard-partitioned
+        on axis 0 (each device receives ONLY its slice straight from the
+        host -- no fabric replication), plain arrays at one shard."""
+        if self.n_shards == 1:
+            return tuple(jnp.asarray(x) for x in host)
+        mesh = cells_mesh(self.n_shards)
+        sharding = sub_bank_shardings(mesh)[0]
+        return tuple(jax.device_put(x, sharding) for x in host)
+
+    def _sub_stack(self, col: np.ndarray, cap: int) -> np.ndarray:
+        """Host sub-bank stack of ``col`` at local capacity ``cap``:
+        ``out[s, q] = col[q * n_shards + s]`` (owner ``r % n_shards``,
+        local index ``r // n_shards``), zero-padded per shard."""
+        n = self.n_shards
+        out = np.zeros((n, cap) + col.shape[1:], col.dtype)
+        for s in range(n):
+            rows = col[s::n]
+            out[s, :rows.shape[0]] = rows
+        return out
+
     def _splice(self, dev, rows: np.ndarray, r0: int):
-        """Splice ``rows`` into the capacity array at row ``r0``
-        device-side (the only host->device bytes are ``rows`` itself;
-        the surrounding capacity rows never recross the link)."""
+        """Splice ``rows`` into the replicated capacity array at row
+        ``r0`` device-side (the only host->device bytes are ``rows``
+        itself; the surrounding capacity rows never recross the link)."""
         delta = self._place_rows((np.ascontiguousarray(rows),))[0]
         return jnp.concatenate([dev[:r0], delta, dev[r0 + rows.shape[0]:]],
                                axis=0)
 
+    def _sub_window(self, col: np.ndarray, lo: int, hi: int,
+                    p: int) -> np.ndarray:
+        """The ``(n_shards, hi - lo, ...)`` sub-stack window covering
+        global rows ``[lo * n_shards, p)`` of ``col`` -- the local-row
+        span ``[lo, hi)`` every shard splices in one rectangular block.
+        Global row ``r = (q - lo) * n_shards + s + lo * n_shards`` lands
+        at ``[s, q - lo]``; slots past ``p`` stay zero (unowned tail of
+        the ragged last local row)."""
+        n = self.n_shards
+        span = np.zeros(((hi - lo) * n,) + col.shape[1:], col.dtype)
+        span[:p - lo * n] = col[lo * n:p]
+        return np.ascontiguousarray(
+            span.reshape((hi - lo, n) + col.shape[1:]).swapaxes(0, 1))
+
     def _sync_device(self) -> int:
-        """Bring the capacity-padded device bank up to date with the
-        host bank. Returns the bytes that crossed host->device: the
-        whole padded bank on first placement or a capacity growth, just
-        the appended row slices otherwise."""
+        """Bring the capacity-padded device sub-bank up to date with
+        the host bank. Returns the bytes that crossed host->device: the
+        whole padded bank on first placement or a capacity growth;
+        otherwise just the appended arrivals rows plus the spliced
+        local-row window (at most ``n_shards - 1`` old wv rows re-ship
+        -- the rectangle is the price of one shard-uniform splice)."""
         bank = self._bank
+        n = self.n_shards
         t, p = bank.trace_rows, bank.wv_rows
         t_cap = _row_capacity(t, self.row_pad)
-        p_cap = _row_capacity(p, self.row_pad)
+        p_cap = _row_capacity(-(-p // n), self.row_pad)   # per-shard local
         if self._dev is None or t_cap > self._cap[0] or p_cap > self._cap[1]:
             cap = (max(t_cap, self._cap[0]), max(p_cap, self._cap[1]))
-            host = (_pad_rows(bank.arrivals, cap[0]),
-                    _pad_rows(bank.w, cap[1]),
-                    _pad_rows(bank.v, cap[1]),
-                    _pad_rows(bank.pr_nc, cap[1]))
-            self._dev = self._place_rows(host)
+            a_host = _pad_rows(bank.arrivals, cap[0])
+            subs = (self._sub_stack(bank.w, cap[1]),
+                    self._sub_stack(bank.v, cap[1]),
+                    self._sub_stack(bank.pr_nc, cap[1]))
+            self._dev = self._place_rows((a_host,)) + self._place_sub(subs)
             self._cap = cap
             self._dev_rows = (t, p)
             self._stats["bank_uploads"] += 1
-            return sum(int(x.nbytes) for x in host)
+            return int(a_host.nbytes) + sum(int(x.nbytes) for x in subs)
         h2d = 0
         a, w, v, pnc = self._dev
         t0, p0 = self._dev_rows
@@ -270,11 +348,18 @@ class ScenarioServer:
             a = self._splice(a, bank.arrivals[t0:t], t0)
             h2d += int(bank.arrivals[t0:t].nbytes)
         if p > p0:
-            w = self._splice(w, bank.w[p0:p], p0)
-            v = self._splice(v, bank.v[p0:p], p0)
-            pnc = self._splice(pnc, bank.pr_nc[p0:p], p0)
-            h2d += int(bank.w[p0:p].nbytes + bank.v[p0:p].nbytes
-                       + bank.pr_nc[p0:p].nbytes)
+            # local rows touched by global rows [p0, p): splice the
+            # rectangular window [lo, hi) on every shard at once --
+            # axis 1 of an axis-0-sharded array, so the concatenate is
+            # shard-local (zero cross-device traffic)
+            lo, hi = p0 // n, -(-p // n)
+            deltas = tuple(self._sub_window(c, lo, hi, p)
+                           for c in (bank.w, bank.v, bank.pr_nc))
+            dw, dv, dp = self._place_sub(deltas)
+            w = jnp.concatenate([w[:, :lo], dw, w[:, hi:]], axis=1)
+            v = jnp.concatenate([v[:, :lo], dv, v[:, hi:]], axis=1)
+            pnc = jnp.concatenate([pnc[:, :lo], dp, pnc[:, hi:]], axis=1)
+            h2d += sum(int(d.nbytes) for d in deltas)
         if h2d:
             self._dev = (a, w, v, pnc)
             self._dev_rows = (t, p)
@@ -284,16 +369,24 @@ class ScenarioServer:
                     ) -> List[Tuple[_engine.Tile, _engine.TileSignature]]:
         """Plan miss lanes into canonical serve tiles: the streaming
         engine's own scheduler at the serve-tile size, retargeted at
-        the banked plane with the CAPACITY shape (the signature the
-        compiled programs are keyed on, stable across in-capacity
-        appends)."""
+        the banked SUB layout with the CAPACITY shape (the signature
+        the compiled programs are keyed on, stable across in-capacity
+        appends). At more than one shard each lane is scheduled into
+        the slot block of the shard owning its wv row, so the in-jit
+        gather stays shard-local against the partitioned stacks."""
+        owners = None
+        if self.n_shards > 1:
+            owners = [self._bank.rows_for(s)[1] % self.n_shards
+                      for s in lane_specs]
         tiles = _engine.plan_tiles(lane_specs, cluster=self.cluster,
                                    n_stores=self.n_stores,
                                    chunk_size=self.chunk_size,
                                    tile_cells=self.batch_cells,
-                                   n_shards=self.n_shards, small_pad=False)
+                                   n_shards=self.n_shards, small_pad=False,
+                                   owners=owners)
         return [(t, dataclasses.replace(t.sig, data_plane="bank",
-                                        bank_shape=self._cap))
+                                        bank_shape=self._cap,
+                                        bank_sub=True))
                 for t in tiles]
 
     def _scan_lanes(self, miss: Dict[tuple, ScenarioSpec]) -> int:
@@ -303,19 +396,51 @@ class ScenarioServer:
         bank = self._bank
         h2d = 0
         for tile, sig in self._serve_sigs([miss[k] for k in lane_keys]):
-            rows = [bank.rows_for(s) for s in tile.specs]
-            rows += [rows[0]] * (sig.b_pad - len(rows))
-            idx = (np.asarray([r[0] for r in rows], np.int32),
-                   np.asarray([r[1] for r in rows], np.int32))
+            trace_idx = np.zeros(sig.b_pad, np.int32)
+            wv_idx = np.zeros(sig.b_pad, np.int32)
+            slots = list(tile.slots) if tile.slots is not None \
+                else list(range(len(tile.specs)))
+            for s, pos in zip(tile.specs, slots):
+                tr, wr = bank.rows_for(s)
+                trace_idx[pos] = tr
+                wv_idx[pos] = wr // self.n_shards    # shard-LOCAL row
+            idx = (trace_idx, wv_idx)
             h2d += idx[0].nbytes + idx[1].nbytes
             out = _engine.tile_fn(sig)(*self._dev,
                                        *_engine._place_tile(idx, sig))
             exec_ns, at_head, sb_full = (np.asarray(o) for o in out)
-            for j, i in enumerate(tile.indices):
-                self._lanes[lane_keys[i]] = (exec_ns[j], int(at_head[j]),
-                                             int(sb_full[j]))
+            for i, pos in zip(tile.indices, slots):
+                key = lane_keys[i]
+                self._lanes[key] = (exec_ns[pos], int(at_head[pos]),
+                                    int(sb_full[pos]), miss[key])
             self._sigs.add(sig)
         return h2d
+
+    def _evict(self) -> None:
+        """LRU-bound the serve state (end of every flush, under _lock):
+        pop least-recently-asked lanes past ``max_lanes``, and when the
+        append-only bank has outgrown ``max_bank_rows``, COMPACT it --
+        rebuild from the live cached lanes' specs and drop the device
+        bank so the next flush re-places at the compacted capacity (a
+        rare recompile if the capacity shape shrank). ``_compact_floor``
+        stops back-to-back rebuilds when the live lanes alone exceed
+        the bound: another compaction only fires after real growth."""
+        st = self._stats
+        if self.max_lanes is not None:
+            while len(self._lanes) > self.max_lanes:
+                self._lanes.popitem(last=False)
+                st["lane_evictions"] += 1
+        if (self.max_bank_rows is not None and self._bank is not None
+                and self._bank.n_rows > max(self.max_bank_rows,
+                                            self._compact_floor)
+                and self._lanes):
+            live = [entry[3] for entry in self._lanes.values()]
+            self._bank = get_trace_bank(live, self.n_stores, self.cluster)
+            self._dev = None
+            self._cap = (0, 0)
+            self._dev_rows = (0, 0)
+            self._compact_floor = self._bank.n_rows
+            st["bank_compactions"] += 1
 
     # -- synchronous serving ----------------------------------------------
 
@@ -343,7 +468,9 @@ class ScenarioServer:
             keys = [self._lane_key(s) for s in specs]
             miss: Dict[tuple, ScenarioSpec] = {}
             for s, k in zip(specs, keys):
-                if k not in self._lanes:
+                if k in self._lanes:
+                    self._lanes.move_to_end(k)      # LRU touch
+                else:
                     miss.setdefault(k, s)
             compiled0 = _engine.trace_count()
             if miss:
@@ -358,12 +485,13 @@ class ScenarioServer:
             st["flushes"] += 1
             results = []
             for s, k in zip(specs, keys):
-                exec_ns, at_head, sb_full = self._lanes[k]
+                exec_ns, at_head, sb_full, _ = self._lanes[k]
                 cell = _prepare_cell(
                     s, _trace_cached(s.workload, self.n_stores, s.seed,
                                      self.cluster),
                     self.n_stores, self.cluster)
                 meta = {"engine": "serving", "data_plane": "bank",
+                        "bank_partition": "sub",
                         "cache": "miss" if k in miss else "hit",
                         "h2d_bytes": h2d,
                         "bank_rows": self._bank.n_rows,
@@ -371,6 +499,7 @@ class ScenarioServer:
                         "n_shards": self.n_shards}
                 results.append(_finish_result(cell, exec_ns, at_head,
                                               sb_full, meta=meta))
+            self._evict()       # after results: this flush's lanes live
             return results
 
     def query_grid(self, **axes) -> List[SimResult]:
@@ -489,7 +618,11 @@ class ScenarioServer:
         hits over queries), ``lanes_cached``, bank geometry
         (``bank_rows`` real rows, ``bank_bytes`` -- the cost of one
         COLD full-bank upload, the baseline the marginal ``h2d_bytes``
-        is measured against -- and ``bank_capacity``), and ``pending``
+        is measured against -- ``bank_capacity`` as ``(trace rows,
+        per-shard local wv rows)``, and MEASURED resident device bytes
+        ``bank_dev_bytes`` / ``bank_dev_bytes_per_shard`` summed from
+        the live capacity buffers), the LRU counters
+        (``lane_evictions`` / ``bank_compactions``), and ``pending``
         queue depth."""
         with self._lock:
             st: Dict[str, object] = dict(self._stats)
@@ -500,6 +633,11 @@ class ScenarioServer:
             st["bank_bytes"] = self._bank.nbytes if self._bank else 0
             st["bank_capacity"] = self._cap
             st["dev_rows"] = self._dev_rows
+            st["bank_partition"] = "sub"
+            total, per = _engine._measured_device_bytes(
+                self._dev if self._dev is not None else ())
+            st["bank_dev_bytes"] = total
+            st["bank_dev_bytes_per_shard"] = per
         with self._cond:
             st["pending"] = len(self._queue)
         return st

@@ -739,6 +739,20 @@ def _plane_keys(spec: ScenarioSpec, cluster: ClusterConfig
     return trace_key, wv_key
 
 
+def sub_bank_rows(rows: int, n_shards: int) -> int:
+    """Local (per-shard) row count of a ``rows``-row wv plane
+    partitioned round-robin over ``n_shards`` sub-banks: global row
+    ``r`` is owned by shard ``r % n_shards`` at local row
+    ``r // n_shards``, so the widest shard holds ``ceil(rows /
+    n_shards)`` rows (floored at 1 so an empty or tiny plane still
+    yields a valid gather target at local row 0). The ownership rule is
+    a pure function of the global row index, so the append-only
+    :meth:`TraceBank.extend` contract carries over: appending global
+    rows only ever APPENDS to each shard's local sub-bank, never
+    reshuffles it."""
+    return max(1, -(-rows // n_shards))
+
+
 def _make_wv_row(wv_key: tuple, n_stores: int, cluster: ClusterConfig
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """One precollapsed max-plus column: host-side
@@ -888,6 +902,48 @@ class TraceBank:
             tuple(jnp.asarray(x) for x in host)
         self._device[key] = dev
         return self.nbytes, dev
+
+    def sub_bank_host(self, n_shards: int) -> tuple:
+        """Host arrays of the per-shard sub-bank layout: ``(arrivals,
+        w_sub, v_sub, pr_nc_sub)`` with the three max-plus planes
+        stacked ``(n_shards, local_rows, n_stores)`` -- shard ``s``'s
+        sub-bank is rows ``s::n_shards`` of the global plane, zero-
+        padded to the widest shard's :func:`sub_bank_rows` count.
+        Arrivals stay the global 2-D plane (they are replicated on
+        device; see ``distributed.sharding.SUB_BANK_SPEC``)."""
+        p_loc = sub_bank_rows(self.wv_rows, n_shards)
+
+        def sub(col: np.ndarray) -> np.ndarray:
+            out = np.zeros((n_shards, p_loc) + col.shape[1:], col.dtype)
+            for s in range(n_shards):
+                rows = col[s::n_shards]
+                out[s, :rows.shape[0]] = rows
+            return out
+
+        return self.arrivals, sub(self.w), sub(self.v), sub(self.pr_nc)
+
+    def sub_device_args(self, n_shards: int,
+                        place: Optional[Callable[[tuple], tuple]] = None
+                        ) -> Tuple[int, tuple]:
+        """Device-resident sub-bank placement (:meth:`sub_bank_host`
+        layout), memoized like :meth:`device_args` under the key
+        ``("sub", n_shards)``. Returns ``(bytes_uploaded_now,
+        arrays)``. Growth re-places the whole sub-bank (no diff path:
+        the streaming engine never extends a bank mid-run, and the
+        serving daemon keeps its own capacity-padded device state with
+        per-shard splices)."""
+        key = ("sub", n_shards)
+        entry = self._device.get(key)
+        rows_now = (self.trace_rows, self.wv_rows)
+        if entry is not None:
+            rows_placed, dev = entry
+            if rows_placed == rows_now:
+                return 0, dev
+        host = self.sub_bank_host(n_shards)
+        dev = place(host) if place is not None else \
+            tuple(jnp.asarray(x) for x in host)
+        self._device[key] = (rows_now, dev)
+        return sum(int(x.nbytes) for x in host), dev
 
     def extend(self, specs: Sequence[ScenarioSpec]) -> Tuple[int, int]:
         """Append the rows of ``specs`` not yet in the bank, in place.

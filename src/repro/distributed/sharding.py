@@ -358,6 +358,36 @@ def bank_shardings(mesh: jax.sharding.Mesh) -> Tuple[NamedSharding, ...]:
     return (NamedSharding(mesh, BANK_COLUMN_SPEC),) * 4
 
 
+#: Per-shard sub-bank plane (``bank_partition="sub"``, the default): the
+#: three max-plus columns are stacked ``(n_shards, local_rows,
+#: n_stores)`` with the SHARD axis cell-sharded -- one copy of each wv
+#: row fleet-wide instead of one per shard. Global wv row ``r`` lives in
+#: stack entry ``r % n_shards`` at local row ``r // n_shards``, and the
+#: tile scheduler places every scan lane in its owning shard's slot
+#: block, so the in-jit gather (with LOCAL indices) never leaves the
+#: shard: still zero cross-device communication on the scan path. The
+#: tiny arrivals plane stays replicated (``BANK_COLUMN_SPEC``): a lane's
+#: trace row and wv row can be owned by different shards, and arrivals
+#: are ~1% of the bank's bytes -- partitioning them would buy nothing
+#: and force a second ownership constraint on the scheduler.
+SUB_BANK_SPEC = P("cells", None, None)
+
+
+def sub_bank_tile_specs() -> Tuple[P, ...]:
+    """In PartitionSpecs for a sub-banked tile program: the replicated
+    arrivals column, 3 shard-partitioned sub-bank stacks, then the 2
+    cell-sharded row-index vectors (trace indices global, wv indices
+    shard-local)."""
+    return (BANK_COLUMN_SPEC,) + (SUB_BANK_SPEC,) * 3 + (TILE_INDEX_SPEC,) * 2
+
+
+def sub_bank_shardings(mesh: jax.sharding.Mesh) -> Tuple[NamedSharding, ...]:
+    """NamedShardings partitioning the 3 sub-bank stacks over ``mesh``
+    (shard axis 0 over ``cells``: ``device_put`` slices the host stack
+    per device, so upload bytes are the bank's, not bank x shards)."""
+    return (NamedSharding(mesh, SUB_BANK_SPEC),) * 3
+
+
 def index_shardings(mesh: jax.sharding.Mesh) -> Tuple[NamedSharding, ...]:
     """NamedShardings for one banked tile's (trace_idx, wv_idx)."""
     return (NamedSharding(mesh, TILE_INDEX_SPEC),) * 2

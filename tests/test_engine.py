@@ -245,27 +245,54 @@ def test_stacked_plane_bit_identical_and_observable(blocked_results):
 
 
 def test_bank_stats_and_meta_on_banked_run():
-    """bank_stats() reports the last run's data-plane accounting and the
-    banked plane ships measurably fewer H2D bytes than stacking."""
+    """bank_stats() reports the last run's data-plane accounting --
+    MEASURED resident device bytes from the live buffers, sub vs
+    replicated -- and the banked plane ships measurably fewer H2D bytes
+    than stacking."""
     out = E.run_grid(RAGGED_GRID, n_stores=N, tile_cells=16)
     meta = out[0].meta
     assert meta["data_plane"] == "bank"
+    assert meta["bank_partition"] == "sub"
     stats = E.bank_stats()
+    n_shards = stats["n_shards"]
     assert stats["cells"] == len(RAGGED_GRID)
+    assert stats["bank_partition"] == "sub"
     assert stats["bank_rows"] == stats["trace_rows"] + stats["wv_rows"]
     assert meta["bank_rows"] == stats["bank_rows"] > 0
     assert meta["h2d_bytes"] == stats["h2d_bytes"] > 0
     # dedup: 37 cells share 12 traces / far fewer wv rows than cells
     assert stats["h2d_bytes"] < stats["stacked_h2d_bytes"]
     assert stats["dedup_ratio"] > 1.0
-    # the resident bank is part of the device-memory high-water mark
-    assert stats["dev_mem_hwm_bytes"] >= stats["bank_bytes"]
-    # per-shard replicated device bytes are explicit (bank x n_shards):
-    # the headroom a per-shard sub-bank layout would reclaim
-    assert stats["bank_dev_bytes_per_shard"] == stats["bank_bytes"] > 0
+    # measured sub-bank residency: arrivals replicated + one padded
+    # copy of each max-plus row fleet-wide. Bound per-shard bytes by
+    # arrivals + padded wv share, total by n_shards x that.
+    bank = E.get_trace_bank(RAGGED_GRID, N)
+    a, w, v, p = bank.sub_bank_host(n_shards)
+    per_shard_cap = a.nbytes + (w.nbytes + v.nbytes + p.nbytes) // n_shards
+    assert 0 < stats["bank_dev_bytes_per_shard"] <= per_shard_cap
     assert stats["bank_dev_bytes"] == \
-        stats["bank_bytes"] * stats["n_shards"]
+        n_shards * a.nbytes + w.nbytes + v.nbytes + p.nbytes
+    assert stats["bank_dev_bytes"] < stats["bank_bytes"] * n_shards \
+        or n_shards == 1
+    # only the arrivals staging replicates over the fabric
+    assert stats["bank_fabric_bytes"] == a.nbytes * (n_shards - 1)
     assert stats["dev_mem_hwm_bytes"] >= stats["bank_dev_bytes"]
+
+    # replicated baseline: measured bytes really are ~bank x n_shards
+    clear_sim_caches()
+    out = E.run_grid(RAGGED_GRID, n_stores=N, tile_cells=16,
+                     bank_partition="replicated")
+    rep = E.bank_stats()
+    assert rep["bank_partition"] == "replicated"
+    assert out[0].meta["bank_partition"] == "replicated"
+    assert rep["bank_dev_bytes"] == rep["bank_bytes"] * n_shards
+    assert rep["bank_dev_bytes_per_shard"] == rep["bank_bytes"]
+    assert rep["bank_fabric_bytes"] == rep["bank_bytes"] * (n_shards - 1)
+    with pytest.raises(ValueError):
+        E.run_grid(RAGGED_GRID[:2], n_stores=N, bank_partition="nosuch")
+    with pytest.raises(ValueError):   # partition is a stream-tier knob
+        E.simulate_grid(RAGGED_GRID[:2], n_stores=N, engine="blocked",
+                        bank_partition="sub")
 
 
 def test_stream_threshold_routes_large_grids():

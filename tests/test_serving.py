@@ -263,6 +263,65 @@ def test_bank_bytes_stable_across_serving_refactor():
 
 
 # ---------------------------------------------------------------------------
+# LRU bounds: lane eviction + bank compaction (PR-8 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_lru_lane_eviction_reask_bitident():
+    """With max_lanes set, the least-recently-asked lanes are evicted
+    past the bound; an evicted-then-reasked query takes the miss path
+    again and stays bit-identical to its first answer and the oracle."""
+    grid = sweep_grid(workloads=WORKLOAD_POOL, configs=("proactive", "wb"),
+                      n_replicas=(None, 2))
+    assert lane_count(grid) > 6
+    with ScenarioServer(n_stores=N, batch_cells=8, max_lanes=6) as srv:
+        first = srv.query_batch(grid)
+        st_ = srv.stats()
+        assert st_["lanes_cached"] == 6
+        assert st_["lane_evictions"] == lane_count(grid) - 6
+        # grid[0]'s lane was served earliest -> evicted -> a miss again
+        re0 = srv.query(grid[0])
+        assert re0.meta["cache"] == "miss"
+        assert re0 == first[0]
+        # ...and the most recent lanes are still resident hits
+        re_last = srv.query(grid[-1])
+        assert re_last.meta["cache"] == "hit"
+        assert re_last == first[-1]
+        # hammering one hot lane never evicts it (move_to_end on hit)
+        for _ in range(4):
+            srv.query_batch([grid[-1], grid[0]])
+        assert srv.query(grid[0]).meta["cache"] == "hit"
+    oracle = simulate_batch(grid, n_stores=N)
+    for a, b in zip(first, oracle):
+        assert a == b
+
+
+def test_bank_compaction_bounds_rows_and_stays_bitident():
+    """max_bank_rows compacts the append-only bank down to the live
+    cached lanes' rows; answers before, across, and after compactions
+    all == the oracle, and the compaction counter advances."""
+    grid = sweep_grid(workloads=WORKLOAD_POOL,
+                      configs=("proactive", "wb", "baseline"),
+                      n_replicas=(None, 2, 3))
+    with ScenarioServer(n_stores=N, batch_cells=8, row_pad=4,
+                        max_lanes=4, max_bank_rows=12) as srv:
+        served = [srv.query(s) for s in grid]
+        st_ = srv.stats()
+        assert st_["bank_compactions"] >= 1
+        assert st_["lane_evictions"] > 0
+        # the live bank tracks the bounded lane set, not query history
+        assert st_["bank_rows"] < lane_count(grid) * 2
+        again = [srv.query(s) for s in grid]
+    oracle = simulate_batch(grid, n_stores=N)
+    for a, b, c in zip(served, again, oracle):
+        assert a == c and b == c
+    with pytest.raises(ValueError):
+        ScenarioServer(n_stores=N, max_lanes=0)
+    with pytest.raises(ValueError):
+        ScenarioServer(n_stores=N, max_bank_rows=1)
+
+
+# ---------------------------------------------------------------------------
 # Query translation: grid deltas and downtime requests
 # ---------------------------------------------------------------------------
 

@@ -106,9 +106,12 @@ def test_clear_sim_caches_drops_bank_device_buffers():
     bank = get_trace_bank(specs, N)                   # cache hit
     assert bank._device, "engine run should leave the bank device-resident"
     key = next(iter(bank._device))
-    buf_ref = weakref.ref(bank._device[key][0])
+    entry = bank._device[key]
+    # sub placements memoize (rows, arrays); flat placements just arrays
+    arrays = entry[1] if isinstance(entry[0], tuple) else entry
+    buf_ref = weakref.ref(arrays[0])
     host_ref = weakref.ref(bank)
-    del bank
+    del bank, entry, arrays
     clear_sim_caches()
     gc.collect()
     assert len(S._BANK_CACHE) == 0
