@@ -121,6 +121,7 @@ def main() -> None:
         os.environ["RECXL_BENCH_QUICK"] = "1"
     quick = os.environ.get("RECXL_BENCH_QUICK", "") not in ("", "0")
 
+    from benchmarks.bench_chaos import bench_chaos
     from benchmarks.bench_contention import bench_contention
     from benchmarks.bench_directory import bench_directory
     from benchmarks.bench_serving import bench_serving
@@ -128,7 +129,8 @@ def main() -> None:
 
     benches = list(ALL_PROTOCOL_BENCHES) + [bench_contention,
                                             bench_directory,
-                                            bench_serving]
+                                            bench_serving,
+                                            bench_chaos]
     if not quick:
         from benchmarks.framework_benches import ALL_FRAMEWORK_BENCHES
         benches += ALL_FRAMEWORK_BENCHES

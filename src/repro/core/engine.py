@@ -98,7 +98,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import wait as _futures_wait
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -106,6 +108,15 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.recxl_paper import ClusterConfig, PAPER_CLUSTER
+from repro.core import chaos as _chaos
+from repro.core.chaos import (
+    ChaosError,
+    IntegrityError,
+    ShardLossError,
+    ThreadDeathError,
+    UploadError,
+)
+from repro.core.retry import PLACEMENT_RETRY, retry_call
 from repro.core.simulator import (
     ScenarioSpec,
     SimResult,
@@ -168,6 +179,69 @@ STREAM_THRESHOLD = 2048
 #: lookahead -- is what actually caps the engine's live memory at a few
 #: tile footprints regardless of grid size.
 MAX_IN_FLIGHT_TILES = 3
+
+#: Spare-replacement recovery attempts per :func:`run_grid` call before
+#: the fault propagates (a second independent failure mid-recovery is
+#: out of the modeled scope -- bounded like every retry here).
+MAX_RECOVERIES = 3
+
+#: Gather-path integrity sampling cap: at most this many of a tile's
+#: wv rows are CRC-checked against the host bank before dispatch (only
+#: under an active chaos scope that wants verification -- see
+#: ``chaos.ChaosConfig.verify_rows``; the production path never reads
+#: rows back).
+VERIFY_ROWS_PER_TILE = 16
+
+
+class EngineWorkerError(RuntimeError):
+    """A streaming-engine worker thread (prefetch / compile-warm)
+    failed or stalled.  Carries the tile / signature context so the
+    caller sees *which* unit of work died instead of a bare exception
+    surfacing tiles later (or, for a stalled worker, never)."""
+
+    def __init__(self, stage: str, tile_no: Optional[int],
+                 sig: Optional[TileSignature] = None, note: str = ""):
+        msg = f"{stage} worker failed"
+        if tile_no is not None:
+            msg += f" on tile {tile_no}"
+        if sig is not None:
+            msg += (f" (sig: b_pad={sig.b_pad} sb={sig.sb_uniform}"
+                    f" chunk={sig.chunk} plane={sig.data_plane})")
+        if note:
+            msg += f": {note}"
+        super().__init__(msg)
+        self.stage = stage
+        self.tile_no = tile_no
+        self.sig = sig
+
+
+_HEARTBEATS: Dict[str, float] = {}
+
+
+def worker_heartbeats() -> Dict[str, float]:
+    """``time.monotonic()`` of each engine worker thread's last unit of
+    work (``"prefetch"`` / ``"compile-warm"``) -- the liveness signal
+    ``run_grid(worker_timeout_s=...)`` and external watchdogs check a
+    stalled worker against."""
+    return dict(_HEARTBEATS)
+
+
+def _h2d_hook(nbytes: int = 0) -> None:
+    """Chaos injection point for one host->device placement (no-op
+    without an active scope)."""
+    st = _chaos.active()
+    if st is not None:
+        st.on_upload(nbytes)
+
+
+def _retried(fn: Callable[[], object], describe: str):
+    """Bounded jittered retry around a placement/dispatch callable:
+    only transient :class:`~repro.core.chaos.UploadError` is retried --
+    shard loss and integrity faults must reach the recovery path."""
+    st = _chaos.active()
+    return retry_call(fn, policy=PLACEMENT_RETRY, retryable=(UploadError,),
+                      describe=describe,
+                      on_retry=st.note_retry if st is not None else None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -542,17 +616,24 @@ def _place_bank(bank: TraceBank, n_shards: int) -> Tuple[int, tuple]:
     device-fabric traffic (``bank_stats()['bank_fabric_bytes']``), not
     host bandwidth. Returns ``(bytes_uploaded_now, device_arrays)``."""
     if n_shards == 1:
-        return bank.device_args(1)
+        def place1(host: tuple) -> tuple:
+            # same commitment as the memo's default path -- the hook is
+            # the only addition, so shardings (and jit keys) match PR-8
+            _h2d_hook(sum(int(x.nbytes) for x in host))
+            return tuple(jax.numpy.asarray(x) for x in host)
+        return bank.device_args(1, place1)
     mesh = cells_mesh(n_shards)
 
     def place(host: tuple) -> tuple:
+        _h2d_hook(sum(int(x.nbytes) for x in host))
         staged = jax.device_put(host, jax.devices()[0])   # host -> dev0
         return jax.device_put(staged, bank_shardings(mesh))  # dev -> dev
 
     return bank.device_args(("cells", n_shards), place)
 
 
-def _place_sub_bank(bank: TraceBank, n_shards: int) -> Tuple[int, tuple]:
+def _place_sub_bank(bank: TraceBank, n_shards: int,
+                    k_replicas: int = 1) -> Tuple[int, tuple]:
     """Device-resident PER-SHARD sub-bank (``bank_partition="sub"``,
     the default): arrivals replicated as in :func:`_place_bank` (tiny
     -- ~1% of the bank's bytes -- and a lane's trace row may be owned
@@ -563,18 +644,31 @@ def _place_sub_bank(bank: TraceBank, n_shards: int) -> Tuple[int, tuple]:
     ``device_put`` straight to their sharded layout (each device
     receives only its slice: host->device bytes stay at bank scale,
     no fabric replication); only the arrivals staging replicates.
-    Memoized on the bank like :func:`_place_bank`."""
+    Memoized on the bank like :func:`_place_bank`.
+
+    ``k_replicas > 1`` (chaos/recovery runs only) places the
+    :meth:`TraceBank.sub_bank_host` Replica-set layout: each shard's
+    stack carries ``k`` local-row blocks, block ``j`` holding the rows
+    owned by shard ``(s - j) % n_shards`` -- single-shard loss then
+    never loses a row (``chaos.replica_rebuild``). Gathers still target
+    block 0, so the compiled programs only see the wider local axis."""
     if n_shards == 1:
-        return bank.sub_device_args(1)
+        def place1(host: tuple) -> tuple:
+            # same commitment as the memo's default path -- the hook is
+            # the only addition, so shardings (and jit keys) match PR-8
+            _h2d_hook(sum(int(x.nbytes) for x in host))
+            return tuple(jax.numpy.asarray(x) for x in host)
+        return bank.sub_device_args(1, place1, k_replicas)
     mesh = cells_mesh(n_shards)
 
     def place(host: tuple) -> tuple:
+        _h2d_hook(sum(int(x.nbytes) for x in host))
         a = jax.device_put(host[0], jax.devices()[0])     # host -> dev0
         a = jax.device_put(a, bank_shardings(mesh)[0])    # dev -> dev
         subs = jax.device_put(tuple(host[1:]), sub_bank_shardings(mesh))
         return (a,) + tuple(subs)
 
-    return bank.sub_device_args(n_shards, place)
+    return bank.sub_device_args(n_shards, place, k_replicas)
 
 
 def _measured_device_bytes(arrays: Sequence[jax.Array]) -> Tuple[int, int]:
@@ -673,7 +767,9 @@ def run_grid(specs: Sequence[ScenarioSpec],
              tile_cells: Optional[int] = None,
              n_shards: Optional[int] = None,
              data_plane: Optional[str] = None,
-             bank_partition: Optional[str] = None) -> List[SimResult]:
+             bank_partition: Optional[str] = None,
+             k_replicas: Optional[int] = None,
+             worker_timeout_s: Optional[float] = None) -> List[SimResult]:
     """Stream a (mega-)grid through the sharded tile engine.
 
     Results come back in ``specs`` order, bit-identical to
@@ -709,6 +805,23 @@ def run_grid(specs: Sequence[ScenarioSpec],
     the bank resident -- caps live memory at the bank plus a few tile
     payloads however large the grid is. :func:`bank_stats` reports the
     run's H2D / memory accounting (measured from the live buffers).
+
+    **Resilience** (docs/resilience.md). ``k_replicas`` widens the
+    sub-bank placement with the paper's Replica set (default: 2 under
+    an active ``chaos.inject`` scope, else 1 -- the exact PR-8
+    layout); ``worker_timeout_s`` bounds how long the dispatch loop
+    waits on a silent prefetch worker before raising
+    :class:`EngineWorkerError`. Under an active chaos scope the loop
+    detects injected shard loss / corrupt rows / upload faults and
+    recovers in place: in-flight tiles are cancelled, the lost shard's
+    rows are rebuilt from the surviving replica block (or the bank's
+    Logging-Unit journal), digest-verified against the host truth, and
+    the bank is re-placed -- same shapes and shardings, so the
+    spare-replacement path adds ZERO compiles and the recovered run's
+    results stay bit-identical (tests/test_chaos.py pins ``==``).
+    ``ChaosConfig(recovery="degraded")`` instead finishes the
+    unfinished cells on a mesh shrunk by one shard with the bank
+    replicated (one recompile, kept serving).
     """
     if not specs:
         return []
@@ -721,6 +834,11 @@ def run_grid(specs: Sequence[ScenarioSpec],
     partition = bank_partition or "sub"
     if partition not in ("sub", "replicated"):
         raise ValueError(f"unknown bank_partition {bank_partition!r}")
+    if k_replicas is not None and k_replicas != 1 and \
+            (plane != "bank" or partition != "sub"):
+        raise ValueError("k_replicas > 1 applies to the sub-partitioned "
+                         f"bank plane only (got plane={plane!r}, "
+                         f"partition={partition!r})")
     n_dev = len(jax.devices())
     if n_shards is None:
         # all local devices: even oversubscribed virtual CPU devices
@@ -740,6 +858,9 @@ def run_grid(specs: Sequence[ScenarioSpec],
                    n_shards=n_shards)
     bank = bank_dev = None
     bank_fresh = 0
+    sub = False
+    k_eff = 1
+    local_rows = 0
     lane_members: List[List[int]] = []
     if plane == "bank":
         # --- scan-lane dedup -------------------------------------------
@@ -773,8 +894,14 @@ def run_grid(specs: Sequence[ScenarioSpec],
         if sub:
             # per-shard sub-banks: the signature carries the LOCAL
             # (per-shard) wv row count, and the scheduler places each
-            # lane in the slot block of the shard owning its wv row
-            shape = (len(trace_map), sub_bank_rows(len(wv_map), n_shards))
+            # lane in the slot block of the shard owning its wv row.
+            # k_eff > 1 (chaos/recovery runs only) appends the Replica
+            # set blocks along the local axis -- the signature sees
+            # the widened stack (jit specializes on the bank shape),
+            # while indices keep targeting the primary block
+            k_eff = _chaos.resolve_k_replicas(k_replicas, n_shards)
+            local_rows = sub_bank_rows(len(wv_map), n_shards)
+            shape = (len(trace_map), k_eff * local_rows)
             owners = [wv_map[wk] % n_shards for wk in lane_wv_keys]
         else:
             shape = (len(trace_map), len(wv_map))
@@ -848,9 +975,11 @@ def run_grid(specs: Sequence[ScenarioSpec],
         done, releasing its input buffers, and scatters each lane's
         outputs back to its member cells' original grid positions
         (through :attr:`Tile.slots` when the sub-bank scheduler placed
-        lanes in shard-owner blocks)."""
+        lanes in shard-owner blocks). Marks the tile done -- the
+        recovery loop re-dispatches exactly the tiles that never
+        drained."""
         nonlocal live_bytes
-        tile, groups, (exec_ns, at_head, sb_full) = entry
+        kt, tile, groups, (exec_ns, at_head, sb_full) = entry
         exec_ns = np.asarray(exec_ns)
         at_head = np.asarray(at_head)
         sb_full = np.asarray(sb_full)
@@ -874,8 +1003,151 @@ def run_grid(specs: Sequence[ScenarioSpec],
                 results[i] = _finish_result(cell, exec_ns[pos],
                                             int(at_head[pos]),
                                             int(sb_full[pos]), meta=meta)
+        done[kt] = True
 
-    in_flight = []
+    # --- resilience plumbing (inert without an active chaos scope) -----
+    st = _chaos.active()
+
+    def prep_guarded(tile: Tile, no: int):
+        """Prefetch-thread unit of work: heartbeat + chaos kill point +
+        context-wrapping -- a poisoned tile surfaces as an
+        :class:`EngineWorkerError` naming the tile, not as an opaque
+        error tiles later."""
+        _HEARTBEATS["prefetch"] = time.monotonic()
+        if st is not None:
+            st.on_thread("prefetch")
+        try:
+            return prep(tile)
+        except ChaosError:
+            raise
+        except Exception as e:
+            raise EngineWorkerError("prefetch", no, tile.sig,
+                                    repr(e)) from e
+
+    def warm_guarded():
+        _HEARTBEATS["compile-warm"] = time.monotonic()
+        if st is not None:
+            st.on_thread("warm")
+        try:
+            _warm_signatures(sigs, t_l1, t_wt, bank_dev)
+        except ChaosError:
+            raise
+        except Exception as e:
+            raise EngineWorkerError("compile-warm", None,
+                                    sigs[0] if sigs else None,
+                                    repr(e)) from e
+
+    def wait_prep(fut, no: int, sig: TileSignature):
+        """Prefetch result with a stall bound: ``worker_timeout_s``
+        turns a silently wedged worker into a prompt, attributed
+        :class:`EngineWorkerError` instead of a hang."""
+        if worker_timeout_s is None:
+            return fut.result()
+        deadline = time.monotonic() + worker_timeout_s
+        while True:
+            _futures_wait([fut], timeout=min(0.05, worker_timeout_s))
+            if fut.done():
+                return fut.result()
+            if time.monotonic() > deadline:
+                raise EngineWorkerError(
+                    "prefetch", no, sig,
+                    f"no result within worker_timeout_s={worker_timeout_s}")
+
+    def check_warm() -> None:
+        """Surface compile-thread failures promptly (each dispatch
+        iteration), respawning the warm worker if chaos killed it --
+        compiles then happen lazily on first call, which is slower but
+        correct."""
+        nonlocal warm
+        if warm.done() and warm.exception() is not None:
+            if isinstance(warm.exception(), ThreadDeathError):
+                warm = compile_pool.submit(warm_guarded)
+            else:
+                raise warm.exception()
+
+    def verify_tile(tile: Tile) -> None:
+        """Gather-path integrity sampling: CRC-check (a sample of) the
+        tile's wv rows against the host truth before dispatch. Chaos
+        verification runs only -- the production path never reads
+        device rows back."""
+        if st is None or not st.wants_verify() or bank is None:
+            return
+        rows = sorted({bank.rows_for(sp)[1] for sp in tile.specs})
+        _chaos.verify_rows(bank, bank_dev, rows[:VERIFY_ROWS_PER_TILE],
+                           n_shards=n_shards if sub else 1,
+                           local_cap=local_rows if sub else 0,
+                           where="tile gather sample")
+
+    def bank_place_key():
+        if sub:
+            return ("sub", n_shards) if k_eff == 1 \
+                else ("sub", n_shards, k_eff)
+        return 1 if n_shards == 1 else ("cells", n_shards)
+
+    def place_bank_now() -> None:
+        nonlocal bank_fresh, bank_dev, fabric_bytes, h2d_bytes
+        nonlocal bank_dev_total, bank_dev_per
+        if sub:
+            bank_fresh, bank_dev = _retried(
+                lambda: _place_sub_bank(bank, n_shards, k_eff),
+                "bank placement")
+            # only the replicated arrivals staging crosses the
+            # device fabric; the partitioned max-plus stacks ship
+            # each shard's slice straight from the host
+            fabric_bytes += (bank.arrivals.nbytes * (n_shards - 1)
+                             if bank_fresh else 0)
+        else:
+            bank_fresh, bank_dev = _retried(
+                lambda: _place_bank(bank, n_shards), "bank placement")
+            fabric_bytes += (bank.nbytes * (n_shards - 1)
+                             if bank_fresh else 0)
+        h2d_bytes += bank_fresh
+        bank_dev_total, bank_dev_per = _measured_device_bytes(bank_dev)
+
+    def recover(err: Exception) -> None:
+        """Spare-replacement recovery: rebuild the lost rows from the
+        surviving replica block (or the Logging-Unit journal),
+        digest-verify the rebuild against the host truth, drop the
+        stale placement and re-place -- same shapes and shardings, so
+        every compiled program still hits (the 0-recompile invariant
+        tests/test_chaos.py pins)."""
+        nonlocal bank_dev
+        t0 = time.monotonic()
+        lost = err.shard if isinstance(err, ShardLossError) else None
+        if lost is not None:
+            # spare replacement: the mesh shape is unchanged (a spare
+            # takes the lost shard's coordinates) -- validate via the
+            # elastic-scaling policy it shares with the trainer tier
+            from repro.distributed.elastic import cells_spare_replacement
+            cells_spare_replacement(n_shards, lost)
+        source = "redispatch"
+        if bank is not None and sub and lost is not None:
+            if k_eff >= 2:
+                rebuilt = _chaos.replica_rebuild(
+                    bank_dev, lost, n_shards=n_shards, k_replicas=k_eff,
+                    local_cap=local_rows, wv_rows=bank.wv_rows)
+                source = "replica"
+            elif bank.journal_enabled:
+                rebuilt = _chaos.journal_rebuild(bank, lost, n_shards)
+                source = "journal"
+            else:
+                rebuilt = None
+                source = "host"
+            if rebuilt is not None:
+                _chaos.verify_rebuild(bank, rebuilt, lost, n_shards)
+        elif bank is not None:
+            source = "host"
+        if bank is not None:
+            bank.drop_placement(bank_place_key())
+            place_bank_now()
+        if st is not None:
+            st.note_recovery(source, (time.monotonic() - t0) * 1e3,
+                             lost, "spare")
+
+    in_flight: List[tuple] = []
+    done = [False] * len(tiles)
+    recover_attempts = 0
+    degraded_from: Optional[int] = None
     prep_pool = ThreadPoolExecutor(max_workers=1)
     compile_pool = ThreadPoolExecutor(max_workers=1)
     try:
@@ -884,49 +1156,111 @@ def run_grid(specs: Sequence[ScenarioSpec],
             # calls (and every tile call) gather from the one resident
             # placement, and compilation overlaps the first tiles' loop
             bank = get_trace_bank(specs, n_stores, cluster)
-            if sub:
-                bank_fresh, bank_dev = _place_sub_bank(bank, n_shards)
-                # only the replicated arrivals staging crosses the
-                # device fabric; the partitioned max-plus stacks ship
-                # each shard's slice straight from the host
-                fabric_bytes = (bank.arrivals.nbytes * (n_shards - 1)
-                                if bank_fresh else 0)
-            else:
-                bank_fresh, bank_dev = _place_bank(bank, n_shards)
-                fabric_bytes = (bank.nbytes * (n_shards - 1)
-                                if bank_fresh else 0)
-            h2d_bytes += bank_fresh
-            bank_dev_total, bank_dev_per = _measured_device_bytes(bank_dev)
+            place_bank_now()
+            if st is not None:
+                # chaos row corruption lands on the DEVICE copy only
+                # (the host columns stay the truth the CRC digests and
+                # rebuilds verify against)
+                bank_dev = st.tamper_bank(
+                    bank_dev, n_shards=n_shards,
+                    k_replicas=k_eff if sub else 1,
+                    local_cap=local_rows if sub else 0,
+                    wv_rows=bank.wv_rows)
             live_bytes = hwm_bytes = bank_dev_total
         sigs = list(dict.fromkeys(t.sig for t in tiles))
-        warm = compile_pool.submit(_warm_signatures, sigs, t_l1, t_wt,
-                                   bank_dev)
-        fut = prep_pool.submit(prep, tiles[0])
-        for k, tile in enumerate(tiles):
-            groups, np_args = fut.result()
-            if k + 1 < len(tiles):
-                fut = prep_pool.submit(prep, tiles[k + 1])
-            placed = _place_tile(np_args, tile.sig)
-            out = _tile_fn(tile.sig)(*bank_dev, *placed) if bank is not None \
-                else _tile_fn(tile.sig)(*placed, t_l1, t_wt)
-            in_flight.append((tile, groups, out))
-            live_bytes += tile_payload_bytes(tile.sig)
-            hwm_bytes = max(hwm_bytes, live_bytes)
-            # backpressure: dispatch runs ahead of the devices, so
-            # without a bound every dispatched tile's input buffers
-            # stay alive at once; draining the oldest keeps at most
-            # MAX_IN_FLIGHT_TILES tiles of device memory pinned (plus
-            # the resident bank) while still overlapping
-            # prep/compute/drain
-            if len(in_flight) >= MAX_IN_FLIGHT_TILES:
-                finish(in_flight.pop(0))
-        warm.result()      # surface compile-thread exceptions
+        warm = compile_pool.submit(warm_guarded)
+        while not all(done):
+            pending = [k for k, d in enumerate(done) if not d]
+            try:
+                fut = prep_pool.submit(prep_guarded, tiles[pending[0]],
+                                       pending[0])
+                for pi, kt in enumerate(pending):
+                    tile = tiles[kt]
+                    try:
+                        groups, np_args = wait_prep(fut, kt, tile.sig)
+                    except ThreadDeathError:
+                        # prefetch worker killed mid-grid: rebuild this
+                        # tile inline on the caller thread and keep
+                        # streaming (the injected death was confined to
+                        # the future; later submits run normally)
+                        groups, np_args = prep(tile)
+                    if pi + 1 < len(pending):
+                        nxt = pending[pi + 1]
+                        fut = prep_pool.submit(prep_guarded, tiles[nxt],
+                                               nxt)
+                    check_warm()
+                    verify_tile(tile)
+
+                    def place_dispatch(args=np_args, sig=tile.sig):
+                        _h2d_hook(tile_payload_bytes(sig))
+                        return _place_tile(args, sig)
+
+                    placed = _retried(place_dispatch,
+                                      f"tile {kt} placement")
+                    if st is not None:
+                        st.on_dispatch(f"tile {kt}")
+                    out = _tile_fn(tile.sig)(*bank_dev, *placed) \
+                        if bank is not None \
+                        else _tile_fn(tile.sig)(*placed, t_l1, t_wt)
+                    in_flight.append((kt, tile, groups, out))
+                    live_bytes += tile_payload_bytes(tile.sig)
+                    hwm_bytes = max(hwm_bytes, live_bytes)
+                    # backpressure: dispatch runs ahead of the devices,
+                    # so without a bound every dispatched tile's input
+                    # buffers stay alive at once; draining the oldest
+                    # keeps at most MAX_IN_FLIGHT_TILES tiles of device
+                    # memory pinned (plus the resident bank) while
+                    # still overlapping prep/compute/drain
+                    if len(in_flight) >= MAX_IN_FLIGHT_TILES:
+                        finish(in_flight.pop(0))
+                while in_flight:
+                    finish(in_flight.pop(0))
+            except (ShardLossError, IntegrityError) as e:
+                # cancel in-flight tiles: their outputs may involve the
+                # lost/corrupt placement, and their tiles re-dispatch
+                # (done[] is only set by finish)
+                for (_kt, t_, _g, _o) in in_flight:
+                    live_bytes -= tile_payload_bytes(t_.sig)
+                in_flight.clear()
+                recover_attempts += 1
+                if st is None or recover_attempts > MAX_RECOVERIES:
+                    raise
+                if (isinstance(e, ShardLossError) and n_shards > 1
+                        and plane == "bank"
+                        and st.cfg.recovery == "degraded"):
+                    degraded_from = e.shard
+                    break
+                recover(e)
+        if degraded_from is None:
+            try:
+                warm.result()  # surface compile-thread exceptions
+            except ThreadDeathError:
+                pass           # injected kill, already respawned/absorbed
     finally:
         prep_pool.shutdown(wait=True)
         compile_pool.shutdown(wait=True)
 
-    for entry in in_flight:
-        finish(entry)
+    if degraded_from is not None:
+        # degraded-mesh fallback: finish the unfinished cells on a mesh
+        # shrunk by the lost shard with the bank replicated -- ONE
+        # recompile set, but no spare needed (elastic.py's shrink
+        # semantics; the spare path above is the default)
+        from repro.distributed.elastic import cells_degraded_shards
+        t0 = time.monotonic()
+        left = [i for i, r in enumerate(results) if r is None]
+        sub_res = run_grid([specs[i] for i in left], cluster=cluster,
+                           n_stores=n_stores, chunk_size=chunk_size,
+                           tile_cells=tile_cells,
+                           n_shards=cells_degraded_shards(n_shards),
+                           data_plane="bank",
+                           bank_partition="replicated")
+        for i, r in zip(left, sub_res):
+            results[i] = r
+        if st is not None:
+            st.note_recovery("degraded-mesh",
+                             (time.monotonic() - t0) * 1e3,
+                             degraded_from, "degraded")
+
     _BANK_STATS.clear()
     _BANK_STATS.update({
         "data_plane": plane, "cells": len(specs), "n_shards": n_shards,
@@ -943,6 +1277,9 @@ def run_grid(specs: Sequence[ScenarioSpec],
         "stacked_h2d_bytes": stacked_h2d,
         "dedup_ratio": stacked_h2d / max(h2d_bytes, 1),
         "dev_mem_hwm_bytes": hwm_bytes,
+        "k_replicas": k_eff,
+        "degraded": degraded_from is not None,
+        "chaos": st.report() if st is not None else None,
     })
     return results
 
@@ -959,7 +1296,10 @@ def simulate_grid(specs: Sequence[ScenarioSpec],
                   tile_cells: Optional[int] = None,
                   n_shards: Optional[int] = None,
                   data_plane: Optional[str] = None,
-                  bank_partition: Optional[str] = None) -> List[SimResult]:
+                  bank_partition: Optional[str] = None,
+                  k_replicas: Optional[int] = None,
+                  worker_timeout_s: Optional[float] = None
+                  ) -> List[SimResult]:
     """Run a scenario grid on the right engine tier.
 
     ``engine``:
@@ -986,6 +1326,10 @@ def simulate_grid(specs: Sequence[ScenarioSpec],
     if bank_partition is not None and engine != "stream":
         raise ValueError(
             f"bank_partition applies to the stream tier only, not {engine!r}")
+    if (k_replicas is not None or worker_timeout_s is not None) \
+            and engine != "stream":
+        raise ValueError("k_replicas / worker_timeout_s apply to the "
+                         f"stream tier only, not {engine!r}")
     if engine == "serial":
         for s in specs:
             s.validate(cluster)
@@ -1004,5 +1348,7 @@ def simulate_grid(specs: Sequence[ScenarioSpec],
         return run_grid(specs, cluster=cluster, n_stores=n_stores,
                         chunk_size=chunk_size, tile_cells=tile_cells,
                         n_shards=n_shards, data_plane=data_plane,
-                        bank_partition=bank_partition)
+                        bank_partition=bank_partition,
+                        k_replicas=k_replicas,
+                        worker_timeout_s=worker_timeout_s)
     raise ValueError(f"unknown engine {engine!r}")

@@ -136,6 +136,23 @@ def mega_grid(seeds: Sequence[int] = (0, 1, 2),
                       sb_sizes=sb_sizes)
 
 
+def chaos_grid(workloads: Sequence[str] = ("ycsb", "barnes",
+                                           "streamcluster"),
+               configs: Sequence[str] = ("wb", "proactive"),
+               replicas: Sequence[Optional[int]] = (None, 2, 3),
+               bandwidths: Sequence[Optional[float]] = (None, 40.0),
+               ) -> List[ScenarioSpec]:
+    """The fault-injection differential grid (tests/test_chaos.py,
+    benchmarks/bench_chaos.py): a small multi-signature sweep -- several
+    workloads x configs x sensitivity values so a mid-grid shard loss
+    lands between tiles of DIFFERENT compiled signatures -- sized so the
+    fault-free oracle plus one run per injected fault stays cheap. The
+    grid itself is plain scenarios; the faults come from
+    :func:`repro.core.chaos.inject` around the run."""
+    return sweep_grid(workloads=workloads, configs=configs,
+                      n_replicas=replicas, link_bw_gbps=bandwidths)
+
+
 def contention_grid(workloads: Sequence[str] = ("ycsb", "canneal",
                                                 "streamcluster"),
                     configs: Sequence[str] = ("wb", "proactive"),

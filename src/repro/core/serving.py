@@ -92,7 +92,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.recxl_paper import ClusterConfig, PAPER_CLUSTER
+from repro.core import chaos as _chaos
 from repro.core import engine as _engine
+from repro.core.chaos import IntegrityError, ShardLossError, ThreadDeathError
 from repro.core.recovery import RecoveryEstimate
 from repro.core.scenarios import downtime_query, sweep_grid
 from repro.core.simulator import (
@@ -163,6 +165,25 @@ class ScenarioServer:
     long uptimes -- see the module docstring. Use as a context manager
     or call :meth:`close` to stop the daemon thread; a closed server
     still answers synchronous queries.
+
+    **Resilience** (docs/resilience.md). ``k_replicas`` widens every
+    wv capacity block with the paper's Replica set (default: 2 under an
+    active ``chaos.inject`` scope, else 1 -- the exact PR-8 layout),
+    and turns on the bank's Logging-Unit journal (un-dumped ``extend``
+    diffs retained until the device dump is acknowledged at the end of
+    each flush). A detected shard loss / corrupt row mid-flush is
+    recovered IN PLACE: the lost rows are rebuilt from the surviving
+    replica block or the journal, digest-verified, and the device bank
+    re-placed at the SAME capacity -- same signatures, zero new
+    compiles, answers stay bit-identical; pending ``submit`` futures
+    fail only if recovery itself fails. ``submit_timeout_ms`` bounds
+    how long a queued future may wait (per-call override on
+    :meth:`submit`), ``watchdog_ms`` bounds one flush: a watchdog
+    thread expires timed-out futures with a diagnostic, respawns a
+    dead daemon thread, and fails a wedged flush's futures instead of
+    blocking callers forever. The server always recovers on the
+    spare-replacement path (its mesh never shrinks); the degraded-mesh
+    fallback is the batch engine's.
     """
 
     def __init__(self, cluster: ClusterConfig = PAPER_CLUSTER,
@@ -173,7 +194,10 @@ class ScenarioServer:
                  n_shards: int = 1,
                  row_pad: int = SERVE_ROW_PAD,
                  max_lanes: Optional[int] = None,
-                 max_bank_rows: Optional[int] = None):
+                 max_bank_rows: Optional[int] = None,
+                 k_replicas: Optional[int] = None,
+                 submit_timeout_ms: Optional[float] = None,
+                 watchdog_ms: Optional[float] = None):
         n_dev = len(jax.devices())
         if not 1 <= n_shards <= n_dev:
             raise ValueError(f"n_shards must be in [1, {n_dev}], "
@@ -187,6 +211,11 @@ class ScenarioServer:
         if max_bank_rows is not None and max_bank_rows < 2:
             raise ValueError("max_bank_rows must be >= 2 (one lane needs "
                              f"a trace and a wv row), got {max_bank_rows}")
+        if submit_timeout_ms is not None and submit_timeout_ms <= 0:
+            raise ValueError("submit_timeout_ms must be > 0, got "
+                             f"{submit_timeout_ms}")
+        if watchdog_ms is not None and watchdog_ms <= 0:
+            raise ValueError(f"watchdog_ms must be > 0, got {watchdog_ms}")
         self.cluster = cluster
         self.n_stores = int(n_stores)
         self.batch_cells = int(batch_cells)
@@ -196,6 +225,13 @@ class ScenarioServer:
         self.row_pad = int(row_pad)
         self.max_lanes = max_lanes
         self.max_bank_rows = max_bank_rows
+        # resolved at construction: explicit k wins, else 2 under an
+        # active chaos scope, else 1 (byte- and signature-identical to
+        # the pre-resilience layout)
+        self.k_replicas = _chaos.resolve_k_replicas(k_replicas,
+                                                    self.n_shards)
+        self.submit_timeout_ms = submit_timeout_ms
+        self.watchdog_ms = watchdog_ms
 
         # serve state (all guarded by _lock)
         self._lock = threading.RLock()
@@ -217,13 +253,27 @@ class ScenarioServer:
             "appended_trace_rows": 0, "appended_wv_rows": 0,
             "compiled_programs": 0, "downtime_queries": 0,
             "lane_evictions": 0, "bank_compactions": 0,
+            "recoveries": 0, "recovery_ms": 0,
         }
 
         # async queue (guarded by _cond; the worker serves via the
-        # synchronous path, so _cond is never held across device work)
+        # synchronous path, so _cond is never held across device work).
+        # Queue entries are (spec, future, deadline-or-None); the
+        # watchdog thread expires deadlines, respawns a dead worker and
+        # fails a wedged flush -- its counters live in _wd_stats, also
+        # guarded by _cond (the watchdog never takes _lock, so there is
+        # no _cond/_lock ordering between the two threads)
         self._cond = threading.Condition()
-        self._queue: Deque[Tuple[ScenarioSpec, Future]] = deque()
+        self._queue: Deque[Tuple[ScenarioSpec, Future,
+                                 Optional[float]]] = deque()
         self._worker: Optional[threading.Thread] = None
+        self._watchdog: Optional[threading.Thread] = None
+        self._flush_started: Optional[float] = None
+        self._flush_batch: List[tuple] = []
+        self._wd_stats: Dict[str, int] = {
+            "submit_timeouts": 0, "worker_restarts": 0,
+            "watchdog_flush_failures": 0,
+        }
         self._closed = False
 
     # -- context manager ---------------------------------------------------
@@ -237,13 +287,31 @@ class ScenarioServer:
     def close(self) -> None:
         """Stop the daemon thread after draining pending submissions.
         Synchronous queries still work on a closed server; further
-        :meth:`submit` calls raise."""
+        :meth:`submit` calls raise.
+
+        Deterministic under concurrent submitters and worker death:
+        racing ``submit`` calls either enqueued before the close (their
+        futures are served or failed below, never left hanging) or
+        raise. After the worker and watchdog exit, anything still
+        queued (e.g. the worker died and no watchdog was there to
+        respawn it) is failed with a diagnostic."""
         with self._cond:
             self._closed = True
             self._cond.notify_all()
             worker = self._worker
+            watchdog = self._watchdog
         if worker is not None:
             worker.join()
+        if watchdog is not None:
+            watchdog.join()
+        with self._cond:
+            leftovers = list(self._queue)
+            self._queue.clear()
+        for _, fut, _ in leftovers:
+            if not fut.done():
+                fut.set_exception(RuntimeError(
+                    "ScenarioServer closed with the query still pending "
+                    "(daemon thread dead or never scheduled)"))
 
     # -- query -> lane plumbing -------------------------------------------
 
@@ -252,20 +320,34 @@ class ScenarioServer:
             else self.cluster.store_buffer
         return (sb,) + _plane_keys(spec, self.cluster)
 
+    def _journal_wanted(self) -> bool:
+        """Logging-Unit journaling is on whenever resilience is: with a
+        replica set placed, or under an active chaos scope (so a 1-shard
+        server still has a rebuild source)."""
+        return self.k_replicas > 1 or _chaos.active() is not None
+
     def _ensure_bank(self, specs: Sequence[ScenarioSpec]) -> None:
         """First call adopts the digest-memoized grid bank (shared with
         any engine sweeping the same grid); later calls append-extend
         it. The server keeps its own handle, so a racing
-        ``clear_sim_caches()`` never forces a rebuild."""
+        ``clear_sim_caches()`` never forces a rebuild. Under a
+        resilience config the bank journals its ``extend`` diffs (the
+        Logging Unit) -- enabled BEFORE the extend so the diff itself
+        is retained until :meth:`TraceBank.ack_journal`."""
         if self._bank is None:
             self._bank = get_trace_bank(specs, self.n_stores, self.cluster)
+            if self._journal_wanted():
+                self._bank.enable_journal()
             self._stats["bank_builds"] += 1
             return
+        if self._journal_wanted():
+            self._bank.enable_journal()
         nt, nw = self._bank.extend(specs)
         self._stats["appended_trace_rows"] += nt
         self._stats["appended_wv_rows"] += nw
 
     def _place_rows(self, host: tuple) -> tuple:
+        _engine._h2d_hook(sum(int(x.nbytes) for x in host))
         if self.n_shards == 1:
             return tuple(jnp.asarray(x) for x in host)
         # replicate over the cells mesh the way _place_bank does: one
@@ -279,6 +361,7 @@ class ScenarioServer:
         """Place ``(n_shards, local_rows, ...)`` stacks shard-partitioned
         on axis 0 (each device receives ONLY its slice straight from the
         host -- no fabric replication), plain arrays at one shard."""
+        _engine._h2d_hook(sum(int(x.nbytes) for x in host))
         if self.n_shards == 1:
             return tuple(jnp.asarray(x) for x in host)
         mesh = cells_mesh(self.n_shards)
@@ -288,12 +371,22 @@ class ScenarioServer:
     def _sub_stack(self, col: np.ndarray, cap: int) -> np.ndarray:
         """Host sub-bank stack of ``col`` at local capacity ``cap``:
         ``out[s, q] = col[q * n_shards + s]`` (owner ``r % n_shards``,
-        local index ``r // n_shards``), zero-padded per shard."""
+        local index ``r // n_shards``), zero-padded per shard.
+
+        With a replica set (``k_replicas > 1``) the local axis carries
+        ``k`` capacity blocks: block ``j`` of shard ``s`` holds the
+        rows owned by shard ``(s - j) % n_shards`` (the
+        ``TraceBank.sub_bank_host`` layout at capacity), so global row
+        ``r`` is resident on shards ``r % n`` AND ``(r % n + 1) % n``
+        and one lost shard never loses a row. Gathers (and the compiled
+        programs' shapes at ``k=1``) only ever touch block 0."""
         n = self.n_shards
-        out = np.zeros((n, cap) + col.shape[1:], col.dtype)
+        out = np.zeros((n, self.k_replicas * cap) + col.shape[1:],
+                       col.dtype)
         for s in range(n):
-            rows = col[s::n]
-            out[s, :rows.shape[0]] = rows
+            for j in range(self.k_replicas):
+                rows = col[(s - j) % n::n]
+                out[s, j * cap:j * cap + rows.shape[0]] = rows
         return out
 
     def _splice(self, dev, rows: np.ndarray, r0: int):
@@ -327,6 +420,7 @@ class ScenarioServer:
         -- the rectangle is the price of one shard-uniform splice)."""
         bank = self._bank
         n = self.n_shards
+        k = self.k_replicas
         t, p = bank.trace_rows, bank.wv_rows
         t_cap = _row_capacity(t, self.row_pad)
         p_cap = _row_capacity(-(-p // n), self.row_pad)   # per-shard local
@@ -340,6 +434,7 @@ class ScenarioServer:
             self._cap = cap
             self._dev_rows = (t, p)
             self._stats["bank_uploads"] += 1
+            self._tamper()
             return int(a_host.nbytes) + sum(int(x.nbytes) for x in subs)
         h2d = 0
         a, w, v, pnc = self._dev
@@ -351,19 +446,44 @@ class ScenarioServer:
             # local rows touched by global rows [p0, p): splice the
             # rectangular window [lo, hi) on every shard at once --
             # axis 1 of an axis-0-sharded array, so the concatenate is
-            # shard-local (zero cross-device traffic)
+            # shard-local (zero cross-device traffic). With a replica
+            # set, block j's window is the block-0 window rolled j
+            # shards along axis 0 (block j of shard s holds the rows
+            # block 0 of shard (s - j) % n holds), spliced at its own
+            # axis-1 offset -- every replica of an appended row ships
+            # in the same flush, so a loss right after the splice
+            # still rebuilds from the survivor
             lo, hi = p0 // n, -(-p // n)
-            deltas = tuple(self._sub_window(c, lo, hi, p)
-                           for c in (bank.w, bank.v, bank.pr_nc))
-            dw, dv, dp = self._place_sub(deltas)
-            w = jnp.concatenate([w[:, :lo], dw, w[:, hi:]], axis=1)
-            v = jnp.concatenate([v[:, :lo], dv, v[:, hi:]], axis=1)
-            pnc = jnp.concatenate([pnc[:, :lo], dp, pnc[:, hi:]], axis=1)
-            h2d += sum(int(d.nbytes) for d in deltas)
+            win0 = tuple(self._sub_window(c, lo, hi, p)
+                         for c in (bank.w, bank.v, bank.pr_nc))
+            for j in range(k):
+                deltas = win0 if j == 0 else tuple(
+                    np.ascontiguousarray(np.roll(d, j, axis=0))
+                    for d in win0)
+                dw, dv, dp = self._place_sub(deltas)
+                o = j * self._cap[1]
+                w = jnp.concatenate([w[:, :o + lo], dw, w[:, o + hi:]],
+                                    axis=1)
+                v = jnp.concatenate([v[:, :o + lo], dv, v[:, o + hi:]],
+                                    axis=1)
+                pnc = jnp.concatenate([pnc[:, :o + lo], dp,
+                                       pnc[:, o + hi:]], axis=1)
+                h2d += sum(int(d.nbytes) for d in deltas)
         if h2d:
             self._dev = (a, w, v, pnc)
             self._dev_rows = (t, p)
+            self._tamper()
         return h2d
+
+    def _tamper(self) -> None:
+        """Chaos corruption point: bit-flip the configured wv row's
+        resident device copy (fires once per scope; no-op otherwise)."""
+        st = _chaos.active()
+        if st is not None and self._dev is not None:
+            self._dev = st.tamper_bank(self._dev, n_shards=self.n_shards,
+                                       k_replicas=self.k_replicas,
+                                       local_cap=self._cap[1],
+                                       wv_rows=self._bank.wv_rows)
 
     def _serve_sigs(self, lane_specs: Sequence[ScenarioSpec]
                     ) -> List[Tuple[_engine.Tile, _engine.TileSignature]]:
@@ -384,8 +504,12 @@ class ScenarioServer:
                                    tile_cells=self.batch_cells,
                                    n_shards=self.n_shards, small_pad=False,
                                    owners=owners)
+        # the signature sees the DEVICE local axis: k_replicas capacity
+        # blocks (identical to self._cap at k=1 -- the resilient and
+        # plain layouts share programs only with themselves)
+        shape = (self._cap[0], self.k_replicas * self._cap[1])
         return [(t, dataclasses.replace(t.sig, data_plane="bank",
-                                        bank_shape=self._cap,
+                                        bank_shape=shape,
                                         bank_sub=True))
                 for t in tiles]
 
@@ -394,6 +518,7 @@ class ScenarioServer:
         cache its raw outputs. Returns the index-vector h2d bytes."""
         lane_keys = list(miss)
         bank = self._bank
+        st = _chaos.active()
         h2d = 0
         for tile, sig in self._serve_sigs([miss[k] for k in lane_keys]):
             trace_idx = np.zeros(sig.b_pad, np.int32)
@@ -406,8 +531,26 @@ class ScenarioServer:
                 wv_idx[pos] = wr // self.n_shards    # shard-LOCAL row
             idx = (trace_idx, wv_idx)
             h2d += idx[0].nbytes + idx[1].nbytes
+            if st is not None:
+                if st.wants_verify():
+                    # gather-path integrity sampling against the host
+                    # truth, before this tile's rows are served
+                    rows = sorted({bank.rows_for(s)[1]
+                                   for s in tile.specs})
+                    _chaos.verify_rows(
+                        bank, self._dev,
+                        rows[:_engine.VERIFY_ROWS_PER_TILE],
+                        n_shards=self.n_shards, local_cap=self._cap[1],
+                        where="serve gather sample")
+                st.on_dispatch("serve flush")
+
+            def place(args=idx, s=sig):
+                _engine._h2d_hook(args[0].nbytes + args[1].nbytes)
+                return _engine._place_tile(args, s)
+
             out = _engine.tile_fn(sig)(*self._dev,
-                                       *_engine._place_tile(idx, sig))
+                                       *_engine._retried(
+                                           place, "serve tile placement"))
             exec_ns, at_head, sb_full = (np.asarray(o) for o in out)
             for i, pos in zip(tile.indices, slots):
                 key = lane_keys[i]
@@ -442,6 +585,48 @@ class ScenarioServer:
             self._compact_floor = self._bank.n_rows
             st["bank_compactions"] += 1
 
+    def _recover(self, err: Exception) -> None:
+        """Spare-replacement recovery of the serve bank (under _lock):
+        rebuild the lost shard's rows from the surviving replica block
+        (or the Logging-Unit journal at ``k_replicas=1``),
+        digest-verify them against the host truth, then drop ONLY the
+        device placement -- capacity is KEPT, so the next
+        :meth:`_sync_device` re-places identical shapes and signatures
+        and post-recovery serving adds zero compiles
+        (tests/test_chaos.py pins both)."""
+        t0 = time.monotonic()
+        lost = err.shard if isinstance(err, ShardLossError) else None
+        source = "replace"
+        if lost is not None:
+            # the serve mesh never shrinks: validate the spare takeover
+            # through the elastic-scaling policy shared with run_grid
+            from repro.distributed.elastic import cells_spare_replacement
+            cells_spare_replacement(self.n_shards, lost)
+            if self.k_replicas >= 2 and self._dev is not None:
+                rebuilt = _chaos.replica_rebuild(
+                    self._dev, lost, n_shards=self.n_shards,
+                    k_replicas=self.k_replicas, local_cap=self._cap[1],
+                    wv_rows=self._bank.wv_rows)
+                source = "replica"
+            elif self._bank.journal_enabled:
+                rebuilt = _chaos.journal_rebuild(self._bank, lost,
+                                                 self.n_shards)
+                source = "journal"
+            else:
+                rebuilt = None
+                source = "host"
+            if rebuilt is not None:
+                _chaos.verify_rebuild(self._bank, rebuilt, lost,
+                                      self.n_shards)
+        self._dev = None
+        self._dev_rows = (0, 0)
+        ms = (time.monotonic() - t0) * 1e3
+        self._stats["recoveries"] += 1
+        self._stats["recovery_ms"] += ms
+        st = _chaos.active()
+        if st is not None:
+            st.note_recovery(source, ms, lost, "spare")
+
     # -- synchronous serving ----------------------------------------------
 
     def query(self, spec: ScenarioSpec) -> SimResult:
@@ -464,17 +649,38 @@ class ScenarioServer:
             s.validate(self.cluster)
         with self._lock:
             self._ensure_bank(specs)
-            h2d = self._sync_device()
-            keys = [self._lane_key(s) for s in specs]
-            miss: Dict[tuple, ScenarioSpec] = {}
-            for s, k in zip(specs, keys):
-                if k in self._lanes:
-                    self._lanes.move_to_end(k)      # LRU touch
-                else:
-                    miss.setdefault(k, s)
             compiled0 = _engine.trace_count()
-            if miss:
-                h2d += self._scan_lanes(miss)
+            attempts = 0
+            while True:
+                # one serve attempt: bank dump (diff splice), miss
+                # resolution, lane scan. A detected fault recovers the
+                # device bank in place and re-enters -- lanes scanned
+                # before the fault are cache hits on the retry, so no
+                # lane is ever served from a suspect placement twice
+                try:
+                    h2d = _engine._retried(self._sync_device,
+                                           "serve bank sync")
+                    keys = [self._lane_key(s) for s in specs]
+                    miss: Dict[tuple, ScenarioSpec] = {}
+                    for s, k in zip(specs, keys):
+                        if k in self._lanes:
+                            self._lanes.move_to_end(k)      # LRU touch
+                        else:
+                            miss.setdefault(k, s)
+                    if miss:
+                        h2d += self._scan_lanes(miss)
+                    break
+                except (ShardLossError, IntegrityError) as e:
+                    attempts += 1
+                    if (_chaos.active() is None
+                            or attempts > _engine.MAX_RECOVERIES):
+                        raise
+                    self._recover(e)
+            if self._bank.journal_enabled:
+                # the device dump (capacity bank + this flush's diffs)
+                # is resident: the Logging Unit's retained copies are
+                # acknowledged away
+                self._bank.ack_journal()
             st = self._stats
             st["queries"] += len(specs)
             st["lane_misses"] += sum(k in miss for k in keys)
@@ -561,55 +767,159 @@ class ScenarioServer:
 
     # -- async batching ----------------------------------------------------
 
-    def submit(self, spec: ScenarioSpec) -> "Future[SimResult]":
+    def submit(self, spec: ScenarioSpec,
+               timeout_ms: Optional[float] = None) -> "Future[SimResult]":
         """Enqueue one query; the daemon thread coalesces everything
         arriving within ``batch_window_ms`` (or up to ``batch_cells``
         entries) into one flush and resolves each Future with its
-        :class:`SimResult`."""
+        :class:`SimResult`.
+
+        ``timeout_ms`` (default: the server's ``submit_timeout_ms``)
+        bounds the future: if it is still pending past the deadline --
+        queued behind a dead daemon, or inside a wedged flush -- the
+        watchdog fails it with a :class:`TimeoutError` carrying the
+        queue diagnostics instead of blocking the caller forever."""
         spec.validate(self.cluster)
+        if timeout_ms is None:
+            timeout_ms = self.submit_timeout_ms
+        elif timeout_ms <= 0:
+            raise ValueError(f"timeout_ms must be > 0, got {timeout_ms}")
+        deadline = (time.monotonic() + timeout_ms / 1e3
+                    if timeout_ms is not None else None)
         fut: Future = Future()
         with self._cond:
             if self._closed:
                 raise RuntimeError("ScenarioServer is closed")
-            self._queue.append((spec, fut))
-            if self._worker is None:
-                self._worker = threading.Thread(
-                    target=self._serve_loop, name="scenario-server",
-                    daemon=True)
-                self._worker.start()
+            self._queue.append((spec, fut, deadline))
+            if self._worker is None or not self._worker.is_alive():
+                self._start_worker_locked()
             self._cond.notify_all()
         return fut
 
+    def _start_worker_locked(self) -> None:
+        """Spawn the daemon (and its watchdog) -- caller holds _cond."""
+        self._worker = threading.Thread(
+            target=self._serve_loop, name="scenario-server", daemon=True)
+        self._worker.start()
+        if self._watchdog is None or not self._watchdog.is_alive():
+            self._watchdog = threading.Thread(
+                target=self._watchdog_loop, name="scenario-server-watchdog",
+                daemon=True)
+            self._watchdog.start()
+
     def _serve_loop(self) -> None:
+        try:
+            while True:
+                with self._cond:
+                    while not self._queue and not self._closed:
+                        self._cond.wait()
+                    if not self._queue:          # closed and drained
+                        return
+                    # chaos kill point BEFORE the queue is popped: a
+                    # killed daemon leaves every pending entry intact
+                    # for the respawned worker (or close()) to serve
+                    st = _chaos.active()
+                    if st is not None:
+                        st.on_thread("daemon")
+                    # batching window: linger for stragglers so
+                    # concurrent submitters share one flush instead of
+                    # paying one each
+                    deadline = time.monotonic() + self.batch_window_ms / 1e3
+                    while (not self._closed
+                           and len(self._queue) < self.batch_cells):
+                        left = deadline - time.monotonic()
+                        if left <= 0:
+                            break
+                        self._cond.wait(left)
+                    # expired/cancelled futures never reach a flush
+                    batch = [e for e in self._queue if not e[1].done()]
+                    self._queue.clear()
+                    self._flush_started = time.monotonic()
+                    self._flush_batch = batch
+                if not batch:
+                    continue
+                with self._lock:
+                    self._stats["batches"] += 1
+                try:
+                    results = self.query_batch([s for s, _, _ in batch])
+                except BaseException as e:   # surface to every waiter
+                    for _, fut, _ in batch:
+                        if not fut.done():
+                            fut.set_exception(e)
+                    continue
+                finally:
+                    with self._cond:
+                        self._flush_started = None
+                        self._flush_batch = []
+                for (_, fut, _), res in zip(batch, results):
+                    if not fut.done():
+                        fut.set_result(res)
+        except ThreadDeathError:
+            pass          # injected death: the watchdog/submit respawns
+        finally:
+            with self._cond:
+                if self._worker is threading.current_thread():
+                    self._worker = None
+                self._flush_started = None
+                self._flush_batch = []
+                self._cond.notify_all()
+
+    def _watchdog_loop(self) -> None:
+        """Liveness sidecar of the serve loop (runs whenever a worker
+        does; only ever takes _cond). Three duties: fail futures past
+        their ``submit`` deadline with a diagnostic; respawn a daemon
+        thread that died with work queued; fail a wedged flush's
+        futures after ``watchdog_ms`` so callers never block on a hung
+        device instead of an answer."""
         while True:
             with self._cond:
-                while not self._queue and not self._closed:
-                    self._cond.wait()
-                if not self._queue:          # closed and drained
+                if self._closed and not self._queue \
+                        and self._flush_started is None:
+                    self._watchdog = None
                     return
-                # batching window: linger for stragglers so concurrent
-                # submitters share one flush instead of paying one each
-                deadline = time.monotonic() + self.batch_window_ms / 1e3
-                while (not self._closed
-                       and len(self._queue) < self.batch_cells):
-                    left = deadline - time.monotonic()
-                    if left <= 0:
-                        break
-                    self._cond.wait(left)
-                batch = list(self._queue)
-                self._queue.clear()
-            with self._lock:
-                self._stats["batches"] += 1
-            try:
-                results = self.query_batch([s for s, _ in batch])
-            except BaseException as e:       # surface to every waiter
-                for _, fut in batch:
-                    if not fut.done():
-                        fut.set_exception(e)
-                continue
-            for (_, fut), res in zip(batch, results):
-                if not fut.done():
-                    fut.set_result(res)
+                now = time.monotonic()
+                expired = [e for e in self._queue
+                           if e[2] is not None and now > e[2]]
+                for e in expired:
+                    self._queue.remove(e)
+                    self._wd_stats["submit_timeouts"] += 1
+                    if not e[1].done():
+                        e[1].set_exception(TimeoutError(
+                            f"submit({e[0].workload!r}, {e[0].config!r}) "
+                            f"timed out awaiting flush (queue depth "
+                            f"{len(self._queue)}, daemon "
+                            f"{'alive' if self._worker is not None else 'dead'})"))
+                # a deadline can also expire mid-flush (entry already
+                # popped into the in-flight batch but the flush is stuck
+                # behind a wedged device/lock) -- fail the future in
+                # place; the serve loop's set_result is done()-guarded
+                for e in self._flush_batch:
+                    if e[2] is not None and now > e[2] and not e[1].done():
+                        self._wd_stats["submit_timeouts"] += 1
+                        e[1].set_exception(TimeoutError(
+                            f"submit({e[0].workload!r}, {e[0].config!r}) "
+                            f"timed out mid-flush (flush running "
+                            f"{(now - (self._flush_started or now)) * 1e3:.0f}"
+                            f" ms, batch of {len(self._flush_batch)})"))
+                if self._queue and (self._worker is None
+                                    or not self._worker.is_alive()):
+                    self._wd_stats["worker_restarts"] += 1
+                    self._start_worker_locked()
+                if (self.watchdog_ms is not None
+                        and self._flush_started is not None
+                        and (now - self._flush_started) * 1e3
+                        > self.watchdog_ms):
+                    stuck = self._flush_batch
+                    self._flush_started = None
+                    self._flush_batch = []
+                    self._wd_stats["watchdog_flush_failures"] += 1
+                    for _, fut, _ in stuck:
+                        if not fut.done():
+                            fut.set_exception(TimeoutError(
+                                f"serve flush exceeded watchdog_ms="
+                                f"{self.watchdog_ms} (daemon wedged; "
+                                f"{len(stuck)} queries failed)"))
+                self._cond.wait(0.02)
 
     # -- observability -----------------------------------------------------
 
@@ -634,12 +944,16 @@ class ScenarioServer:
             st["bank_capacity"] = self._cap
             st["dev_rows"] = self._dev_rows
             st["bank_partition"] = "sub"
+            st["k_replicas"] = self.k_replicas
+            st["journal_entries"] = (self._bank.journal_entries
+                                     if self._bank is not None else 0)
             total, per = _engine._measured_device_bytes(
                 self._dev if self._dev is not None else ())
             st["bank_dev_bytes"] = total
             st["bank_dev_bytes_per_shard"] = per
         with self._cond:
             st["pending"] = len(self._queue)
+            st.update(self._wd_stats)
         return st
 
     def reset_stats(self) -> None:

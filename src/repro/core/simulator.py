@@ -841,6 +841,10 @@ class TraceBank:
     wv_row: Dict[tuple, int]
     _device: Dict[object, tuple] = dataclasses.field(
         default_factory=dict, repr=False)
+    # Logging-Unit journal: un-acknowledged extend() diffs (None = off;
+    # see enable_journal / ack_journal / replay_journal below)
+    _journal: Optional[List[Dict[str, np.ndarray]]] = dataclasses.field(
+        default=None, repr=False)
 
     @property
     def trace_rows(self) -> int:
@@ -903,47 +907,121 @@ class TraceBank:
         self._device[key] = dev
         return self.nbytes, dev
 
-    def sub_bank_host(self, n_shards: int) -> tuple:
+    def sub_bank_host(self, n_shards: int, k_replicas: int = 1) -> tuple:
         """Host arrays of the per-shard sub-bank layout: ``(arrivals,
         w_sub, v_sub, pr_nc_sub)`` with the three max-plus planes
-        stacked ``(n_shards, local_rows, n_stores)`` -- shard ``s``'s
-        sub-bank is rows ``s::n_shards`` of the global plane, zero-
-        padded to the widest shard's :func:`sub_bank_rows` count.
-        Arrivals stay the global 2-D plane (they are replicated on
-        device; see ``distributed.sharding.SUB_BANK_SPEC``)."""
+        stacked ``(n_shards, k_replicas * local_rows, n_stores)`` --
+        shard ``s``'s PRIMARY sub-bank (local rows ``[0, local)``) is
+        rows ``s::n_shards`` of the global plane, zero-padded to the
+        widest shard's :func:`sub_bank_rows` count.  Arrivals stay the
+        global 2-D plane (they are replicated on device; see
+        ``distributed.sharding.SUB_BANK_SPEC``).
+
+        ``k_replicas > 1`` appends the paper's **Replica set** along
+        the local-row axis: replica block ``j`` (local rows ``[j *
+        local, (j + 1) * local)``) of shard ``s`` holds the rows owned
+        by shard ``(s - j) % n_shards`` -- so global row ``r`` is
+        resident on shards ``r % n`` (primary) and ``(r % n + 1) % n``
+        (first replica), and losing ONE shard never loses a row
+        (``repro.core.chaos.replica_rebuild`` reads the survivor's
+        block back).  Gathers always target the primary block, so the
+        scan arithmetic -- and at ``k_replicas=1`` the bytes -- are
+        unchanged from the PR-8 layout; the replica blocks cost
+        ``(k - 1)/n_shards`` extra resident bytes per max-plus plane."""
+        if not 1 <= k_replicas <= n_shards:
+            raise ValueError(f"k_replicas must be in [1, {n_shards}], "
+                             f"got {k_replicas}")
         p_loc = sub_bank_rows(self.wv_rows, n_shards)
 
         def sub(col: np.ndarray) -> np.ndarray:
-            out = np.zeros((n_shards, p_loc) + col.shape[1:], col.dtype)
+            out = np.zeros((n_shards, k_replicas * p_loc) + col.shape[1:],
+                           col.dtype)
             for s in range(n_shards):
-                rows = col[s::n_shards]
-                out[s, :rows.shape[0]] = rows
+                for j in range(k_replicas):
+                    rows = col[(s - j) % n_shards::n_shards]
+                    out[s, j * p_loc:j * p_loc + rows.shape[0]] = rows
             return out
 
         return self.arrivals, sub(self.w), sub(self.v), sub(self.pr_nc)
 
     def sub_device_args(self, n_shards: int,
-                        place: Optional[Callable[[tuple], tuple]] = None
-                        ) -> Tuple[int, tuple]:
+                        place: Optional[Callable[[tuple], tuple]] = None,
+                        k_replicas: int = 1) -> Tuple[int, tuple]:
         """Device-resident sub-bank placement (:meth:`sub_bank_host`
         layout), memoized like :meth:`device_args` under the key
-        ``("sub", n_shards)``. Returns ``(bytes_uploaded_now,
-        arrays)``. Growth re-places the whole sub-bank (no diff path:
-        the streaming engine never extends a bank mid-run, and the
-        serving daemon keeps its own capacity-padded device state with
+        ``("sub", n_shards)`` (``("sub", n_shards, k_replicas)`` for a
+        replicated layout, so resilient and plain placements of one
+        bank coexist). Returns ``(bytes_uploaded_now, arrays)``.
+        Growth re-places the whole sub-bank (no diff path: the
+        streaming engine never extends a bank mid-run, and the serving
+        daemon keeps its own capacity-padded device state with
         per-shard splices)."""
-        key = ("sub", n_shards)
+        key = ("sub", n_shards) if k_replicas == 1 \
+            else ("sub", n_shards, k_replicas)
         entry = self._device.get(key)
         rows_now = (self.trace_rows, self.wv_rows)
         if entry is not None:
             rows_placed, dev = entry
             if rows_placed == rows_now:
                 return 0, dev
-        host = self.sub_bank_host(n_shards)
+        host = self.sub_bank_host(n_shards, k_replicas)
         dev = place(host) if place is not None else \
             tuple(jnp.asarray(x) for x in host)
         self._device[key] = (rows_now, dev)
         return sum(int(x.nbytes) for x in host), dev
+
+    def drop_placement(self, key: object) -> None:
+        """Forget one memoized device placement (recovery re-admission:
+        after a shard loss the stale arrays must not be served from the
+        memo -- the next ``device_args``/``sub_device_args`` call
+        re-places from the host truth)."""
+        self._device.pop(key, None)
+
+    # -- Logging-Unit journal (resilience; see repro.core.chaos) ----------
+
+    @property
+    def journal_enabled(self) -> bool:
+        return self._journal is not None
+
+    @property
+    def journal_entries(self) -> int:
+        """Un-acknowledged ``extend()`` diffs currently retained."""
+        return len(self._journal) if self._journal is not None else 0
+
+    def enable_journal(self) -> None:
+        """Start journaling ``extend()`` diffs (the paper's Logging
+        Unit, host-side): every append records a COPY of its new rows,
+        retained until :meth:`ack_journal` confirms the device dump.
+        Idempotent; off by default (the copies cost memory), enabled by
+        the serving daemon when chaos/recovery is requested."""
+        if self._journal is None:
+            self._journal = []
+
+    def ack_journal(self) -> None:
+        """Acknowledge the device dump: every journaled diff is now
+        resident device-side, so the retained copies are dropped (the
+        host columns remain the durable truth)."""
+        if self._journal is not None:
+            self._journal.clear()
+
+    def replay_journal(self) -> Dict[str, np.ndarray]:
+        """Concatenate the un-acknowledged diffs in append order --
+        what a recovering node would replay on top of the last
+        acknowledged dump.  ``chaos.journal_rebuild`` digest-checks
+        this against the bank's tail rows before using it."""
+        if self._journal is None:
+            raise RuntimeError("journal not enabled")
+        empty = {"arrivals": np.zeros((0,), np.float32),
+                 "w": np.zeros((0,), np.float32),
+                 "v": np.zeros((0,), np.float32),
+                 "pr_nc": np.zeros((0,), bool)}
+        if not self._journal:
+            return empty
+        return {name: (np.concatenate([e[name] for e in self._journal
+                                       if e[name].shape[0]], axis=0)
+                       if any(e[name].shape[0] for e in self._journal)
+                       else empty[name])
+                for name in ("arrivals", "w", "v", "pr_nc")}
 
     def extend(self, specs: Sequence[ScenarioSpec]) -> Tuple[int, int]:
         """Append the rows of ``specs`` not yet in the bank, in place.
@@ -961,7 +1039,14 @@ class TraceBank:
 
         Returns ``(new_trace_rows, new_wv_rows)`` -- ``(0, 0)`` when
         every spec's rows were already present. Not thread-safe on its
-        own; the serving daemon serializes extends under its lock."""
+        own; the serving daemon serializes extends under its lock.
+
+        With the Logging-Unit journal enabled (:meth:`enable_journal`),
+        every append additionally retains a COPY of its new rows until
+        :meth:`ack_journal` confirms the device dump -- the host-side
+        replay source ``repro.core.chaos.journal_rebuild`` recovers a
+        lost shard from."""
+        t0, p0 = self.trace_rows, self.wv_rows
         new_trace: List[tuple] = []
         new_wv: List[tuple] = []
         for s in specs:
@@ -985,6 +1070,12 @@ class TraceBank:
                 [self.v, np.stack([c[1] for c in cols], axis=0)], axis=0)
             self.pr_nc = np.concatenate(
                 [self.pr_nc, np.stack([c[2] for c in cols], axis=0)], axis=0)
+        if self._journal is not None and (new_trace or new_wv):
+            self._journal.append({
+                "arrivals": self.arrivals[t0:].copy(),
+                "w": self.w[p0:].copy(),
+                "v": self.v[p0:].copy(),
+                "pr_nc": self.pr_nc[p0:].copy()})
         return len(new_trace), len(new_wv)
 
 

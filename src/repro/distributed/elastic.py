@@ -103,3 +103,29 @@ def shrink_data_axis(mesh_shape: Tuple[int, ...], axes: Tuple[str, ...]
         raise ValueError("cannot shrink a single-rank data axis")
     out[di] -= 1
     return tuple(out), axes
+
+
+# -- the engine tier's ``cells`` mesh (see repro.core.engine / chaos) -------
+
+def cells_spare_replacement(n_shards: int, lost: int) -> int:
+    """Spare-replacement target mesh for the streaming engine's
+    ``cells`` axis: the mesh shape is UNCHANGED -- a spare device takes
+    the lost shard's coordinates, so every compiled tile program stays
+    valid and recovery cost is re-placing the rebuilt rows only (the
+    ``run_grid`` recovery path; 0 new compiles, pinned by
+    tests/test_chaos.py).  Returns the (unchanged) shard count after
+    validating the lost index."""
+    if not 0 <= lost < n_shards:
+        raise ValueError(f"lost shard {lost} not in [0, {n_shards})")
+    return n_shards
+
+
+def cells_degraded_shards(n_shards: int) -> int:
+    """Degraded-mesh ``cells`` shard count after losing one shard with
+    no spare available: one fewer -- the caller re-runs on the shrunk
+    mesh with ``bank_partition="replicated"`` (per-shard sub-banks
+    would need a reshard; the replicated layout only needs the one
+    recompile) and keeps serving."""
+    if n_shards <= 1:
+        raise ValueError("cannot shrink a single-shard cells mesh")
+    return n_shards - 1

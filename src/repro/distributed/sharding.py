@@ -370,6 +370,19 @@ def bank_shardings(mesh: jax.sharding.Mesh) -> Tuple[NamedSharding, ...]:
 #: trace row and wv row can be owned by different shards, and arrivals
 #: are ~1% of the bank's bytes -- partitioning them would buy nothing
 #: and force a second ownership constraint on the scheduler.
+#:
+#: **Replicated sub-banks** (``k_replicas > 1``, resolved by
+#: :func:`repro.core.chaos.resolve_k_replicas`): the local axis grows to
+#: ``k * local_rows`` and block ``j`` of shard ``s`` holds the rows OWNED
+#: by shard ``(s - j) % n_shards`` -- ReCXL-style Logging Units, so wv
+#: row ``r`` is resident on its owner ``r % n`` (block 0) and on the
+#: next shard over (block 1), and losing any single shard leaves a full
+#: replica of its rows one hop away for
+#: :func:`repro.core.chaos.replica_rebuild`. The gather path always
+#: indexes block 0, so the tile programs, their signatures, and the
+#: scan-lane scheduler are IDENTICAL at every ``k`` -- replication costs
+#: bytes (reported by ``bank_stats()["sub_bank_bytes"]``), never
+#: compiles; this same spec shards the wider stack unchanged.
 SUB_BANK_SPEC = P("cells", None, None)
 
 
@@ -384,7 +397,9 @@ def sub_bank_tile_specs() -> Tuple[P, ...]:
 def sub_bank_shardings(mesh: jax.sharding.Mesh) -> Tuple[NamedSharding, ...]:
     """NamedShardings partitioning the 3 sub-bank stacks over ``mesh``
     (shard axis 0 over ``cells``: ``device_put`` slices the host stack
-    per device, so upload bytes are the bank's, not bank x shards)."""
+    per device, so upload bytes are the bank's, not bank x shards --
+    times ``k_replicas`` when the chaos tier stacks replica blocks on
+    the local axis; the sharding itself is k-agnostic)."""
     return (NamedSharding(mesh, SUB_BANK_SPEC),) * 3
 
 

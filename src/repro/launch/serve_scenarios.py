@@ -38,14 +38,28 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="assert every answer == the cold oracle")
     ap.add_argument("--host-devices", type=int, default=8)
+    ap.add_argument("--k-replicas", type=int, default=None,
+                    help="sub-bank replica blocks per shard (default: 1, "
+                         "or 2 inside a chaos scope; see docs/resilience.md)")
+    ap.add_argument("--submit-timeout-ms", type=float, default=None,
+                    help="default deadline on submit() futures; the "
+                         "watchdog fails them with a diagnostic past it")
+    ap.add_argument("--watchdog-ms", type=float, default=None,
+                    help="fail a wedged daemon flush after this long")
+    ap.add_argument("--lose-shard", type=int, default=None,
+                    help="inject a shard loss mid-stream (chaos demo: the "
+                         "server must recover bit-identical, 0 recompiles)")
     args = ap.parse_args()
 
     if "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.host_devices}")
 
+    import contextlib
+
     import numpy as np
 
+    from repro.core import chaos
     from repro.core.engine import simulate_grid, trace_count
     from repro.core.scenarios import grid_delta, sweep_grid
     from repro.core.serving import ScenarioServer
@@ -61,9 +75,17 @@ def main() -> None:
               else novel[rng.integers(len(novel))]
               for _ in range(args.queries)]
 
-    with ScenarioServer(n_stores=args.stores, batch_cells=args.batch_cells,
+    # arm far out so the warm phase runs clean, then re-arm a couple of
+    # dispatches into the query stream once warm's dispatch count is known
+    scope = (chaos.inject(chaos.ChaosConfig(lose_shard=args.lose_shard,
+                                            lose_at_dispatch=1 << 30))
+             if args.lose_shard is not None else contextlib.nullcontext())
+    with scope as chaos_state, \
+         ScenarioServer(n_stores=args.stores, batch_cells=args.batch_cells,
                         batch_window_ms=args.window_ms,
-                        n_shards=args.shards) as srv:
+                        n_shards=args.shards, k_replicas=args.k_replicas,
+                        submit_timeout_ms=args.submit_timeout_ms,
+                        watchdog_ms=args.watchdog_ms) as srv:
         t0 = time.perf_counter()
         srv.warm(warm_grid)
         t_warm = time.perf_counter() - t0
@@ -71,6 +93,9 @@ def main() -> None:
               f"{srv.stats()['bank_rows']} bank rows, "
               f"{srv.stats()['compiled_programs']} programs, "
               f"{t_warm * 1e3:.1f} ms")
+
+        if chaos_state is not None:
+            chaos_state.arm_after(2)
 
         srv.reset_stats()
         tc0 = trace_count()
@@ -91,6 +116,15 @@ def main() -> None:
               f"steady-state compiles {trace_count() - tc0}")
         print(f"marginal h2d {st['h2d_bytes'] / len(stream):.0f} B/query "
               f"(cold full-bank upload {st['bank_bytes']} B)")
+
+        if chaos_state is not None:
+            rep = chaos_state.report()
+            for r in rep["recoveries"]:
+                print(f"chaos: shard {r['shard']} lost, recovered from "
+                      f"{r['source']} in {r['ms']:.1f} ms ({r['mode']})")
+            print(f"chaos: k_replicas={srv.k_replicas}, "
+                  f"upload retries {rep['upload_retries']}, "
+                  f"post-recovery compiles {trace_count() - tc0}")
 
         # the other two query shapes
         added = srv.query_grid(workloads=("streamcluster",),

@@ -437,3 +437,60 @@ def test_concurrent_queries_race_cache_clears_bitident():
         assert not errors, errors[:3]
         st_ = srv.stats()
         assert st_["bank_builds"] == 1, "bank was rebuilt under the race"
+
+
+def test_submit_timeout_fails_future_with_diagnostic():
+    """A submit() deadline expiring -- queued OR mid-flush -- fails
+    that future with a TimeoutError diagnostic instead of blocking the
+    caller forever (the watchdog satellite of PR 9)."""
+    with ScenarioServer(n_stores=N, batch_cells=8) as srv:
+        srv._lock.acquire()                 # wedge the flush path
+        try:
+            fut = srv.submit(WARM_GRID[0], timeout_ms=50)
+            with pytest.raises(TimeoutError, match="timed out"):
+                fut.result(timeout=30)
+        finally:
+            srv._lock.release()
+        assert srv.stats()["submit_timeouts"] >= 1
+        # the daemon is still healthy afterwards
+        ok = srv.submit(WARM_GRID[0], timeout_ms=60_000).result(timeout=120)
+        assert ok == simulate_batch([WARM_GRID[0]], n_stores=N)[0]
+    with pytest.raises(ValueError):
+        ScenarioServer(n_stores=N, submit_timeout_ms=0)
+
+
+def test_watchdog_fails_wedged_flush():
+    """watchdog_ms bounds a wedged daemon flush: every future of the
+    stuck batch fails with a diagnostic naming the watchdog."""
+    with ScenarioServer(n_stores=N, batch_cells=8,
+                        watchdog_ms=100) as srv:
+        srv._lock.acquire()
+        try:
+            futs = [srv.submit(s) for s in WARM_GRID[:2]]
+            for f in futs:
+                with pytest.raises(TimeoutError, match="watchdog"):
+                    f.result(timeout=30)
+        finally:
+            srv._lock.release()
+        assert srv.stats()["watchdog_flush_failures"] >= 1
+
+
+def test_close_drains_or_fails_pending_deterministically():
+    """close() under concurrent submitters: every outstanding future is
+    either resolved (flushed during the drain) or failed with a
+    RuntimeError -- never left pending."""
+    srv = ScenarioServer(n_stores=N, batch_cells=8)
+    srv._lock.acquire()                     # hold the daemon mid-flush
+    fut = srv.submit(WARM_GRID[0])
+    closer = threading.Thread(target=srv.close)
+    closer.start()
+    srv._lock.release()
+    closer.join(timeout=120)
+    assert not closer.is_alive(), "close() hung on a pending queue"
+    try:
+        res = fut.result(timeout=30)        # drained during close
+        assert res == simulate_batch([WARM_GRID[0]], n_stores=N)[0]
+    except RuntimeError:
+        pass                                # or failed deterministically
+    with pytest.raises(RuntimeError):
+        srv.submit(WARM_GRID[0])
