@@ -19,6 +19,12 @@ Sections:
                 max-plus recurrence): geomean slowdown vs offered load,
                 oracle bit-identity and lane dedup on the streaming
                 directory mega-grid (benchmarks/bench_directory.py)
+  serve/telemetry/*  flight-recorder observability tier
+                (repro.core.telemetry): per-stage time breakdown of the
+                streaming mega-grid, serving p50/p99 reproduced from
+                telemetry histograms, chaos recovery span timeline and
+                the telemetry-off/on overhead ratio
+                (benchmarks/bench_telemetry.py; docs/observability.md)
   serve/latency/*  scenario-serving daemon (repro.core.serving):
                 p50/p99 query latency, throughput, lane-cache hit
                 ratio, steady-state compile count (must be 0) and the
@@ -35,6 +41,13 @@ Sections:
 ``--quick`` (or RECXL_BENCH_QUICK=1) is the CI smoke mode: protocol
 benches only, at a reduced store count (including a shrunken megagrid
 smoke so the shard_map tier cannot rot).
+
+``--trace`` enables the flight recorder (``repro.core.telemetry``) for
+the whole run and appends its merged summary -- per-stage span
+histograms, simulated protocol counters, gauges -- to the history entry
+as a ``"telemetry"`` key (docs/observability.md); pass
+``--trace-out <path.jsonl>`` too to also export the Chrome trace-event
+JSONL for Perfetto.
 
 Perf history: every run appends ``{ts, quick, argv, rows}`` to
 ``benchmarks/BENCH_protocol.json`` (override the path with
@@ -80,7 +93,7 @@ def _load_history(path: str) -> list:
     return kept
 
 
-def append_history(rows, quick: bool) -> str:
+def append_history(rows, quick: bool, telemetry=None) -> str:
     """Append one run's rows to the JSON trajectory; returns the path
     ('' when disabled or unwritable). The file is a list of run
     entries, oldest first. History is best-effort telemetry: an
@@ -94,12 +107,15 @@ def append_history(rows, quick: bool) -> str:
     if path.lower() in ("", "0", "off", "none"):
         return ""
     hist = _load_history(path)
-    hist.append({
+    entry = {
         "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
         "quick": quick,
         "argv": sys.argv[1:],
         "rows": rows,
-    })
+    }
+    if telemetry:
+        entry["telemetry"] = telemetry
+    hist.append(entry)
     tmp = f"{path}.tmp.{os.getpid()}"
     try:
         with open(tmp, "w") as f:
@@ -120,17 +136,27 @@ def main() -> None:
     if "--quick" in sys.argv[1:]:
         os.environ["RECXL_BENCH_QUICK"] = "1"
     quick = os.environ.get("RECXL_BENCH_QUICK", "") not in ("", "0")
+    traced = "--trace" in sys.argv[1:]
+    trace_out = None
+    if "--trace-out" in sys.argv[1:]:
+        traced = True
+        trace_out = sys.argv[sys.argv.index("--trace-out") + 1]
+    if traced:
+        from repro.core import telemetry
+        telemetry.enable()
 
     from benchmarks.bench_chaos import bench_chaos
     from benchmarks.bench_contention import bench_contention
     from benchmarks.bench_directory import bench_directory
     from benchmarks.bench_serving import bench_serving
+    from benchmarks.bench_telemetry import bench_telemetry
     from benchmarks.protocol_benches import ALL_PROTOCOL_BENCHES
 
     benches = list(ALL_PROTOCOL_BENCHES) + [bench_contention,
                                             bench_directory,
                                             bench_serving,
-                                            bench_chaos]
+                                            bench_chaos,
+                                            bench_telemetry]
     if not quick:
         from benchmarks.framework_benches import ALL_FRAMEWORK_BENCHES
         benches += ALL_FRAMEWORK_BENCHES
@@ -157,7 +183,15 @@ def main() -> None:
         derived = str(r["derived"]).replace(",", ";")
         print(f"{r['name']},{r['us_per_call']},{derived}{extra}")
 
-    path = append_history(rows, quick)
+    summ = None
+    if traced:
+        from repro.core import telemetry
+        summ = telemetry.summary()
+        if trace_out:
+            n = telemetry.export_chrome(trace_out)
+            print(f"# wrote {n} trace events to {trace_out}",
+                  file=sys.stderr)
+    path = append_history(rows, quick, telemetry=summ)
     if path:
         print(f"# appended {len(rows)} rows to {path}", file=sys.stderr)
 

@@ -54,6 +54,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.core import telemetry as _tm
+
 # ---------------------------------------------------------------------------
 # Fault taxonomy
 # ---------------------------------------------------------------------------
@@ -167,6 +169,7 @@ class ChaosState:
 
     def _note(self, kind: str, detail: object = None) -> None:
         self.events.append((time.monotonic(), kind, detail))
+        _tm.count(f"chaos/{kind}")
 
     # -- re-arming ---------------------------------------------------------
 
@@ -428,17 +431,18 @@ def replica_rebuild(dev: tuple, lost: int, *, n_shards: int,
         raise ValueError("replica rebuild needs k_replicas >= 2")
     if n_shards < 2:
         raise ValueError("replica rebuild needs n_shards >= 2")
-    rows = owned_rows(lost, n_shards, wv_rows)
-    out = {"w": [], "v": [], "pr_nc": []}
-    for r in rows:
-        w, v, p = fetch_wv_row(dev, r, n_shards=n_shards,
-                               local_cap=local_cap, block=1)
-        out["w"].append(w)
-        out["v"].append(v)
-        out["pr_nc"].append(p)
-    return {k: (np.stack(vs, axis=0) if vs
-                else np.zeros((0,), np.float32))
-            for k, vs in out.items()}
+    with _tm.span("chaos/replica_rebuild", shard=lost):
+        rows = owned_rows(lost, n_shards, wv_rows)
+        out = {"w": [], "v": [], "pr_nc": []}
+        for r in rows:
+            w, v, p = fetch_wv_row(dev, r, n_shards=n_shards,
+                                   local_cap=local_cap, block=1)
+            out["w"].append(w)
+            out["v"].append(v)
+            out["pr_nc"].append(p)
+        return {k: (np.stack(vs, axis=0) if vs
+                    else np.zeros((0,), np.float32))
+                for k, vs in out.items()}
 
 
 def journal_rebuild(bank, lost: int, n_shards: int) -> Dict[str, np.ndarray]:
@@ -450,6 +454,11 @@ def journal_rebuild(bank, lost: int, n_shards: int) -> Dict[str, np.ndarray]:
     divergent journal would replay corruption), then the owned rows
     are sliced out in global-row order -- byte-identical to what
     :func:`replica_rebuild` reads off the surviving device."""
+    with _tm.span("chaos/journal_rebuild", shard=lost):
+        return _journal_rebuild(bank, lost, n_shards)
+
+
+def _journal_rebuild(bank, lost: int, n_shards: int) -> Dict[str, np.ndarray]:
     entries = bank.replay_journal() if getattr(bank, "journal_enabled",
                                                False) else None
     if entries is not None and entries["w"].shape[0]:
@@ -470,6 +479,12 @@ def verify_rebuild(bank, rebuilt: Dict[str, np.ndarray], lost: int,
     """Digest-check rebuilt rows against the host truth before they are
     re-placed (recovery must never install corrupt rows -- the second
     place row digests are checked, after gather-path sampling)."""
+    with _tm.span("chaos/verify_rebuild", shard=lost):
+        _verify_rebuild(bank, rebuilt, lost, n_shards)
+
+
+def _verify_rebuild(bank, rebuilt: Dict[str, np.ndarray], lost: int,
+                    n_shards: int) -> None:
     rows = owned_rows(lost, n_shards, bank.wv_rows)
     bad = [r for i, r in enumerate(rows)
            if any(row_digest(rebuilt[name][i]) !=

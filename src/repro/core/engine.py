@@ -109,6 +109,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.recxl_paper import ClusterConfig, PAPER_CLUSTER
 from repro.core import chaos as _chaos
+from repro.core import telemetry as _tm
 from repro.core.chaos import (
     ChaosError,
     IntegrityError,
@@ -980,9 +981,11 @@ def run_grid(specs: Sequence[ScenarioSpec],
         drained."""
         nonlocal live_bytes
         kt, tile, groups, (exec_ns, at_head, sb_full) = entry
-        exec_ns = np.asarray(exec_ns)
-        at_head = np.asarray(at_head)
-        sb_full = np.asarray(sb_full)
+        with _tm.span("tile/drain", tile=kt):
+            # blocks on the device compute + ships the outputs back
+            exec_ns = np.asarray(exec_ns)
+            at_head = np.asarray(at_head)
+            sb_full = np.asarray(sb_full)
         live_bytes -= tile_payload_bytes(tile.sig)
         slots = tile.slots if tile.slots is not None \
             else range(len(tile.indices))
@@ -1017,7 +1020,8 @@ def run_grid(specs: Sequence[ScenarioSpec],
         if st is not None:
             st.on_thread("prefetch")
         try:
-            return prep(tile)
+            with _tm.span("tile/prep", tile=no):
+                return prep(tile)
         except ChaosError:
             raise
         except Exception as e:
@@ -1029,7 +1033,8 @@ def run_grid(specs: Sequence[ScenarioSpec],
         if st is not None:
             st.on_thread("warm")
         try:
-            _warm_signatures(sigs, t_l1, t_wt, bank_dev)
+            with _tm.span("compile/warm", signatures=len(sigs)):
+                _warm_signatures(sigs, t_l1, t_wt, bank_dev)
         except ChaosError:
             raise
         except Exception as e:
@@ -1087,6 +1092,12 @@ def run_grid(specs: Sequence[ScenarioSpec],
     def place_bank_now() -> None:
         nonlocal bank_fresh, bank_dev, fabric_bytes, h2d_bytes
         nonlocal bank_dev_total, bank_dev_per
+        with _tm.span("bank/place", rows=bank.n_rows):
+            _place_bank_body()
+
+    def _place_bank_body() -> None:
+        nonlocal bank_fresh, bank_dev, fabric_bytes, h2d_bytes
+        nonlocal bank_dev_total, bank_dev_per
         if sub:
             bank_fresh, bank_dev = _retried(
                 lambda: _place_sub_bank(bank, n_shards, k_eff),
@@ -1122,24 +1133,27 @@ def run_grid(specs: Sequence[ScenarioSpec],
             cells_spare_replacement(n_shards, lost)
         source = "redispatch"
         if bank is not None and sub and lost is not None:
-            if k_eff >= 2:
-                rebuilt = _chaos.replica_rebuild(
-                    bank_dev, lost, n_shards=n_shards, k_replicas=k_eff,
-                    local_cap=local_rows, wv_rows=bank.wv_rows)
-                source = "replica"
-            elif bank.journal_enabled:
-                rebuilt = _chaos.journal_rebuild(bank, lost, n_shards)
-                source = "journal"
-            else:
-                rebuilt = None
-                source = "host"
-            if rebuilt is not None:
-                _chaos.verify_rebuild(bank, rebuilt, lost, n_shards)
+            with _tm.span("recover/rebuild", shard=lost):
+                if k_eff >= 2:
+                    rebuilt = _chaos.replica_rebuild(
+                        bank_dev, lost, n_shards=n_shards,
+                        k_replicas=k_eff, local_cap=local_rows,
+                        wv_rows=bank.wv_rows)
+                    source = "replica"
+                elif bank.journal_enabled:
+                    rebuilt = _chaos.journal_rebuild(bank, lost, n_shards)
+                    source = "journal"
+                else:
+                    rebuilt = None
+                    source = "host"
+                if rebuilt is not None:
+                    _chaos.verify_rebuild(bank, rebuilt, lost, n_shards)
         elif bank is not None:
             source = "host"
         if bank is not None:
-            bank.drop_placement(bank_place_key())
-            place_bank_now()
+            with _tm.span("recover/replace", source=source):
+                bank.drop_placement(bank_place_key())
+                place_bank_now()
         if st is not None:
             st.note_recovery(source, (time.monotonic() - t0) * 1e3,
                              lost, "spare")
@@ -1147,6 +1161,7 @@ def run_grid(specs: Sequence[ScenarioSpec],
     in_flight: List[tuple] = []
     done = [False] * len(tiles)
     recover_attempts = 0
+    redispatch_pending = False
     degraded_from: Optional[int] = None
     prep_pool = ThreadPoolExecutor(max_workers=1)
     compile_pool = ThreadPoolExecutor(max_workers=1)
@@ -1195,14 +1210,26 @@ def run_grid(specs: Sequence[ScenarioSpec],
                         _h2d_hook(tile_payload_bytes(sig))
                         return _place_tile(args, sig)
 
-                    placed = _retried(place_dispatch,
-                                      f"tile {kt} placement")
+                    with _tm.span("tile/h2d", tile=kt):
+                        placed = _retried(place_dispatch,
+                                          f"tile {kt} placement")
                     if st is not None:
                         st.on_dispatch(f"tile {kt}")
-                    out = _tile_fn(tile.sig)(*bank_dev, *placed) \
-                        if bank is not None \
-                        else _tile_fn(tile.sig)(*placed, t_l1, t_wt)
+                    # first dispatch after a recovery is the timeline's
+                    # re-dispatch leg; name its span accordingly
+                    dispatch_span = ("recover/redispatch"
+                                     if redispatch_pending
+                                     else "tile/dispatch")
+                    redispatch_pending = False
+                    with _tm.span(dispatch_span, tile=kt):
+                        out = _tile_fn(tile.sig)(*bank_dev, *placed) \
+                            if bank is not None \
+                            else _tile_fn(tile.sig)(*placed, t_l1, t_wt)
                     in_flight.append((kt, tile, groups, out))
+                    _tm.gauge("engine/in_flight_tiles",
+                              len(in_flight))
+                    _tm.gauge("engine/prefetch_queue_depth",
+                              len(pending) - pi - 1)
                     live_bytes += tile_payload_bytes(tile.sig)
                     hwm_bytes = max(hwm_bytes, live_bytes)
                     # backpressure: dispatch runs ahead of the devices,
@@ -1216,21 +1243,28 @@ def run_grid(specs: Sequence[ScenarioSpec],
                 while in_flight:
                     finish(in_flight.pop(0))
             except (ShardLossError, IntegrityError) as e:
-                # cancel in-flight tiles: their outputs may involve the
-                # lost/corrupt placement, and their tiles re-dispatch
-                # (done[] is only set by finish)
-                for (_kt, t_, _g, _o) in in_flight:
-                    live_bytes -= tile_payload_bytes(t_.sig)
-                in_flight.clear()
-                recover_attempts += 1
-                if st is None or recover_attempts > MAX_RECOVERIES:
-                    raise
-                if (isinstance(e, ShardLossError) and n_shards > 1
-                        and plane == "bank"
-                        and st.cfg.recovery == "degraded"):
-                    degraded_from = e.shard
-                    break
-                recover(e)
+                with _tm.span("recover", error=type(e).__name__):
+                    with _tm.span("recover/detect",
+                                  error=type(e).__name__):
+                        _tm.count("chaos/faults_detected")
+                    # cancel in-flight tiles: their outputs may involve
+                    # the lost/corrupt placement, and their tiles
+                    # re-dispatch (done[] is only set by finish)
+                    with _tm.span("recover/rollback",
+                                  tiles=len(in_flight)):
+                        for (_kt, t_, _g, _o) in in_flight:
+                            live_bytes -= tile_payload_bytes(t_.sig)
+                        in_flight.clear()
+                    recover_attempts += 1
+                    if st is None or recover_attempts > MAX_RECOVERIES:
+                        raise
+                    if (isinstance(e, ShardLossError) and n_shards > 1
+                            and plane == "bank"
+                            and st.cfg.recovery == "degraded"):
+                        degraded_from = e.shard
+                        break
+                    recover(e)
+                redispatch_pending = True
         if degraded_from is None:
             try:
                 warm.result()  # surface compile-thread exceptions
@@ -1281,6 +1315,16 @@ def run_grid(specs: Sequence[ScenarioSpec],
         "degraded": degraded_from is not None,
         "chaos": st.report() if st is not None else None,
     })
+    rec = _tm.active()
+    if rec is not None:
+        # one merged per-run summary, shared (by reference) between
+        # bank_stats() and every cell's meta -- the summarized dict the
+        # flight recorder exports alongside the Chrome trace
+        summ = rec.summary()
+        _BANK_STATS["telemetry"] = summ
+        for r in results:
+            if r is not None and r.meta is not None:
+                r.meta.setdefault("telemetry", summ)
     return results
 
 

@@ -30,6 +30,8 @@ import random
 import time
 from typing import Callable, Optional, Tuple, Type, TypeVar
 
+from repro.core import telemetry as _tm
+
 T = TypeVar("T")
 
 
@@ -105,7 +107,10 @@ def retry_call(fn: Callable[[], T], *,
             try:
                 delay = next(delays)
             except StopIteration:
+                _tm.count("retry/exhausted")
                 raise RetryExhausted(describe, attempt, e) from e
+            _tm.count("retry/attempts")
+            _tm.observe("retry/backoff_ms", delay * 1e3)
             if on_retry is not None:
                 on_retry(attempt, e, delay)
             if delay > 0:

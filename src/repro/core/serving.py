@@ -80,6 +80,7 @@ bank handle or lane cache -- answers stay bit-identical throughout
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 import threading
 import time
@@ -94,6 +95,7 @@ import numpy as np
 from repro.configs.recxl_paper import ClusterConfig, PAPER_CLUSTER
 from repro.core import chaos as _chaos
 from repro.core import engine as _engine
+from repro.core import telemetry as _tm
 from repro.core.chaos import IntegrityError, ShardLossError, ThreadDeathError
 from repro.core.recovery import RecoveryEstimate
 from repro.core.scenarios import downtime_query, sweep_grid
@@ -274,6 +276,7 @@ class ScenarioServer:
             "submit_timeouts": 0, "worker_restarts": 0,
             "watchdog_flush_failures": 0,
         }
+        self._worker_spawned = False
         self._closed = False
 
     # -- context manager ---------------------------------------------------
@@ -307,9 +310,9 @@ class ScenarioServer:
         with self._cond:
             leftovers = list(self._queue)
             self._queue.clear()
-        for _, fut, _ in leftovers:
-            if not fut.done():
-                fut.set_exception(RuntimeError(
+        for e in leftovers:
+            if not e[1].done():
+                e[1].set_exception(RuntimeError(
                     "ScenarioServer closed with the query still pending "
                     "(daemon thread dead or never scheduled)"))
 
@@ -597,29 +600,39 @@ class ScenarioServer:
         t0 = time.monotonic()
         lost = err.shard if isinstance(err, ShardLossError) else None
         source = "replace"
-        if lost is not None:
-            # the serve mesh never shrinks: validate the spare takeover
-            # through the elastic-scaling policy shared with run_grid
-            from repro.distributed.elastic import cells_spare_replacement
-            cells_spare_replacement(self.n_shards, lost)
-            if self.k_replicas >= 2 and self._dev is not None:
-                rebuilt = _chaos.replica_rebuild(
-                    self._dev, lost, n_shards=self.n_shards,
-                    k_replicas=self.k_replicas, local_cap=self._cap[1],
-                    wv_rows=self._bank.wv_rows)
-                source = "replica"
-            elif self._bank.journal_enabled:
-                rebuilt = _chaos.journal_rebuild(self._bank, lost,
-                                                 self.n_shards)
-                source = "journal"
-            else:
-                rebuilt = None
-                source = "host"
-            if rebuilt is not None:
-                _chaos.verify_rebuild(self._bank, rebuilt, lost,
-                                      self.n_shards)
-        self._dev = None
-        self._dev_rows = (0, 0)
+        with _tm.span("recover", error=type(err).__name__):
+            with _tm.span("recover/detect", error=type(err).__name__):
+                _tm.count("chaos/faults_detected")
+            if lost is not None:
+                # the serve mesh never shrinks: validate the spare
+                # takeover through the elastic-scaling policy shared
+                # with run_grid
+                from repro.distributed.elastic import \
+                    cells_spare_replacement
+                cells_spare_replacement(self.n_shards, lost)
+                with _tm.span("recover/rebuild", shard=lost):
+                    if self.k_replicas >= 2 and self._dev is not None:
+                        rebuilt = _chaos.replica_rebuild(
+                            self._dev, lost, n_shards=self.n_shards,
+                            k_replicas=self.k_replicas,
+                            local_cap=self._cap[1],
+                            wv_rows=self._bank.wv_rows)
+                        source = "replica"
+                    elif self._bank.journal_enabled:
+                        rebuilt = _chaos.journal_rebuild(
+                            self._bank, lost, self.n_shards)
+                        source = "journal"
+                    else:
+                        rebuilt = None
+                        source = "host"
+                    if rebuilt is not None:
+                        _chaos.verify_rebuild(self._bank, rebuilt, lost,
+                                              self.n_shards)
+            with _tm.span("recover/replace", source=source):
+                # drop only the placement; the next _sync_device
+                # re-places identical shapes (the re-place leg)
+                self._dev = None
+                self._dev_rows = (0, 0)
         ms = (time.monotonic() - t0) * 1e3
         self._stats["recoveries"] += 1
         self._stats["recovery_ms"] += ms
@@ -645,9 +658,10 @@ class ScenarioServer:
         specs = list(specs)
         if not specs:
             return []
+        t_flush0 = time.perf_counter()
         for s in specs:
             s.validate(self.cluster)
-        with self._lock:
+        with self._lock, _tm.span("serve/flush", queries=len(specs)):
             self._ensure_bank(specs)
             compiled0 = _engine.trace_count()
             attempts = 0
@@ -658,8 +672,9 @@ class ScenarioServer:
                 # before the fault are cache hits on the retry, so no
                 # lane is ever served from a suspect placement twice
                 try:
-                    h2d = _engine._retried(self._sync_device,
-                                           "serve bank sync")
+                    with _tm.span("serve/bank_sync"):
+                        h2d = _engine._retried(self._sync_device,
+                                               "serve bank sync")
                     keys = [self._lane_key(s) for s in specs]
                     miss: Dict[tuple, ScenarioSpec] = {}
                     for s, k in zip(specs, keys):
@@ -668,7 +683,8 @@ class ScenarioServer:
                         else:
                             miss.setdefault(k, s)
                     if miss:
-                        h2d += self._scan_lanes(miss)
+                        with _tm.span("serve/scan", lanes=len(miss)):
+                            h2d += self._scan_lanes(miss)
                     break
                 except (ShardLossError, IntegrityError) as e:
                     attempts += 1
@@ -706,6 +722,21 @@ class ScenarioServer:
                 results.append(_finish_result(cell, exec_ns, at_head,
                                               sb_full, meta=meta))
             self._evict()       # after results: this flush's lanes live
+            rec = _tm.active()
+            if rec is not None:
+                # each query's serve-side latency is its flush's wall
+                # time (sync callers see exactly this); hits and misses
+                # feed separate histograms so the lane-cache fast path
+                # stays attributable
+                dt_ms = (time.perf_counter() - t_flush0) * 1e3
+                rec.count("serve/lane_hits",
+                          sum(k not in miss for k in keys))
+                rec.count("serve/lane_misses",
+                          sum(k in miss for k in keys))
+                for k in keys:
+                    rec.observe("serve/query_ms", dt_ms)
+                    rec.observe("serve/query_miss_ms" if k in miss
+                                else "serve/query_hit_ms", dt_ms)
             return results
 
     def query_grid(self, **axes) -> List[SimResult]:
@@ -790,14 +821,22 @@ class ScenarioServer:
         with self._cond:
             if self._closed:
                 raise RuntimeError("ScenarioServer is closed")
-            self._queue.append((spec, fut, deadline))
+            # 4th slot: enqueue time, so the daemon can attribute queue
+            # wait vs batching-window wait per entry (telemetry)
+            self._queue.append((spec, fut, deadline, time.monotonic()))
             if self._worker is None or not self._worker.is_alive():
                 self._start_worker_locked()
             self._cond.notify_all()
         return fut
 
     def _start_worker_locked(self) -> None:
-        """Spawn the daemon (and its watchdog) -- caller holds _cond."""
+        """Spawn the daemon (and its watchdog) -- caller holds _cond.
+        Any spawn after the first replaces a dead worker, so it counts
+        as a ``worker_restarts`` no matter which path noticed the body
+        (the watchdog sweep or a racing ``submit``)."""
+        if self._worker_spawned:
+            self._wd_stats["worker_restarts"] += 1
+        self._worker_spawned = True
         self._worker = threading.Thread(
             target=self._serve_loop, name="scenario-server", daemon=True)
         self._worker.start()
@@ -824,7 +863,8 @@ class ScenarioServer:
                     # batching window: linger for stragglers so
                     # concurrent submitters share one flush instead of
                     # paying one each
-                    deadline = time.monotonic() + self.batch_window_ms / 1e3
+                    t_win0 = time.monotonic()
+                    deadline = t_win0 + self.batch_window_ms / 1e3
                     while (not self._closed
                            and len(self._queue) < self.batch_cells):
                         left = deadline - time.monotonic()
@@ -834,26 +874,37 @@ class ScenarioServer:
                     # expired/cancelled futures never reach a flush
                     batch = [e for e in self._queue if not e[1].done()]
                     self._queue.clear()
-                    self._flush_started = time.monotonic()
+                    now = time.monotonic()
+                    self._flush_started = now
                     self._flush_batch = batch
+                    rec = _tm.active()
+                    if rec is not None and batch:
+                        # batching-window linger, plus each entry's time
+                        # spent queued before this flush picked it up
+                        rec.observe("serve/window_wait_ms",
+                                    (now - t_win0) * 1e3)
+                        for e in batch:
+                            if len(e) > 3:
+                                rec.observe("serve/queue_wait_ms",
+                                            (now - e[3]) * 1e3)
                 if not batch:
                     continue
                 with self._lock:
                     self._stats["batches"] += 1
                 try:
-                    results = self.query_batch([s for s, _, _ in batch])
+                    results = self.query_batch([e[0] for e in batch])
                 except BaseException as e:   # surface to every waiter
-                    for _, fut, _ in batch:
-                        if not fut.done():
-                            fut.set_exception(e)
+                    for entry in batch:
+                        if not entry[1].done():
+                            entry[1].set_exception(e)
                     continue
                 finally:
                     with self._cond:
                         self._flush_started = None
                         self._flush_batch = []
-                for (_, fut, _), res in zip(batch, results):
-                    if not fut.done():
-                        fut.set_result(res)
+                for entry, res in zip(batch, results):
+                    if not entry[1].done():
+                        entry[1].set_result(res)
         except ThreadDeathError:
             pass          # injected death: the watchdog/submit respawns
         finally:
@@ -903,7 +954,6 @@ class ScenarioServer:
                             f" ms, batch of {len(self._flush_batch)})"))
                 if self._queue and (self._worker is None
                                     or not self._worker.is_alive()):
-                    self._wd_stats["worker_restarts"] += 1
                     self._start_worker_locked()
                 if (self.watchdog_ms is not None
                         and self._flush_started is not None
@@ -913,9 +963,9 @@ class ScenarioServer:
                     self._flush_started = None
                     self._flush_batch = []
                     self._wd_stats["watchdog_flush_failures"] += 1
-                    for _, fut, _ in stuck:
-                        if not fut.done():
-                            fut.set_exception(TimeoutError(
+                    for e in stuck:
+                        if not e[1].done():
+                            e[1].set_exception(TimeoutError(
                                 f"serve flush exceeded watchdog_ms="
                                 f"{self.watchdog_ms} (daemon wedged; "
                                 f"{len(stuck)} queries failed)"))
@@ -933,9 +983,18 @@ class ScenarioServer:
         ``bank_dev_bytes`` / ``bank_dev_bytes_per_shard`` summed from
         the live capacity buffers), the LRU counters
         (``lane_evictions`` / ``bank_compactions``), and ``pending``
-        queue depth."""
+        queue depth.
+
+        The returned dict is a DEEP-COPIED snapshot taken under the
+        server lock: callers can hold it across later queries (or
+        mutate it) without ever observing -- or perturbing -- the live
+        counters mid-update (tests/test_serving.py races exactly this).
+        When telemetry is on (``repro.core.telemetry``), a
+        ``"telemetry"`` sub-dict carries the flight-recorder summary
+        (per-stage span histograms incl. ``serve/query_ms`` p50/p99,
+        queue/window waits, protocol counters)."""
         with self._lock:
-            st: Dict[str, object] = dict(self._stats)
+            st: Dict[str, object] = copy.deepcopy(self._stats)
             q = self._stats["queries"]
             st["hit_ratio"] = self._stats["lane_hits"] / q if q else 0.0
             st["lanes_cached"] = len(self._lanes)
@@ -953,7 +1012,10 @@ class ScenarioServer:
             st["bank_dev_bytes_per_shard"] = per
         with self._cond:
             st["pending"] = len(self._queue)
-            st.update(self._wd_stats)
+            st.update(copy.deepcopy(self._wd_stats))
+        rec = _tm.active()
+        if rec is not None:
+            st["telemetry"] = rec.summary()
         return st
 
     def reset_stats(self) -> None:

@@ -49,6 +49,10 @@ def main() -> None:
     ap.add_argument("--lose-shard", type=int, default=None,
                     help="inject a shard loss mid-stream (chaos demo: the "
                          "server must recover bit-identical, 0 recompiles)")
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="enable the flight recorder and export the run "
+                         "as Chrome trace-event JSONL to PATH (load at "
+                         "https://ui.perfetto.dev; docs/observability.md)")
     args = ap.parse_args()
 
     if "XLA_FLAGS" not in os.environ:
@@ -60,9 +64,13 @@ def main() -> None:
     import numpy as np
 
     from repro.core import chaos
+    from repro.core import telemetry
     from repro.core.engine import simulate_grid, trace_count
     from repro.core.scenarios import grid_delta, sweep_grid
     from repro.core.serving import ScenarioServer
+
+    if args.trace_out:
+        telemetry.enable()
 
     warm_grid = sweep_grid(seeds=(0, 1), sb_sizes=(None, 48),
                            link_bw_gbps=(None, 40.0))
@@ -97,6 +105,8 @@ def main() -> None:
         if chaos_state is not None:
             chaos_state.arm_after(2)
 
+        if args.trace_out:
+            telemetry.reset()   # trace the live stream, not the warm flush
         srv.reset_stats()
         tc0 = trace_count()
         lat = []
@@ -116,6 +126,11 @@ def main() -> None:
               f"steady-state compiles {trace_count() - tc0}")
         print(f"marginal h2d {st['h2d_bytes'] / len(stream):.0f} B/query "
               f"(cold full-bank upload {st['bank_bytes']} B)")
+
+        # async path: a submit() burst exercises the daemon thread (and,
+        # traced, the queue-wait / batching-window histograms)
+        for f in [srv.submit(s) for s in stream[:16]]:
+            f.result()
 
         if chaos_state is not None:
             rep = chaos_state.report()
@@ -140,6 +155,15 @@ def main() -> None:
             for a, b in zip(served, oracle):
                 assert a == b, (a.meta, a, b)
             print(f"oracle check: {len(stream)} answers bit-identical")
+
+        if args.trace_out:
+            summ = telemetry.summary()
+            n = telemetry.export_chrome(args.trace_out)
+            q = summ["dists"].get("serve/query_ms", {})
+            print(f"telemetry: {n} trace events -> {args.trace_out} "
+                  f"({summ['threads']} threads, "
+                  f"serve/query_ms p50 {q.get('p50', 0.0):.3f} ms "
+                  f"p99 {q.get('p99', 0.0):.3f} ms)")
 
 
 if __name__ == "__main__":

@@ -172,7 +172,8 @@ def test_auto_chunk_heuristic_and_meta():
     assert r.meta["engine"] == "perstep"
     assert r.meta["data_plane"] == "stacked"
     assert simulate("ycsb", "proactive", n_stores=N).meta == {
-        "engine": "serial"}
+        "engine": "serial", "data_plane": "stacked",
+        "bank_partition": None}
     # the narrow-SB cell bounds the auto chunk of the whole batch
     (r, _) = simulate_batch([ScenarioSpec("ycsb", "proactive", sb_size=8),
                              ScenarioSpec("ycsb", "wb")], n_stores=N)

@@ -1,0 +1,95 @@
+"""``SimResult.meta`` provenance schema, pinned across every tier.
+
+The observability contract (docs/observability.md): any result, from
+any engine tier or serving path, must say where it came from --
+``meta["engine"]``, ``meta["data_plane"]`` and ``meta["bank_partition"]``
+are always present, with the tier's documented values.  PRs 1-9 grew
+the tiers one at a time and the earlier ones predate the bank plane;
+this test is the single place that keeps the schema from drifting as
+new tiers land.
+"""
+
+import pytest
+
+from repro.core import engine as E
+from repro.core.scenarios import sweep_grid
+from repro.core.simulator import simulate, simulate_batch
+
+N = 500
+GRID = sweep_grid(workloads=("ycsb",), configs=("wb", "proactive"),
+                  sb_sizes=(None, 48))
+
+
+def _serial():
+    return [simulate("ycsb", "wb", n_stores=N).meta]
+
+
+def _blocked_bank():
+    return [r.meta for r in simulate_batch(GRID, n_stores=N)]
+
+
+def _blocked_stacked():
+    return [r.meta
+            for r in simulate_batch(GRID, n_stores=N,
+                                    data_plane="stacked")]
+
+
+def _perstep():
+    return [r.meta for r in simulate_batch(GRID, n_stores=N,
+                                           chunk_size=0)]
+
+
+def _streamed():
+    return [r.meta for r in E.run_grid(GRID, n_stores=N, n_shards=1)]
+
+
+def _sharded():
+    # n_shards=1 would report engine="streamed", so this tier needs a
+    # real second device (the CI tier-1 matrix also runs host_devices=1)
+    import jax
+    if len(jax.devices()) < 2:
+        pytest.skip("sharded tier needs >= 2 devices")
+    return [r.meta for r in E.run_grid(GRID, n_stores=N, n_shards=2)]
+
+
+def _serving():
+    from repro.core.serving import ScenarioServer
+    with ScenarioServer(n_stores=N, batch_cells=8) as srv:
+        return [r.meta for r in srv.query_batch(GRID)]
+
+
+TIERS = {
+    "serial": (_serial, "serial", "stacked", None),
+    "blocked-bank": (_blocked_bank, "blocked", "bank", None),
+    "blocked-stacked": (_blocked_stacked, "blocked", "stacked", None),
+    "perstep": (_perstep, "perstep", "stacked", None),
+    "streamed": (_streamed, "streamed", "bank", "sub"),
+    "sharded": (_sharded, "sharded", "bank", "sub"),
+    "serving": (_serving, "serving", "bank", "sub"),
+}
+
+
+@pytest.mark.parametrize("tier", sorted(TIERS))
+def test_meta_provenance_schema(tier):
+    run, engine, plane, partition = TIERS[tier]
+    metas = run()
+    assert metas, tier
+    for m in metas:
+        assert m is not None, tier
+        # the three provenance keys are unconditionally present
+        for key in ("engine", "data_plane", "bank_partition"):
+            assert key in m, (tier, key, sorted(m))
+        assert m["engine"] == engine, (tier, m)
+        assert m["data_plane"] == plane, (tier, m)
+        assert m["bank_partition"] == partition, (tier, m)
+
+
+@pytest.mark.parametrize("tier", sorted(TIERS))
+def test_meta_is_per_result_not_aliased(tier):
+    """Annotating one result's meta must not leak into its batch
+    siblings (frozen dataclass, mutable dict -- aliasing would)."""
+    metas = TIERS[tier][0]()
+    if len(metas) < 2:
+        pytest.skip("single-result tier")
+    metas[0]["__scratch__"] = 1
+    assert "__scratch__" not in metas[1]

@@ -494,3 +494,50 @@ def test_close_drains_or_fails_pending_deterministically():
         pass                                # or failed deterministically
     with pytest.raises(RuntimeError):
         srv.submit(WARM_GRID[0])
+
+
+def test_stats_snapshot_is_deep_copied_and_consistent():
+    """stats() is a deep-copied snapshot taken under the server lock
+    (the PR-10 race regression): a reader hammering it while another
+    thread serves never observes a half-updated counter set -- in every
+    snapshot lane_hits + lane_misses == queries exactly -- and a
+    captured snapshot is frozen, i.e. later queries (and caller-side
+    mutation) never alter it or the live counters."""
+    with ScenarioServer(n_stores=N, batch_cells=8) as srv:
+        srv.warm(WARM_GRID)
+        srv.reset_stats()
+        snaps = []
+        errors = []
+        stop = threading.Event()
+
+        def reader():
+            while not stop.is_set():
+                st_ = srv.stats()
+                if st_["lane_hits"] + st_["lane_misses"] != st_["queries"]:
+                    errors.append(st_)
+                snaps.append(st_)
+
+        rd = threading.Thread(target=reader)
+        rd.start()
+        rng = np.random.default_rng(7)
+        for _ in range(40):
+            picks = [WARM_GRID[rng.integers(len(WARM_GRID))]
+                     for _ in range(3)]
+            srv.query_batch(picks)
+        stop.set()
+        rd.join(timeout=60)
+        assert not rd.is_alive(), "stats() reader deadlocked"
+        assert not errors, f"torn snapshot(s): {errors[:2]}"
+        assert snaps and snaps[-1]["queries"] <= 120
+
+        # frozen: later traffic + caller mutation leave the capture and
+        # the live counters untouched
+        frozen = srv.stats()
+        before = frozen["queries"]
+        srv.query_batch([WARM_GRID[0]])
+        assert frozen["queries"] == before
+        frozen["lane_hits"] = -1
+        frozen["bank_capacity"] = None
+        live = srv.stats()
+        assert live["queries"] == before + 1
+        assert live["lane_hits"] >= 0 and live["bank_capacity"] is not None

@@ -1,0 +1,280 @@
+"""Flight-recorder contract tests (``repro.core.telemetry``,
+docs/observability.md).
+
+Two families:
+
+* **Recorder semantics** -- nested spans, counters, gauges,
+  distribution percentiles, ring-buffer wrap (aggregates survive event
+  drops), the disabled-path noop singleton, and Chrome trace-event
+  export round-tripping through :func:`validate_chrome_trace`.
+
+* **Zero-churn pins** -- recording must never change a number: traced
+  ``run_grid`` results ``==`` untraced, the host memo keys
+  (``_plane_keys`` / ``_specs_key``) and the resident bank bytes are
+  byte-identical, and a traced re-run of a warm grid compiles 0 extra
+  programs.  Plus the span taxonomy the docs promise: prefetch /
+  compile-warm / daemon threads each carry balanced B/E spans, and a
+  chaos-injected shard loss emits the
+  detection -> rollback -> rebuild -> re-place -> re-dispatch timeline
+  in exactly that order.
+"""
+
+import json
+
+import pytest
+
+import jax
+
+from repro.core import chaos
+from repro.core import engine as E
+from repro.core import telemetry as tm
+from repro.core.scenarios import chaos_grid, sweep_grid
+from repro.core.serving import ScenarioServer
+from repro.core.simulator import (
+    PAPER_CLUSTER,
+    _plane_keys,
+    _specs_key,
+    clear_sim_caches,
+    get_trace_bank,
+)
+
+N = 600
+GRID = sweep_grid(workloads=("ycsb", "canneal"),
+                  configs=("wb", "proactive"),
+                  sb_sizes=(None, 48), n_replicas=(None, 3))
+
+
+@pytest.fixture(autouse=True)
+def _no_recorder_leaks():
+    """Every test starts and ends with the recorder disabled."""
+    tm.disable()
+    yield
+    tm.disable()
+
+
+# ---------------------------------------------------------------- recorder
+
+def test_nested_spans_counters_gauges_and_summary():
+    with tm.recording() as rec:
+        with tm.span("outer", tag=1):
+            with tm.span("outer/inner"):
+                tm.count("hits")
+                tm.count("hits", 4)
+            tm.gauge("depth", 3)
+            tm.gauge("depth", 7)          # latest wins
+        for v in (1.0, 2.0, 3.0, 4.0):
+            tm.observe("lat_ms", v)
+        summ = rec.summary()
+    assert summ["counters"]["hits"] == 5
+    assert summ["gauges"]["depth"] == 7
+    assert summ["spans"]["outer"]["count"] == 1
+    assert summ["spans"]["outer/inner"]["count"] == 1
+    # the inner span is contained in the outer one
+    assert summ["spans"]["outer"]["total"] >= \
+        summ["spans"]["outer/inner"]["total"]
+    d = summ["dists"]["lat_ms"]
+    assert d["count"] == 4 and d["max"] == 4.0
+    assert summ["threads"] == 1 and summ["events_dropped"] == 0
+
+
+def test_distribution_percentiles_nearest_rank():
+    with tm.recording() as rec:
+        for v in range(1, 101):
+            tm.observe("x", float(v))
+        d = rec.summary()["dists"]["x"]
+    assert d["p50"] in (50.0, 51.0)
+    assert d["p99"] in (99.0, 100.0)
+    assert d["max"] == 100.0 and d["count"] == 100
+
+
+def test_ring_wrap_drops_events_but_keeps_aggregates():
+    with tm.recording(ring_events=64) as rec:
+        for i in range(500):
+            with tm.span("tick"):
+                tm.count("n")
+        summ = rec.summary()
+    assert summ["counters"]["n"] == 500
+    assert summ["spans"]["tick"]["count"] == 500
+    assert summ["events_dropped"] > 0
+    assert summ["events"] <= 64
+
+
+def test_disabled_path_is_a_shared_noop():
+    assert not tm.enabled() and tm.active() is None
+    s1, s2 = tm.span("a", big=1), tm.span("b")
+    assert s1 is s2 is tm._NOOP_SPAN          # no per-call allocation
+    with s1:
+        tm.count("never")
+        tm.gauge("never", 1)
+        tm.observe("never", 1.0)
+    assert tm.summary() == {}
+
+
+def test_recording_scope_restores_previous_recorder():
+    tm.enable()
+    outer = tm.active()
+    with tm.recording() as rec:
+        assert tm.active() is rec and rec is not outer
+    assert tm.active() is outer
+    tm.disable()
+    assert tm.active() is None
+
+
+def test_export_chrome_roundtrips_validation(tmp_path):
+    import threading
+
+    def other():
+        with tm.span("worker/job"):
+            tm.count("jobs")
+
+    path = tmp_path / "trace.jsonl"
+    with tm.recording() as rec:
+        with tm.span("main/outer"):
+            t = threading.Thread(target=other)
+            t.start()
+            t.join()
+        tm.gauge("g", 2)
+        tm.observe("o", 1.5)
+        n = rec.export_chrome(str(path))
+    stats = tm.validate_chrome_trace(str(path))
+    assert stats["events"] == n > 0
+    assert stats["threads"] >= 2           # main + worker
+    assert stats["spans"] >= 2
+    lines = path.read_text().splitlines()
+    assert all(json.loads(ln) for ln in lines)
+    names = {json.loads(ln).get("name") for ln in lines}
+    assert {"main/outer", "worker/job"} <= names
+
+
+def test_validate_rejects_unbalanced_trace(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(
+        '{"ph":"M","pid":1,"tid":1,"name":"thread_name",'
+        '"args":{"name":"t"}}\n'
+        '{"ph":"B","pid":1,"tid":1,"ts":0,"name":"open"}\n')
+    with pytest.raises(ValueError):
+        tm.validate_chrome_trace(str(bad))
+
+
+# ------------------------------------------------------------ zero churn
+
+def test_traced_run_grid_bitident_keys_bank_and_compiles():
+    clear_sim_caches()
+    res_off = E.run_grid(GRID, n_stores=N)
+    keys_off = [_plane_keys(s, PAPER_CLUSTER) for s in GRID]
+    skey_off = _specs_key(tuple(GRID), N, PAPER_CLUSTER)
+    bank_off = get_trace_bank(GRID, N, PAPER_CLUSTER).nbytes
+    tc = E.trace_count()
+
+    with tm.recording() as rec:
+        res_on = E.run_grid(GRID, n_stores=N)
+        summ = rec.summary()
+
+    assert E.trace_count() == tc, "tracing a warm grid must compile 0"
+    assert all(a == b for a, b in zip(res_off, res_on))
+    assert [_plane_keys(s, PAPER_CLUSTER) for s in GRID] == keys_off
+    assert _specs_key(tuple(GRID), N, PAPER_CLUSTER) == skey_off
+    assert get_trace_bank(GRID, N, PAPER_CLUSTER).nbytes == bank_off
+    # and the traced run actually observed the pipeline
+    assert summ["spans"]["tile/dispatch"]["count"] >= 1
+    assert summ["counters"]["proto/cells"] == len(GRID)
+    assert res_on[0].meta["telemetry"] is not None
+    # tracing may annotate meta, but == ignores it by contract
+    assert "telemetry" not in (res_off[0].meta or {})
+
+
+def test_pipeline_spans_nest_and_balance_per_thread(tmp_path):
+    clear_sim_caches()
+    path = tmp_path / "grid.jsonl"
+    with tm.recording() as rec:
+        E.run_grid(GRID, n_stores=N)
+        rec.export_chrome(str(path))
+        summ = rec.summary()
+    for name in ("tile/prep", "tile/h2d", "tile/dispatch", "tile/drain",
+                 "bank/place", "compile/warm"):
+        assert summ["spans"][name]["count"] >= 1, name
+    assert summ["gauges"]["engine/in_flight_tiles"] >= 0
+    assert "engine/prefetch_queue_depth" in summ["gauges"]
+    # prefetch + warm threads record off the main thread
+    assert summ["threads"] >= 2
+    stats = tm.validate_chrome_trace(str(path))   # raises on bad nesting
+    assert stats["threads"] == summ["threads"]
+    # per-thread B/E balance, explicitly
+    depth = {}
+    for ln in path.read_text().splitlines():
+        ev = json.loads(ln)
+        if ev["ph"] == "B":
+            depth[ev["tid"]] = depth.get(ev["tid"], 0) + 1
+        elif ev["ph"] == "E":
+            depth[ev["tid"]] = depth[ev["tid"]] - 1
+            assert depth[ev["tid"]] >= 0
+    assert all(v == 0 for v in depth.values())
+
+
+def test_daemon_spans_and_latency_histograms():
+    clear_sim_caches()
+    with ScenarioServer(n_stores=N, batch_cells=8,
+                        batch_window_ms=1.0) as srv:
+        srv.warm(GRID[:8])
+        with tm.recording() as rec:
+            srv.query_batch(GRID)                     # hits + misses
+            for f in [srv.submit(s) for s in GRID[:4]]:
+                f.result(timeout=120)
+            st = srv.stats()
+            summ = rec.summary()
+    assert summ["spans"]["serve/flush"]["count"] >= 2
+    assert summ["spans"]["serve/bank_sync"]["count"] >= 1
+    q = summ["dists"]["serve/query_ms"]
+    assert q["count"] == len(GRID) + 4
+    assert summ["dists"]["serve/queue_wait_ms"]["count"] >= 4
+    assert summ["dists"]["serve/window_wait_ms"]["count"] >= 1
+    hits = summ["counters"]["serve/lane_hits"]
+    misses = summ["counters"]["serve/lane_misses"]
+    assert hits + misses == len(GRID) + 4
+    assert st["telemetry"]["spans"].keys() == summ["spans"].keys()
+
+
+def test_chaos_recovery_timeline_span_order():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 host devices for a shard loss")
+    # 24 cells / 8-cell tiles => several dispatches, so the fault armed
+    # at dispatch 2 fires mid-grid with work in flight
+    grid = chaos_grid()[:24]
+    clear_sim_caches()
+    base = E.run_grid(grid, n_stores=N, tile_cells=8, n_shards=2)
+    with chaos.inject(chaos.ChaosConfig(lose_shard=1,
+                                        lose_at_dispatch=2)):
+        with tm.recording() as rec:
+            res = E.run_grid(grid, n_stores=N, tile_cells=8, n_shards=2)
+            evs = rec.span_events("recover")
+            summ = rec.summary()
+    assert all(a == b for a, b in zip(res, base))
+    begins = [nm for ph, _t, nm, _tid in evs if ph == "B"]
+    assert begins == ["recover", "recover/detect", "recover/rollback",
+                      "recover/rebuild", "recover/replace",
+                      "recover/redispatch"]
+    # nested spans: children are contained in the parent duration
+    parent = summ["spans"]["recover"]["total"]
+    for child in ("recover/detect", "recover/rollback",
+                  "recover/rebuild", "recover/replace"):
+        assert summ["spans"][child]["total"] <= parent + 1e-6
+    assert summ["counters"]["chaos/faults_detected"] == 1
+    assert summ["counters"]["chaos/shard_loss"] == 1
+    assert summ["spans"]["chaos/replica_rebuild"]["count"] + \
+        summ["spans"].get("chaos/journal_rebuild",
+                          {"count": 0})["count"] >= 1
+
+
+def test_protocol_counters_flow_from_finish_result():
+    clear_sim_caches()
+    with tm.recording() as rec:
+        res = E.run_grid(GRID, n_stores=N)
+        summ = rec.summary()
+    assert summ["counters"]["proto/cells"] == len(GRID)
+    assert summ["counters"]["proto/repl_msgs"] == \
+        sum(r.n_repl_msgs for r in res)
+    assert summ["counters"]["proto/log_unit_bytes"] == \
+        sum(r.max_log_bytes for r in res)
+    for dist in ("proto/dump_bw_gbps", "proto/cxl_mem_bw_gbps",
+                 "proto/dir_queue_occupancy"):
+        assert summ["dists"][dist]["count"] == len(GRID), dist
